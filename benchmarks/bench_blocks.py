@@ -1,0 +1,29 @@
+"""Paper Fig. 14: false sharing — memory-block size vs throughput/latency.
+Blocks < 64 B put several PMwCAS words on one cache line (invalidation
+storms); blocks >= 64 B never do.  High-competitive environment only,
+matching the paper."""
+from __future__ import annotations
+
+from repro.core import ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, SimConfig
+
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg
+
+BLOCKS = (8, 16, 32, 64, 128, 256)
+
+
+def run(quick: bool = False):
+    blocks = (8, 64, 256) if quick else BLOCKS
+    steps = BENCH_STEPS // 4 if quick else BENCH_STEPS
+    for k in (1, 3):
+        for bs in blocks:
+            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
+                cfg = SimConfig(algorithm=alg, n_threads=32, k=k,
+                                n_words=BENCH_WORDS // 4, alpha=1.0,
+                                block_bytes=bs, n_steps=steps,
+                                max_ops=512, seed=19)
+                r = run_cfg(cfg)
+                emit(row(f"fig14_k{k}_block{bs}_{alg}", r))
+
+
+if __name__ == "__main__":
+    run()

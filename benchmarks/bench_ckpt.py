@@ -1,0 +1,52 @@
+"""Checkpoint-commit benchmark: descriptor-WAL (ours, no per-slot markers)
+vs marker-based commit (the dirty-flag analogue).  Reports persists
+(fsyncs) per commit and wall time — the paper's Sec. 4 comparison at file
+granularity."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import Committer, MarkerCommitter, PMemPool
+
+from .common import emit
+
+
+def _run(committer_cls, n_slots: int, payload_kb: int, n_commits: int):
+    root = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        pool = PMemPool(root)
+        c = committer_cls(pool)
+        payload = b"x" * (payload_kb * 1024)
+        names = [f"s{i}" for i in range(n_slots)]
+        t0 = time.time()
+        for ver in range(1, n_commits + 1):
+            targets = [(n, ver - 1, ver) for n in names]
+            ok = c.commit(f"c{ver}", targets, {n: payload for n in names})
+            assert ok
+        dt = time.time() - t0
+        return dt / n_commits, pool.persist_count / n_commits
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(quick: bool = False):
+    n_commits = 5 if quick else 20
+    for n_slots in (4, 16, 64):
+        for payload_kb in (64,):
+            t_wal, p_wal = _run(Committer, n_slots, payload_kb, n_commits)
+            t_mk, p_mk = _run(MarkerCommitter, n_slots, payload_kb,
+                              n_commits)
+            emit(f"ckpt_wal_slots{n_slots},{t_wal*1e6:.1f},"
+                 f"persists_per_commit={p_wal:.1f}")
+            emit(f"ckpt_markers_slots{n_slots},{t_mk*1e6:.1f},"
+                 f"persists_per_commit={p_mk:.1f};"
+                 f"wal_speedup={t_mk/t_wal:.2f}x;"
+                 f"persist_savings={p_mk-p_wal:.0f}")
+
+
+if __name__ == "__main__":
+    run()

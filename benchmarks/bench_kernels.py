@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks (CPU: jnp reference timing + interpret-mode
+correctness scale sweep; the Pallas kernels target TPU — wall numbers here
+are for the jnp paths that the dry-run deploys)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pmwcas_apply import ref as mw_ref
+from repro.models.attention import _sdpa_chunked, _sdpa_ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run(quick: bool = False):
+    # batched MwCAS: jnp reference path scaling
+    for B in ((64,) if quick else (64, 256, 1024)):
+        W, K = 1 << 16, 4
+        rng = np.random.default_rng(0)
+        words = jnp.zeros(W, jnp.uint32)
+        addr = jnp.asarray(np.sort(rng.choice(W, (B, K), replace=False),
+                                   axis=1), jnp.int32)
+        exp = jnp.zeros((B, K), jnp.uint32)
+        des = jnp.ones((B, K), jnp.uint32)
+        f = jax.jit(mw_ref.pmwcas_apply)
+        dt = _time(f, words, addr, exp, des)
+        emit(f"kern_pmwcas_apply_B{B},{dt*1e6:.1f},"
+             f"descriptors_per_sec={B/dt:.0f}")
+
+    # flash (chunked online-softmax) vs materialized reference
+    for S in ((256,) if quick else (256, 1024)):
+        B, KV, G, hd = 1, 2, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, KV, G, S, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+        qp = kp = jnp.arange(S)
+        kw = dict(causal=True, window=0, attn_cap=0.0, scale=0.125)
+        f_ref = jax.jit(lambda q, k, v: _sdpa_ref(q, k, v, qp, kp, **kw))
+        f_chk = jax.jit(lambda q, k, v: _sdpa_chunked(q, k, v, qp, kp,
+                                                      chunk=128, **kw))
+        t_ref = _time(f_ref, q, k, v)
+        t_chk = _time(f_chk, q, k, v)
+        emit(f"kern_attn_ref_S{S},{t_ref*1e6:.1f},impl=materialized")
+        emit(f"kern_attn_flash_S{S},{t_chk*1e6:.1f},impl=online_softmax;"
+             f"ratio={t_ref/t_chk:.2f}")
+
+
+if __name__ == "__main__":
+    run()

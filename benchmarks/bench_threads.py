@@ -1,0 +1,37 @@
+"""Paper Figs. 9 & 10: thread scaling of persistent 3-word and 1-word CAS
+in low- (alpha=0) and high- (alpha=1) competitive environments."""
+from __future__ import annotations
+
+from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
+                        SimConfig)
+
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg
+
+THREADS = (1, 4, 8, 16, 32, 56)
+
+
+def run(quick: bool = False):
+    threads = (1, 8, 32) if quick else THREADS
+    steps = BENCH_STEPS // 4 if quick else BENCH_STEPS
+    # Fig. 9: persistent three-word CAS
+    for alpha in (0.0, 1.0):
+        for t in threads:
+            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
+                cfg = SimConfig(algorithm=alg, n_threads=t, k=3,
+                                n_words=BENCH_WORDS, alpha=alpha,
+                                n_steps=steps, max_ops=512, seed=11)
+                r = run_cfg(cfg)
+                emit(row(f"fig9_p3wcas_{alg}_t{t}_a{alpha:g}", r))
+    # Fig. 10: persistent one-word CAS (incl. the PCAS competitor)
+    for alpha in (0.0, 1.0):
+        for t in threads:
+            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL, ALG_PCAS):
+                cfg = SimConfig(algorithm=alg, n_threads=t, k=1,
+                                n_words=BENCH_WORDS, alpha=alpha,
+                                n_steps=steps, max_ops=512, seed=11)
+                r = run_cfg(cfg)
+                emit(row(f"fig10_p1wcas_{alg}_t{t}_a{alpha:g}", r))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Figs. 11 & 12: effect of the number of PMwCAS target words,
+including relative-to-P1wCAS curves against the 1/k ideal."""
+from __future__ import annotations
+
+from repro.core import ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, SimConfig
+
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg, \
+    throughput_mops
+
+WORDS = (1, 2, 3, 4, 5, 6, 8)
+
+
+def run(quick: bool = False):
+    words = (1, 3, 5) if quick else WORDS
+    steps = BENCH_STEPS // 4 if quick else BENCH_STEPS
+    base = {}
+    for alpha in (0.0, 1.0):
+        for k in words:
+            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
+                cfg = SimConfig(algorithm=alg, n_threads=32, k=k,
+                                n_words=BENCH_WORDS, alpha=alpha,
+                                n_steps=steps, max_ops=512, seed=13)
+                r = run_cfg(cfg)
+                emit(row(f"fig11_k{k}_{alg}_a{alpha:g}", r))
+                if alg == ALG_OURS:
+                    base.setdefault(alpha, {})[k] = throughput_mops(r)
+    # Fig. 12: ours relative to its own k=1 (ideal: 1/k)
+    for alpha, per_k in base.items():
+        if 1 not in per_k:
+            continue
+        for k, tp in sorted(per_k.items()):
+            rel = tp / per_k[1] if per_k[1] else 0.0
+            emit(f"fig12_rel_k{k}_a{alpha:g},{0.0:.3f},"
+                 f"relative={rel:.4f};ideal={1.0 / k:.4f}")
+
+
+if __name__ == "__main__":
+    run()

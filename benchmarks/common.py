@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+The simulator reports exact instruction/invalidation counts; wall-clock is
+modeled at CLOCK_GHZ from the per-event cycle model (core.model.CostModel,
+calibrated once against the paper's Fig. 9/10 ratios — see
+benchmarks/calibration.md).  Every row reports both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, Iterable, List
+
+from repro.core import SimConfig, SimResult, run_sim
+from repro.core.model import (CNT_CAS, CNT_FLUSH, CNT_INVAL)
+
+CLOCK_GHZ = 2.0  # cycles -> seconds conversion for reporting only
+
+# Benchmark-scale defaults: the paper uses 1e6 words / 10s timeouts; we use
+# 2^16 words and a fixed micro-op budget, which preserves every contention
+# ratio (words >> threads) while keeping CPU sim time tractable.
+BENCH_WORDS = 1 << 16
+BENCH_STEPS = 60_000
+
+
+def run_cfg(cfg: SimConfig) -> SimResult:
+    return run_sim(cfg)
+
+
+def throughput_mops(r: SimResult) -> float:
+    """Modeled throughput in million ops/sec at CLOCK_GHZ."""
+    secs = r.wall_cycles / (CLOCK_GHZ * 1e9)
+    return r.ops_completed / secs / 1e6 if secs > 0 else 0.0
+
+
+def latency_us(r: SimResult, q: float = 50.0) -> float:
+    cyc = r.percentile_latency_cycles(q)
+    return cyc / (CLOCK_GHZ * 1e3)
+
+
+def row(name: str, r: SimResult) -> str:
+    us = r.mean_latency_cycles() / (CLOCK_GHZ * 1e3)
+    return (f"{name},{us:.3f},"
+            f"mops={throughput_mops(r):.3f};ops={r.ops_completed};"
+            f"cas_per_op={r.per_op(CNT_CAS):.2f};"
+            f"flush_per_op={r.per_op(CNT_FLUSH):.2f};"
+            f"inval_per_op={r.per_op(CNT_INVAL):.2f};"
+            f"p99_us={latency_us(r, 99):.3f}")
+
+
+def emit(line: str):
+    print(line, flush=True)

@@ -1,0 +1,38 @@
+"""Benchmark aggregator — one section per paper table/figure plus the
+framework-level benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI)")
+    ap.add_argument("--only", default=None,
+                    help="threads|words|skew|blocks|ckpt|kernels")
+    args = ap.parse_args()
+
+    from . import (bench_blocks, bench_ckpt, bench_kernels, bench_skew,
+                   bench_threads, bench_words)
+    sections = {
+        "threads": bench_threads.run,   # paper Figs. 9 & 10
+        "words": bench_words.run,       # paper Figs. 11 & 12
+        "skew": bench_skew.run,         # paper Fig. 13
+        "blocks": bench_blocks.run,     # paper Fig. 14
+        "ckpt": bench_ckpt.run,         # Sec. 4 insight at file granularity
+        "kernels": bench_kernels.run,   # TPU-adaptation micro-benches
+    }
+    names = [args.only] if args.only else list(sections)
+    print("name,us_per_call,derived")
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        sections[name](quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

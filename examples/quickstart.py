@@ -1,0 +1,53 @@
+"""Quickstart: the PMwCAS core in five minutes.
+
+1. Run the four algorithms in the many-core simulator; compare the exact
+   CAS/flush counts (the paper's Sec. 2.1 claims).
+2. Crash the simulation mid-flight and recover from the persisted
+   descriptors (the descriptor-as-WAL insight of Sec. 4).
+3. The paper's Fig. 1 scenario: atomically swap a linked-list payload
+   pointer AND a thread-local region pointer with one 2-word PMwCAS, so a
+   crash can never leak or double-free the payload.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
+                        SimConfig, check_crash_consistency, run_sim,
+                        run_until)
+from repro.core.model import CNT_CAS, CNT_FLUSH
+
+print("=== 1. instruction counts per successful 3-word PMwCAS ===")
+for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
+    cfg = SimConfig(algorithm=alg, n_threads=1, n_words=256, k=3,
+                    n_steps=3000, max_ops=64)
+    r = run_sim(cfg)
+    print(f"  {alg:10s} CAS-class/op = {r.per_op(CNT_CAS):5.2f}   "
+          f"flush/op = {r.per_op(CNT_FLUSH):5.2f}")
+print("  (paper: ours 2k=6 CAS, original 4k=12 CAS; dirty flags cost +k "
+      "flushes)")
+
+print("\n=== 2. crash anywhere, recover from descriptors ===")
+cfg = SimConfig(algorithm=ALG_OURS, n_threads=4, n_words=64, k=3,
+                n_steps=1000, max_ops=32, alpha=1.0)
+for crash_step in (137, 423, 881):
+    r = run_until(cfg, crash_step)
+    rec, hist = check_crash_consistency(cfg, r.state)
+    print(f"  crash@{crash_step}: recovered; committed increments = "
+          f"{int(hist.sum())} — invariant holds")
+
+print("\n=== 3. Fig. 1: atomic payload swap via 2-word PMwCAS ===")
+# word 0: node.payload_ptr, word 1: thread_local.region_ptr
+# swap them atomically: after ANY crash, exactly one of them owns each
+# payload — the recovery procedure can always free the right one.
+from repro.kernels.pmwcas_apply import ref as mw
+
+words = np.asarray([10, 20], np.uint32)     # payload ids
+addr = np.asarray([[0, 1]], np.int32)
+exp = np.asarray([[10, 20]], np.uint32)
+des = np.asarray([[20, 10]], np.uint32)     # swap!
+new, ok = mw.pmwcas_apply(words, addr, exp, des)
+print(f"  before: node->10, local->20 | after: node->{int(new[0])}, "
+      f"local->{int(new[1])} | atomic={bool(ok[0])}")
+assert bool(ok[0]) and int(new[0]) == 20 and int(new[1]) == 10
+print("quickstart OK")

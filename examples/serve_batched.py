@@ -1,0 +1,17 @@
+"""Batched serving with PMwCAS page admission (continuous batching demo).
+
+Requests propose overlapping KV-cache page groups; the batched
+deterministic MwCAS primitive grants each group atomically (no partial
+allocations, deterministic linearization) — the paper's multi-word
+reservation as a TPU data-parallel op.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3-8b", "--smoke",
+                "--requests", "16", "--steps", "8"]
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~110M-parameter LM with atomic descriptor-WAL
+checkpoints.
+
+Default (CI-friendly):   a reduced preset, 60 steps, ~1 minute on CPU.
+The full deliverable:    --preset 100m --steps 300   (a ~110M-param model
+for a few hundred steps; several CPU-hours on this container, minutes on
+one TPU host).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset 100m] [--steps N]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.data.synthetic import DataConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~110M params: 12L x d768 x ffn 3072, 32k vocab
+    "100m": ModelConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab=32_000,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), tie_embeddings=True),
+    # ~6M params for quick runs
+    "tiny": ModelConfig(
+        name="lm-tiny", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=512, vocab=4_096,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), tie_embeddings=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-async", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = build_model(cfg)
+    print(f"model {cfg.name}: {cfg.n_params/1e6:.1f}M params")
+    trainer = Trainer(
+        model,
+        adamw.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                          weight_decay=0.01),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                   global_batch=args.global_batch),
+        TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
+                      ckpt_async=args.ckpt_async, ckpt_dir=args.ckpt_dir),
+    )
+    params, opt, losses = trainer.run()
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} "
+          f"steps (ckpts in {args.ckpt_dir})")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

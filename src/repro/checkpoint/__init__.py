@@ -1,0 +1,7 @@
+from .committer import Committer
+from .manager import AsyncCheckpointManager, CheckpointManager
+from .marker_committer import MarkerCommitter
+from .pmem import PMemPool, SimulatedCrash
+
+__all__ = ["Committer", "MarkerCommitter", "CheckpointManager",
+           "AsyncCheckpointManager", "PMemPool", "SimulatedCrash"]

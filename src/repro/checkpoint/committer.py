@@ -1,0 +1,144 @@
+"""Atomic multi-slot checkpoint commit — the paper's PMwCAS without dirty
+flags, at file granularity (DESIGN.md Sec. 2.3).
+
+Slots are named pointers (slots/<name> -> data version); a commit atomically
+moves a SET of slots from their expected versions to desired versions.  The
+protocol is Fig. 4 minus lines 20-22:
+
+  1. prepare: write + persist the desired data files (out-of-place)
+  2. WAL:     persist descriptor {state: FAILED, targets: [(slot, exp, des)]}
+  3. reserve: flip each slot pointer to reference the descriptor, persist
+  4. commit:  persist descriptor state = SUCCEEDED   <- linearization point
+  5. finalize: write each slot pointer = desired version, persist
+  6. done:    descriptor state = COMPLETED (lazy persist), GC old data
+
+There are NO per-slot commit markers (the dirty-flag analogue; the
+baseline committer in marker_committer.py has them for the benchmark).
+Recovery reads only descriptors + slot pointers and rolls forward/back.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .pmem import PMemPool
+
+ST_COMPLETED, ST_FAILED, ST_SUCCEEDED = "COMPLETED", "FAILED", "SUCCEEDED"
+
+
+def _slot_rel(name: str) -> str:
+    return f"slots/{name}.json"
+
+
+def _desc_rel(cid: str) -> str:
+    return f"wal/{cid}.json"
+
+
+def data_rel(name: str, version: int) -> str:
+    return f"data/{name}.v{version}.bin"
+
+
+class CommitError(Exception):
+    pass
+
+
+class Committer:
+    """The paper's algorithm (no dirty flags)."""
+
+    def __init__(self, pool: PMemPool):
+        self.pool = pool
+
+    # -- reads -----------------------------------------------------------------
+    def slot_version(self, name: str) -> int:
+        """Read procedure (Fig. 5): resolve through in-flight descriptors."""
+        rec = self.pool.read_record(_slot_rel(name))
+        if rec is None:
+            return 0
+        if "desc" in rec:
+            desc = self.pool.read_record(_desc_rel(rec["desc"]))
+            if desc is None:    # descriptor never persisted -> roll back
+                return rec["expected"]
+            t = {s: (e, d) for s, e, d in desc["targets"]}
+            exp, des = t[name]
+            return des if desc["state"] == ST_SUCCEEDED else exp
+        return rec["version"]
+
+    # -- commit ------------------------------------------------------------------
+    def commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
+               payloads: Dict[str, bytes]) -> bool:
+        """Atomically move every (slot, expected, desired); all-or-nothing.
+
+        payloads: desired data per slot (written out-of-place first).
+        """
+        pool = self.pool
+        # 1. prepare desired values
+        for name, _exp, des in targets:
+            pool.write_persist(data_rel(name, des), payloads[name])
+        # 2. the descriptor IS the write-ahead log
+        desc = {"id": cid, "state": ST_FAILED,
+                "targets": [list(t) for t in targets],
+                "ts": time.time()}
+        pool.write_record(_desc_rel(cid), desc)
+        # 3. reserve every slot (embed the descriptor address)
+        success = True
+        reserved: List[str] = []
+        for name, exp, _des in targets:
+            cur = self.pool.read_record(_slot_rel(name))
+            cur_ver = 0 if cur is None else cur.get("version")
+            if cur is not None and "desc" in cur:
+                # another in-flight commit: resolve it first (help/wait)
+                cur_ver = self.slot_version(name)
+            if cur_ver != exp:
+                success = False
+                break
+            pool.write_record(_slot_rel(name),
+                              {"desc": cid, "expected": exp})
+            reserved.append(name)
+        if success:
+            # 4. durability linearization point
+            desc["state"] = ST_SUCCEEDED
+            pool.write_record(_desc_rel(cid), desc)
+        # 5. finalize (commit or roll back the reserved prefix)
+        t = {s: (e, d) for s, e, d in targets}
+        for name in reserved:
+            exp, des = t[name]
+            ver = des if success else exp
+            pool.write_record(_slot_rel(name), {"version": ver})
+        # 6. completed (lazy persist is safe: recovery replays idempotently)
+        desc["state"] = ST_COMPLETED if success else desc["state"]
+        pool.write_record(_desc_rel(cid), desc, persist=False)
+        if success:
+            for name, exp, _des in targets:
+                if exp:
+                    pool.delete(data_rel(name, exp))  # GC old version
+        return success
+
+    # -- recovery -----------------------------------------------------------------
+    def recover(self) -> Dict[str, int]:
+        """Roll every slot forward/back from the persisted descriptors.
+        Idempotent; returns the recovered slot->version map."""
+        pool = self.pool
+        for fn in pool.listdir("wal"):
+            desc = pool.read_record(f"wal/{fn}")
+            if desc is None:
+                pool.delete(f"wal/{fn}")   # torn/unpersisted WAL record
+                continue
+            t = {s: (e, d) for s, e, d in desc["targets"]}
+            for name, (exp, des) in t.items():
+                rec = pool.read_record(_slot_rel(name))
+                if rec is not None and rec.get("desc") == desc["id"]:
+                    ver = des if desc["state"] == ST_SUCCEEDED else exp
+                    pool.write_record(_slot_rel(name), {"version": ver})
+            if desc["state"] != ST_COMPLETED:
+                desc["state"] = ST_COMPLETED if \
+                    desc["state"] == ST_SUCCEEDED else desc["state"]
+        # drop data files no slot references (uncommitted desired versions)
+        live = set()
+        for fn in pool.listdir("slots"):
+            name = fn[:-len(".json")]
+            live.add(data_rel(name, self.slot_version(name)))
+        for fn in pool.listdir("data"):
+            if f"data/{fn}" not in live:
+                pool.delete(f"data/{fn}")
+        return {fn[:-len('.json')]: self.slot_version(fn[:-len('.json')])
+                for fn in pool.listdir("slots")}

@@ -1,0 +1,1021 @@
+"""Micro-op state machines for the four PMwCAS algorithms.
+
+Every simulator step executes exactly ONE memory event (load / CAS / store /
+persist) of ONE thread, so interleavings are modeled at the same atomicity
+granularity the algorithms reason about.  Branches are selected with
+``lax.switch`` on the thread's program counter; the whole step function is
+jit-compatible and driven by ``core.sim.run_sim`` inside a ``lax.scan``.
+
+Fidelity notes (see DESIGN.md Sec. 2.1):
+- CAS always acquires line ownership (x86 ``lock cmpxchg`` issues an RFO even
+  when the comparison fails) -- this is what makes failed-CAS storms expensive
+  and is the contention mechanism behind the paper's Fig. 2.
+- ``persist`` models ``clflushopt`` (their Cascade Lake Xeon): the line is
+  written back AND evicted (ownership cleared).
+- Helper threads in the original algorithm pay their install-persist and
+  dirty-clear as a fused step (one scheduler slot, both events counted);
+  everything else is one event per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .model import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS, C_CAS_OWNED,
+                    C_CAS_REMOTE, C_FLUSH, C_LOAD_HIT, C_LOAD_MISS, C_LOCAL,
+                    C_STORE_OWNED, C_STORE_REMOTE, C_WAIT, CNT_CAS, CNT_CYCLES,
+                    CNT_FAILS, CNT_FLUSH, CNT_HELPS, CNT_INVAL, CNT_LOAD,
+                    CNT_OPS, CNT_STORE, PC, ST_COMPLETED, ST_FAILED,
+                    ST_SUCCEEDED, ST_UNDECIDED, SimConfig, TAG_DESC,
+                    TAG_DESC_DIRTY, TAG_DIRTY, TAG_MASK, TAG_PAYLOAD,
+                    TAG_RDCSS, TAG_SHIFT)
+
+U32 = jnp.uint32
+
+
+def _u32(x):
+    return jnp.asarray(x, U32)
+
+
+# ---------------------------------------------------------------------------
+# Small state utilities
+# ---------------------------------------------------------------------------
+
+def _bump(st, tid, cnt, n=1):
+    st = dict(st)
+    st["counters"] = st["counters"].at[tid, cnt].add(n)
+    return st
+
+
+def _cost(st, tid, cycles):
+    st = dict(st)
+    st["counters"] = st["counters"].at[tid, CNT_CYCLES].add(cycles)
+    return st
+
+
+def _set(st, field, tid, value):
+    st = dict(st)
+    st[field] = st[field].at[tid].set(value)
+    return st
+
+
+def _cur_op_addrs(cfg: SimConfig, st, tid):
+    """Addresses of the thread's current operation (ops wrap around)."""
+    idx = lax.rem(st["op_idx"][tid], jnp.int32(cfg.max_ops))
+    return lax.dynamic_index_in_dim(st["ops"][tid], idx, axis=0, keepdims=False)
+
+
+def _desc_ptr(cfg: SimConfig, st, tid):
+    """The tagged-word payload that identifies this thread's live descriptor."""
+    return _u32(st["d_ver"][tid]) * _u32(cfg.n_threads) + _u32(tid)
+
+
+def _desc_tid(cfg: SimConfig, val):
+    return jnp.asarray(val, jnp.int32) % jnp.int32(cfg.n_threads)
+
+
+# ---------------------------------------------------------------------------
+# Memory events.  Each returns an updated state with counters/cycles applied.
+# ---------------------------------------------------------------------------
+
+def _line_of(cfg: SimConfig, addr):
+    return addr // jnp.int32(cfg.words_per_line)
+
+
+def _ev_load(cfg, st, tid, line):
+    owned = st["line_owner"][line] == tid
+    cm = cfg.cost
+    st = _bump(st, tid, CNT_LOAD)
+    return _cost(st, tid, jnp.where(owned, cm.load_hit, cm.load_miss))
+
+
+def _take_line(cfg, st, tid, line):
+    """Write-side ownership transfer.
+
+    Returns (st, owned_before): cost is priced on whether the line was
+    already exclusively ours; an *invalidation* is only counted when the
+    line is stolen from another thread's cache.
+    """
+    owner = st["line_owner"][line]
+    owned = owner == tid
+    stolen = (owner != tid) & (owner >= 0)
+    st = _bump(st, tid, CNT_INVAL, jnp.where(stolen, 1, 0).astype(st["counters"].dtype))
+    st = dict(st)
+    st["line_owner"] = st["line_owner"].at[line].set(tid)
+    return st, owned
+
+
+def _is_ref(word):
+    """Does this word reference a descriptor (desc / dirty-desc / RDCSS)?"""
+    tag = word & TAG_MASK
+    return (tag == TAG_DESC) | (tag == TAG_DESC_DIRTY) | (tag == TAG_RDCSS)
+
+
+def _ref_update(cfg, st, field, old_word, new_word):
+    """Maintain per-thread outstanding-descriptor-reference counts.
+
+    Wang et al.'s algorithm needs epoch-based GC because helpers hold live
+    references to descriptors; the paper's algorithms do not (a stated
+    contribution).  We track exact reference counts per owner thread in both
+    cache and pmem so that (a) the ORIGINAL simulation can model the reuse
+    barrier GC provides, and (b) tests can ASSERT the paper's algorithms hit
+    zero references at every operation boundary without any barrier.
+    """
+    t_old = jnp.asarray(old_word >> TAG_SHIFT, jnp.int32) % jnp.int32(cfg.n_threads)
+    t_new = jnp.asarray(new_word >> TAG_SHIFT, jnp.int32) % jnp.int32(cfg.n_threads)
+    dec = jnp.where(_is_ref(old_word), -1, 0)
+    inc = jnp.where(_is_ref(new_word), 1, 0)
+    st = dict(st)
+    st[field] = st[field].at[t_old].add(dec)
+    st[field] = st[field].at[t_new].add(inc)
+    return st
+
+
+def _ev_cas_word(cfg, st, tid, addr, expected, desired):
+    """CAS on a data word.  Returns (st, success).  Always acquires the line."""
+    line = _line_of(cfg, addr)
+    cur = st["cache"][addr]
+    ok = cur == expected
+    new = jnp.where(ok, desired, cur)
+    st = _ref_update(cfg, st, "ref_cache", cur, new)
+    st = dict(st)
+    st["cache"] = st["cache"].at[addr].set(new)
+    st, owned = _take_line(cfg, st, tid, line)
+    cm = cfg.cost
+    st = _bump(st, tid, CNT_CAS)
+    st = _cost(st, tid, jnp.where(owned, cm.cas_owned, cm.cas_remote))
+    return st, ok
+
+
+def _ev_store_word(cfg, st, tid, addr, value, cas_class=False):
+    """Plain store to a data word (atomic 8-byte store on x86)."""
+    line = _line_of(cfg, addr)
+    st = _ref_update(cfg, st, "ref_cache", st["cache"][addr], value)
+    st = dict(st)
+    st["cache"] = st["cache"].at[addr].set(value)
+    st, owned = _take_line(cfg, st, tid, line)
+    cm = cfg.cost
+    st = _bump(st, tid, CNT_CAS if cas_class else CNT_STORE)
+    st = _cost(st, tid, jnp.where(owned, cm.store_owned, cm.store_remote))
+    return st
+
+
+def _ev_persist_word(cfg, st, tid, addr):
+    """clflushopt: write back cache->pmem and evict the line."""
+    line = _line_of(cfg, addr)
+    st = _ref_update(cfg, st, "ref_pmem", st["pmem"][addr], st["cache"][addr])
+    st = dict(st)
+    st["pmem"] = st["pmem"].at[addr].set(st["cache"][addr])
+    st["line_owner"] = st["line_owner"].at[line].set(-1)
+    st = _bump(st, tid, CNT_FLUSH)
+    return _cost(st, tid, cfg.cost.flush)
+
+
+def _ev_persist_desc(cfg, st, tid, dt):
+    """Persist thread dt's whole descriptor (state+ver+targets)."""
+    st = dict(st)
+    st["d_state_p"] = st["d_state_p"].at[dt].set(st["d_state"][dt])
+    st["d_ver_p"] = st["d_ver_p"].at[dt].set(st["d_ver"][dt])
+    st["d_addr_p"] = st["d_addr_p"].at[dt].set(st["d_addr"][dt])
+    st["d_exp_p"] = st["d_exp_p"].at[dt].set(st["d_exp"][dt])
+    st["d_des_p"] = st["d_des_p"].at[dt].set(st["d_des"][dt])
+    line = jnp.int32(cfg.n_word_lines) + dt * jnp.int32(cfg.desc_lines)
+    st["line_owner"] = st["line_owner"].at[line].set(-1)
+    st = _bump(st, tid, CNT_FLUSH, cfg.desc_lines)
+    return _cost(st, tid, cfg.cost.flush * cfg.desc_lines)
+
+
+def _ev_persist_desc_state(cfg, st, tid, dt):
+    """Persist only the state word of dt's descriptor (one line)."""
+    st = dict(st)
+    st["d_state_p"] = st["d_state_p"].at[dt].set(st["d_state"][dt])
+    st["d_ver_p"] = st["d_ver_p"].at[dt].set(st["d_ver"][dt])
+    line = jnp.int32(cfg.n_word_lines) + dt * jnp.int32(cfg.desc_lines)
+    st["line_owner"] = st["line_owner"].at[line].set(-1)
+    st = _bump(st, tid, CNT_FLUSH)
+    return _cost(st, tid, cfg.cost.flush)
+
+
+def _ev_desc_store(cfg, st, tid, dt, cas_class=False):
+    """Cost/ownership accounting for a write to dt's descriptor line."""
+    line = jnp.int32(cfg.n_word_lines) + dt * jnp.int32(cfg.desc_lines)
+    st, owned = _take_line(cfg, st, tid, line)
+    cm = cfg.cost
+    st = _bump(st, tid, CNT_CAS if cas_class else CNT_STORE)
+    return _cost(st, tid, jnp.where(owned,
+                                    cm.cas_owned if cas_class
+                                    else cm.store_owned,
+                                    cm.cas_remote if cas_class
+                                    else cm.store_remote))
+
+
+def _ev_desc_load(cfg, st, tid, dt):
+    line = jnp.int32(cfg.n_word_lines) + dt * jnp.int32(cfg.desc_lines)
+    return _ev_load(cfg, st, tid, line)
+
+
+def _ev_wait(cfg, st, tid):
+    return _cost(st, tid, cfg.cost.wait)
+
+
+def _ev_local(cfg, st, tid):
+    return _cost(st, tid, cfg.cost.local)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers for branch bodies
+# ---------------------------------------------------------------------------
+
+def _enter_wait(cfg, st, tid, ret_pc):
+    """Exponential back-off (paper Sec. 3 implementation details)."""
+    be = st["backoff_exp"][tid]
+    st = _set(st, "backoff", tid, be)
+    st = _set(st, "backoff_exp", tid,
+              jnp.minimum(be * 2, jnp.int32(cfg.backoff_cap)))
+    st = _set(st, "ret_pc", tid, ret_pc)
+    return _set(st, "pc", tid, jnp.int32(PC.READ_WAIT))
+
+
+def _reset_backoff(cfg, st, tid):
+    return _set(st, "backoff_exp", tid, jnp.int32(cfg.backoff_init))
+
+
+def _is_busy_tag(tag):
+    """Word currently unreadable: descriptor embedded or dirty (Fig. 5)."""
+    return tag != TAG_PAYLOAD
+
+
+def _goto(st, tid, pc):
+    return _set(st, "pc", tid, jnp.int32(pc))
+
+
+# ===========================================================================
+# Branches shared by OURS / OURS_DF (paper Fig. 4) and partially by ORIGINAL
+# ===========================================================================
+
+def br_read_tgt(cfg, st, tid):
+    """Benchmark front-end: read current value of target tgt_idx (Fig. 5)."""
+    j = st["tgt_idx"][tid]
+    addrs = _cur_op_addrs(cfg, st, tid)
+    addr = addrs[j]
+    st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+    word = st["cache"][addr]
+    tag = word & TAG_MASK
+
+    if cfg.algorithm == ALG_ORIGINAL:
+        # The original algorithm HELPS instead of waiting.
+        def busy(st):
+            is_dirty = tag == TAG_DIRTY
+            def flush_clear(st):
+                # Wang et al.: readers flush dirty words, then clear the flag.
+                st = _ev_persist_word(cfg, st, tid, addr)
+                clean = word & ~_u32(TAG_MASK)
+                return _ev_store_word(cfg, st, tid, addr, clean)
+            def help_(st):
+                st = _bump(st, tid, CNT_HELPS)
+                st = _set(st, "help_desc", tid,
+                          jnp.asarray(word >> TAG_SHIFT, jnp.int32))
+                st = _set(st, "help_tgt", tid, jnp.int32(0))
+                st = _set(st, "help_ok", tid, True)
+                st = _set(st, "ret_pc", tid, jnp.int32(PC.READ_TGT))
+                return _goto(st, tid, PC.H_TEST)
+            return lax.cond(is_dirty, flush_clear, help_, st)
+    else:
+        def busy(st):
+            return _enter_wait(cfg, st, tid, jnp.int32(PC.READ_TGT))
+
+    def free(st):
+        st = dict(st)
+        st["exp"] = st["exp"].at[tid, j].set(word >> TAG_SHIFT)
+        st = _set(st, "tgt_idx", tid, j + 1)
+        st = _reset_backoff(cfg, st, tid)
+        done = j + 1 >= cfg.k
+        st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+        return _goto(st, tid, jnp.where(done, PC.INIT_DESC, PC.READ_TGT))
+
+    return lax.cond(_is_busy_tag(tag), busy, free, st)
+
+
+def br_read_wait(cfg, st, tid):
+    b = st["backoff"][tid]
+    st = _ev_wait(cfg, st, tid)
+    st = _set(st, "backoff", tid, b - 1)
+    return lax.cond(b - 1 <= 0,
+                    lambda s: _goto(s, tid, s["ret_pc"][tid]),
+                    lambda s: s, st)
+
+
+def br_init_desc(cfg, st, tid):
+    """Fig. 4 line 1 + filling target info (state Failed acts as the WAL)."""
+    addrs = _cur_op_addrs(cfg, st, tid)
+    init_state = (ST_UNDECIDED if cfg.algorithm == ALG_ORIGINAL else ST_FAILED)
+    st = _set(st, "d_state", tid, jnp.int32(init_state))
+    st = _set(st, "d_state_dirty", tid, jnp.int32(0))
+    st = dict(st)
+    exp = st["exp"][tid]
+    st["d_addr"] = st["d_addr"].at[tid].set(addrs)
+    st["d_exp"] = st["d_exp"].at[tid].set(exp << TAG_SHIFT)
+    st["d_des"] = st["d_des"].at[tid].set((exp + _u32(1)) << TAG_SHIFT)
+    st = _set(st, "success", tid, True)
+    st = _ev_desc_store(cfg, st, tid, tid)
+    st = _set(st, "tgt_idx", tid, jnp.int32(0))
+    return _goto(st, tid, PC.PERSIST_DESC)
+
+
+def br_persist_desc(cfg, st, tid):
+    """Fig. 4 line 2: the descriptor IS the write-ahead log."""
+    st = _ev_persist_desc(cfg, st, tid, tid)
+    first = (PC.O_RDCSS_CAS if cfg.algorithm == ALG_ORIGINAL
+             else PC.RESERVE_TEST)
+    return _goto(st, tid, first)
+
+
+def br_reserve_test(cfg, st, tid):
+    """TTAS pre-check before the reserve CAS (ours / ours_df)."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+    word = st["cache"][addr]
+    tag = word & TAG_MASK
+
+    def busy(st):  # another PMwCAS in flight (or dirty): wait + back off
+        return _enter_wait(cfg, st, tid, jnp.int32(PC.RESERVE_TEST))
+
+    def mismatch(st):  # Fig. 4 lines 8-10: operation failed, go abort
+        st = _set(st, "success", tid, False)
+        st = _set(st, "tgt_idx", tid, jnp.int32(0))
+        first_fin = (PC.FIN_STORE_DIRTY if cfg.algorithm == ALG_OURS_DF
+                     else PC.FIN_STORE)
+        return _goto(st, tid, first_fin)
+
+    def match(st):
+        return _goto(st, tid, PC.RESERVE_CAS)
+
+    return lax.cond(
+        _is_busy_tag(tag), busy,
+        lambda s: lax.cond(word == s["d_exp"][tid, j], match, mismatch, s),
+        st)
+
+
+def br_reserve_cas(cfg, st, tid):
+    """Fig. 4 line 6: embed the descriptor address."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    desc_word = (_desc_ptr(cfg, st, tid) << TAG_SHIFT) | _u32(TAG_DESC)
+    st, ok = _ev_cas_word(cfg, st, tid, addr, st["d_exp"][tid, j], desc_word)
+
+    def on_ok(st):
+        st = _reset_backoff(cfg, st, tid)
+        done = j + 1 >= cfg.k
+        st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+        return _goto(st, tid, jnp.where(done, PC.PERSIST_TGT, PC.RESERVE_TEST))
+
+    def on_fail(st):  # re-test: the word may now hold a descriptor or a
+        return _goto(st, tid, PC.RESERVE_TEST)  # different payload
+
+    return lax.cond(ok, on_ok, on_fail, st)
+
+
+def br_persist_tgt(cfg, st, tid):
+    """Fig. 4 lines 12-13: persist every embedded descriptor address."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    st = _ev_persist_word(cfg, st, tid, addr)
+    done = j + 1 >= cfg.k
+    st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+    return _goto(st, tid, jnp.where(done, PC.SET_SUCC, PC.PERSIST_TGT))
+
+
+def br_set_succ(cfg, st, tid):
+    st = _set(st, "d_state", tid, jnp.int32(ST_SUCCEEDED))
+    st = _ev_desc_store(cfg, st, tid, tid)
+    return _goto(st, tid, PC.PERSIST_STATE)
+
+
+def br_persist_state(cfg, st, tid):
+    """Fig. 4 line 15 -- the durability linearization point."""
+    st = _ev_persist_desc_state(cfg, st, tid, tid)
+    st = _set(st, "tgt_idx", tid, jnp.int32(0))
+    first_fin = (PC.FIN_STORE_DIRTY if cfg.algorithm == ALG_OURS_DF
+                 else PC.FIN_STORE)
+    return _goto(st, tid, first_fin)
+
+
+def _final_word(cfg, st, tid, j):
+    """Fig. 4 line 19: desired on success, expected on abort (tagged clean)."""
+    return jnp.where(st["success"][tid], st["d_des"][tid, j],
+                     st["d_exp"][tid, j])
+
+
+def _holds_my_desc(cfg, st, tid, word):
+    tag = word & TAG_MASK
+    mine = (word >> TAG_SHIFT) == _desc_ptr(cfg, st, tid)
+    return ((tag == TAG_DESC) | (tag == TAG_DESC_DIRTY)) & mine
+
+
+def br_fin_store_dirty(cfg, st, tid):
+    """Fig. 4 lines 17-21 (ours_df): store final value WITH the dirty flag."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    word = st["cache"][addr]
+
+    def brk(st):  # line 18: first non-reserved target ends the abort sweep
+        return _goto(st, tid, PC.OP_DONE)
+
+    def go(st):
+        dirty = _final_word(cfg, st, tid, j) | _u32(TAG_DIRTY)
+        st = _ev_store_word(cfg, st, tid, addr, dirty, cas_class=True)
+        return _goto(st, tid, PC.FIN_PERSIST_DIRTY)
+
+    return lax.cond(_holds_my_desc(cfg, st, tid, word), go, brk, st)
+
+
+def br_fin_persist_dirty(cfg, st, tid):
+    j = st["tgt_idx"][tid]
+    st = _ev_persist_word(cfg, st, tid, st["d_addr"][tid, j])
+    return _goto(st, tid, PC.FIN_STORE)
+
+
+def br_fin_store(cfg, st, tid):
+    """Fig. 4 line 23: store the clean final value.
+
+    In ours (no dirty flags) this is also where the per-target abort sweep
+    checks for the first non-reserved address (line 17-18).
+    """
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    word = st["cache"][addr]
+    clean = _final_word(cfg, st, tid, j)
+
+    if cfg.algorithm == ALG_OURS_DF:
+        # arrived via the dirty path; the word holds our dirty value
+        st = _ev_store_word(cfg, st, tid, addr, clean, cas_class=False)
+        return _goto(st, tid, PC.FIN_PERSIST)
+
+    def brk(st):
+        return _goto(st, tid, PC.OP_DONE)
+
+    def go(st):
+        st2 = _ev_store_word(cfg, st, tid, addr, clean, cas_class=True)
+        return _goto(st2, tid, PC.FIN_PERSIST)
+
+    return lax.cond(_holds_my_desc(cfg, st, tid, word), go, brk, st)
+
+
+def br_fin_persist(cfg, st, tid):
+    """Fig. 4 line 24."""
+    j = st["tgt_idx"][tid]
+    st = _ev_persist_word(cfg, st, tid, st["d_addr"][tid, j])
+    done = j + 1 >= cfg.k
+    next_fin = (PC.FIN_STORE_DIRTY if cfg.algorithm == ALG_OURS_DF
+                else PC.FIN_STORE)
+    st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+    return _goto(st, tid, jnp.where(done, PC.OP_DONE, next_fin))
+
+
+def br_op_done(cfg, st, tid):
+    """Fig. 4 line 25 + benchmark bookkeeping (retry failed ops)."""
+    if cfg.algorithm == ALG_ORIGINAL:
+        # Epoch-GC stand-in: the original algorithm may not recycle a
+        # descriptor while helpers/words still reference it.  The paper's
+        # algorithms provably never wait here (asserted in tests).
+        pending = (st["ref_cache"][tid] + st["ref_pmem"][tid]) > 0
+        return lax.cond(pending,
+                        lambda s: _ev_wait(cfg, s, tid),
+                        functools.partial(_op_done_body, cfg, tid=tid), st)
+    return _op_done_body(cfg, st, tid)
+
+
+def _op_done_body(cfg, st, tid):
+    if cfg.algorithm == ALG_ORIGINAL:
+        # helpers may have decided the op differently from the owner's local
+        # view; the descriptor status word is the authoritative outcome
+        ok = st["d_state"][tid] == ST_SUCCEEDED
+    else:
+        ok = st["success"][tid]
+    st = _set(st, "d_state", tid, jnp.int32(ST_COMPLETED))
+    st = _ev_local(cfg, st, tid)
+    cdt = st["counters"].dtype
+    st = _bump(st, tid, CNT_OPS, jnp.where(ok, 1, 0).astype(cdt))
+    st = _bump(st, tid, CNT_FAILS, jnp.where(ok, 0, 1).astype(cdt))
+    st = _set(st, "op_idx", tid,
+              st["op_idx"][tid] + jnp.where(ok, 1, 0).astype(jnp.int32))
+    # a new descriptor generation begins; stale pointers become detectable
+    st = _set(st, "d_ver", tid, st["d_ver"][tid] + 1)
+    st = _set(st, "tgt_idx", tid, jnp.int32(0))
+    start = PC.P_READ if cfg.algorithm == ALG_PCAS else PC.READ_TGT
+    return _goto(st, tid, start)
+
+
+# ===========================================================================
+# ORIGINAL (Wang et al. ICDE'18): RDCSS install + dirty flags + helping
+# ===========================================================================
+
+def br_o_rdcss_cas(cfg, st, tid):
+    """Install phase, CAS #1: place the RDCSS intermediate descriptor."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+    word = st["cache"][addr]
+    tag = word & TAG_MASK
+    mine = _holds_my_desc(cfg, st, tid, word)
+
+    def skip(st):  # a helper already installed this target for us
+        done = j + 1 >= cfg.k
+        st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+        return _goto(st, tid, jnp.where(done, PC.O_STATUS_CAS, PC.O_RDCSS_CAS))
+
+    def dirty(st):  # flush + clear, then retry
+        st = _ev_persist_word(cfg, st, tid, addr)
+        return _ev_store_word(cfg, st, tid, addr, word & ~_u32(TAG_MASK))
+
+    def foreign(st):  # help the other operation to completion, then retry
+        st = _bump(st, tid, CNT_HELPS)
+        st = _set(st, "help_desc", tid,
+                  jnp.asarray(word >> TAG_SHIFT, jnp.int32))
+        st = _set(st, "help_tgt", tid, jnp.int32(0))
+        st = _set(st, "help_ok", tid, True)
+        st = _set(st, "ret_pc", tid, jnp.int32(PC.O_RDCSS_CAS))
+        return _goto(st, tid, PC.H_TEST)
+
+    def payload(st):
+        def ok(st):
+            rdcss = (_desc_ptr(cfg, st, tid) << TAG_SHIFT) | _u32(TAG_RDCSS)
+            st2, success = _ev_cas_word(cfg, st, tid, addr,
+                                        st["d_exp"][tid, j], rdcss)
+            return lax.cond(success,
+                            lambda s: _goto(s, tid, PC.O_PROMOTE_CAS),
+                            lambda s: s, st2)  # retry the load
+
+        def fail(st):  # unexpected value -> whole MwCAS fails
+            st = _set(st, "success", tid, False)
+            return _goto(st, tid, PC.O_STATUS_CAS)
+
+        return lax.cond(word == st["d_exp"][tid, j], ok, fail, st)
+
+    return lax.cond(
+        mine, skip,
+        lambda s: lax.cond(
+            tag == TAG_DIRTY, dirty,
+            lambda s2: lax.cond((tag == TAG_DESC) | (tag == TAG_DESC_DIRTY)
+                                | (tag == TAG_RDCSS), foreign, payload, s2),
+            s),
+        st)
+
+
+def br_o_promote_cas(cfg, st, tid):
+    """Install phase, CAS #2: RDCSS -> MwCAS descriptor (dirty)."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    ptr = _desc_ptr(cfg, st, tid)
+    rdcss = (ptr << TAG_SHIFT) | _u32(TAG_RDCSS)
+    desc_dirty = (ptr << TAG_SHIFT) | _u32(TAG_DESC_DIRTY)
+    st, ok = _ev_cas_word(cfg, st, tid, addr, rdcss, desc_dirty)
+    # promotion can only fail if a helper already promoted it; either way the
+    # word now holds our descriptor and must be persisted
+    return _goto(st, tid, PC.O_PERSIST_TGT)
+
+
+def br_o_persist_tgt(cfg, st, tid):
+    j = st["tgt_idx"][tid]
+    st = _ev_persist_word(cfg, st, tid, st["d_addr"][tid, j])
+    return _goto(st, tid, PC.O_CLEAR_TGT)
+
+
+def br_o_clear_tgt(cfg, st, tid):
+    """Clear the dirty bit on the installed descriptor word.
+
+    Wang et al.'s implementation flushes again after every dirty-bit
+    clear (the "double flush" PerMA-bench identified; paper Sec. 4) —
+    modeled as a fused store+persist step."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    word = st["cache"][addr]
+    clean = (word & ~_u32(TAG_MASK)) | _u32(TAG_DESC)
+    mine = _holds_my_desc(cfg, st, tid, word)
+
+    def clear_flush(s):
+        s = _ev_store_word(cfg, s, tid, addr, clean, cas_class=True)
+        return _ev_persist_word(cfg, s, tid, addr)
+
+    st = lax.cond(mine, clear_flush,
+                  lambda s: _ev_local(cfg, s, tid), st)
+    done = j + 1 >= cfg.k
+    st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+    return _goto(st, tid, jnp.where(done, PC.O_STATUS_CAS, PC.O_RDCSS_CAS))
+
+
+def br_o_status_cas(cfg, st, tid):
+    """CAS the status word Undecided -> Succeeded/Failed, with dirty bit."""
+    target = jnp.where(st["success"][tid], ST_SUCCEEDED, ST_FAILED)
+    cur = st["d_state"][tid]
+    st = dict(st)
+    st["d_state"] = st["d_state"].at[tid].set(
+        jnp.where(cur == ST_UNDECIDED, target, cur))
+    st["d_state_dirty"] = st["d_state_dirty"].at[tid].set(1)
+    st = _ev_desc_store(cfg, st, tid, tid, cas_class=True)
+    return _goto(st, tid, PC.O_STATUS_PERSIST)
+
+
+def br_o_status_persist(cfg, st, tid):
+    st = _ev_persist_desc_state(cfg, st, tid, tid)
+    return _goto(st, tid, PC.O_STATUS_CLEAR)
+
+
+def br_o_status_clear(cfg, st, tid):
+    st = _set(st, "d_state_dirty", tid, jnp.int32(0))
+    st = _ev_desc_store(cfg, st, tid, tid)
+    # Wang: the cleared status is flushed again (double flush)
+    st = _ev_persist_desc_state(cfg, st, tid, tid)
+    st = _set(st, "tgt_idx", tid, jnp.int32(0))
+    return _goto(st, tid, PC.O_FIN_CAS)
+
+
+def br_o_fin_cas(cfg, st, tid):
+    """Finalize phase, CAS #4: descriptor -> final value (dirty)."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    word = st["cache"][addr]
+    succeeded = st["d_state"][tid] == ST_SUCCEEDED
+    final = jnp.where(succeeded, st["d_des"][tid, j], st["d_exp"][tid, j])
+
+    def skip(st):  # already finalized (possibly by a helper) or never installed
+        st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+        done = j + 1 >= cfg.k
+        st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+        return _goto(st, tid, jnp.where(done, PC.OP_DONE, PC.O_FIN_CAS))
+
+    def go(st):
+        st, ok = _ev_cas_word(cfg, st, tid, addr, word,
+                              final | _u32(TAG_DIRTY))
+        return lax.cond(ok, lambda s: _goto(s, tid, PC.O_FIN_PERSIST),
+                        skip, st)
+
+    return lax.cond(_holds_my_desc(cfg, st, tid, word), go, skip, st)
+
+
+def br_o_fin_persist(cfg, st, tid):
+    j = st["tgt_idx"][tid]
+    st = _ev_persist_word(cfg, st, tid, st["d_addr"][tid, j])
+    return _goto(st, tid, PC.O_FIN_CLEAR)
+
+
+def br_o_fin_clear(cfg, st, tid):
+    """Clear + re-flush the finalized value (Wang's double flush)."""
+    j = st["tgt_idx"][tid]
+    addr = st["d_addr"][tid, j]
+    word = st["cache"][addr]
+    clean = word & ~_u32(TAG_MASK)
+    is_dirty = (word & TAG_MASK) == TAG_DIRTY
+
+    def clear_flush(s):
+        s = _ev_store_word(cfg, s, tid, addr, clean)
+        return _ev_persist_word(cfg, s, tid, addr)
+
+    st = lax.cond(is_dirty, clear_flush,
+                  lambda s: _ev_local(cfg, s, tid), st)
+    done = j + 1 >= cfg.k
+    st = _set(st, "tgt_idx", tid, jnp.where(done, 0, j + 1))
+    return _goto(st, tid, jnp.where(done, PC.OP_DONE, PC.O_FIN_CAS))
+
+
+# --------------------------- helping machinery -----------------------------
+
+def _help_valid(cfg, st, tid):
+    """ABA guard: is the helped descriptor still the generation we saw?"""
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    live = _u32(st["d_ver"][dt]) * _u32(cfg.n_threads) + _u32(dt)
+    return live == _u32(h)
+
+
+def br_h_test(cfg, st, tid):
+    """Helper install loop over the helped descriptor's targets."""
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    st = _ev_desc_load(cfg, st, tid, dt)
+
+    def abandon(st):
+        st = _set(st, "help_desc", tid, jnp.int32(-1))
+        return _goto(st, tid, st["ret_pc"][tid])
+
+    def live(st):
+        state = st["d_state"][dt]
+
+        def decided(st):
+            st = _set(st, "help_tgt", tid, jnp.int32(0))
+            return _goto(st, tid, PC.H_FIN_CAS)
+
+        def undecided(st):
+            j = st["help_tgt"][tid]
+
+            def all_done(st):
+                return _goto(st, tid, PC.H_STATUS_CAS)
+
+            def probe(st):
+                addr = st["d_addr"][dt, j]
+                st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+                word = st["cache"][addr]
+                tag = word & TAG_MASK
+                mine = (word >> TAG_SHIFT) == _u32(h)
+                # ONLY a (possibly dirty) MwCAS descriptor counts as
+                # installed; an RDCSS intermediate must still be PROMOTED
+                # before the op may be declared Succeeded (otherwise a
+                # crash can persist Succeeded with an unpersisted target —
+                # caught by the exhaustive crash tests)
+                installed_ = mine & ((tag == TAG_DESC)
+                                     | (tag == TAG_DESC_DIRTY))
+                rdcss_mine = mine & (tag == TAG_RDCSS)
+
+                def installed(st):
+                    st = _set(st, "help_tgt", tid, j + 1)
+                    return st  # stay in H_TEST
+
+                def caslike(st):
+                    return _goto(st, tid, PC.H_CAS)
+
+                def other(st):
+                    # cannot install: value mismatch or a third descriptor;
+                    # drive the helped op to Failed
+                    st = _set(st, "help_ok", tid, False)
+                    return _goto(st, tid, PC.H_STATUS_CAS)
+
+                return lax.cond(
+                    installed_, installed,
+                    lambda s: lax.cond(
+                        rdcss_mine | (word == s["d_exp"][dt, j]),
+                        caslike, other, s),
+                    st)
+
+            return lax.cond(j >= cfg.k, all_done, probe, st)
+
+        return lax.cond(state != ST_UNDECIDED, decided, undecided, st)
+
+    return lax.cond(_help_valid(cfg, st, tid), live, abandon, st)
+
+
+def br_h_cas(cfg, st, tid):
+    """Helper CAS-install (+fused persist & dirty-clear; see module doc)."""
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    j = st["help_tgt"][tid]
+
+    def abandon(st):
+        st = _set(st, "help_desc", tid, jnp.int32(-1))
+        return _goto(st, tid, st["ret_pc"][tid])
+
+    def live(st):
+        addr = st["d_addr"][dt, j]
+        word = st["cache"][addr]
+        rdcss = (_u32(h) << TAG_SHIFT) | _u32(TAG_RDCSS)
+        # install from the expected value OR promote our own RDCSS
+        eligible = (word == st["d_exp"][dt, j]) | (word == rdcss)
+        expected = jnp.where(eligible, word, st["d_exp"][dt, j])
+        desc_dirty = (_u32(h) << TAG_SHIFT) | _u32(TAG_DESC_DIRTY)
+        st, ok = _ev_cas_word(cfg, st, tid, addr, expected, desc_dirty)
+        ok = ok & eligible
+
+        def persist_clear(st):
+            st = _ev_persist_word(cfg, st, tid, addr)
+            clean = (_u32(h) << TAG_SHIFT) | _u32(TAG_DESC)
+            st = _ev_store_word(cfg, st, tid, addr, clean)
+            st = _set(st, "help_tgt", tid, j + 1)
+            return _goto(st, tid, PC.H_TEST)
+
+        return lax.cond(ok, persist_clear,
+                        lambda s: _goto(s, tid, PC.H_TEST), st)
+
+    return lax.cond(_help_valid(cfg, st, tid), live, abandon, st)
+
+
+def br_h_status_cas(cfg, st, tid):
+    """Helper decides the helped op's status (racing the owner)."""
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+
+    def abandon(st):
+        st = _set(st, "help_desc", tid, jnp.int32(-1))
+        return _goto(st, tid, st["ret_pc"][tid])
+
+    def live(st):
+        target = jnp.where(st["help_ok"][tid], ST_SUCCEEDED, ST_FAILED)
+        cur = st["d_state"][dt]
+        st = dict(st)
+        st["d_state"] = st["d_state"].at[dt].set(
+            jnp.where(cur == ST_UNDECIDED, target, cur))
+        st = _ev_desc_store(cfg, st, tid, dt, cas_class=True)
+        # helper persists the (possibly dirty) status before acting on it --
+        # required for the recovery argument (DESIGN.md Sec. 2.1)
+        st = _ev_persist_desc_state(cfg, st, tid, dt)
+        st = _set(st, "help_tgt", tid, jnp.int32(0))
+        return _goto(st, tid, PC.H_FIN_CAS)
+
+    return lax.cond(_help_valid(cfg, st, tid), live, abandon, st)
+
+
+def br_h_fin_cas(cfg, st, tid):
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    j = st["help_tgt"][tid]
+
+    def abandon(st):
+        st = _set(st, "help_desc", tid, jnp.int32(-1))
+        return _goto(st, tid, st["ret_pc"][tid])
+
+    def live(st):
+        def done(st):
+            st = _set(st, "help_desc", tid, jnp.int32(-1))
+            return _goto(st, tid, st["ret_pc"][tid])
+
+        def fin(st):
+            addr = st["d_addr"][dt, j]
+            word = st["cache"][addr]
+            tag = word & TAG_MASK
+            is_h = ((word >> TAG_SHIFT) == _u32(h)) & \
+                   ((tag == TAG_DESC) | (tag == TAG_DESC_DIRTY))
+            succeeded = st["d_state"][dt] == ST_SUCCEEDED
+            final = jnp.where(succeeded, st["d_des"][dt, j],
+                              st["d_exp"][dt, j])
+
+            def go(st):
+                st, ok = _ev_cas_word(cfg, st, tid, addr, word,
+                                      final | _u32(TAG_DIRTY))
+                return lax.cond(
+                    ok, lambda s: _goto(s, tid, PC.H_FIN_PERSIST),
+                    lambda s: _set(s, "help_tgt", tid, j + 1), st)
+
+            def skip(st):
+                st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+                return _set(st, "help_tgt", tid, j + 1)
+
+            return lax.cond(is_h, go, skip, st)
+
+        return lax.cond(j >= cfg.k, done, fin, st)
+
+    return lax.cond(_help_valid(cfg, st, tid), live, abandon, st)
+
+
+def br_h_fin_persist(cfg, st, tid):
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    j = st["help_tgt"][tid]
+    st = _ev_persist_word(cfg, st, tid, st["d_addr"][dt, j])
+    return _goto(st, tid, PC.H_FIN_CLEAR)
+
+
+def br_h_fin_clear(cfg, st, tid):
+    h = st["help_desc"][tid]
+    dt = _desc_tid(cfg, h)
+    j = st["help_tgt"][tid]
+    addr = st["d_addr"][dt, j]
+    word = st["cache"][addr]
+    is_dirty = (word & TAG_MASK) == TAG_DIRTY
+    st = lax.cond(is_dirty,
+                  lambda s: _ev_store_word(cfg, s, tid, addr,
+                                           word & ~_u32(TAG_MASK)),
+                  lambda s: _ev_local(cfg, s, tid), st)
+    st = _set(st, "help_tgt", tid, j + 1)
+    return _goto(st, tid, PC.H_FIN_CAS)
+
+
+# ===========================================================================
+# PCAS (Wang et al.'s persistent single-word CAS, with TTAS + back-off)
+# ===========================================================================
+
+def br_p_read(cfg, st, tid):
+    addrs = _cur_op_addrs(cfg, st, tid)
+    addr = addrs[0]
+    st = _ev_load(cfg, st, tid, _line_of(cfg, addr))
+    word = st["cache"][addr]
+    tag = word & TAG_MASK
+
+    def busy(st):
+        return _enter_wait(cfg, st, tid, jnp.int32(PC.P_READ))
+
+    def free(st):
+        st = dict(st)
+        st["exp"] = st["exp"].at[tid, 0].set(word >> TAG_SHIFT)
+        st = _reset_backoff(cfg, st, tid)
+        return _goto(st, tid, PC.P_CAS)
+
+    return lax.cond(_is_busy_tag(tag), busy, free, st)
+
+
+def br_p_cas(cfg, st, tid):
+    addrs = _cur_op_addrs(cfg, st, tid)
+    addr = addrs[0]
+    v = st["exp"][tid, 0]
+    expected = v << TAG_SHIFT
+    desired_dirty = ((v + _u32(1)) << TAG_SHIFT) | _u32(TAG_DIRTY)
+    st, ok = _ev_cas_word(cfg, st, tid, addr, expected, desired_dirty)
+    cdt = st["counters"].dtype
+    st = _bump(st, tid, CNT_FAILS, jnp.where(ok, 0, 1).astype(cdt))
+    return lax.cond(ok, lambda s: _goto(s, tid, PC.P_PERSIST),
+                    lambda s: _goto(s, tid, PC.P_READ), st)
+
+
+def br_p_persist(cfg, st, tid):
+    addrs = _cur_op_addrs(cfg, st, tid)
+    st = _ev_persist_word(cfg, st, tid, addrs[0])
+    return _goto(st, tid, PC.P_CLEAR)
+
+
+def br_p_clear(cfg, st, tid):
+    addrs = _cur_op_addrs(cfg, st, tid)
+    addr = addrs[0]
+    clean = (st["exp"][tid, 0] + _u32(1)) << TAG_SHIFT
+    st = _ev_store_word(cfg, st, tid, addr, clean, cas_class=True)
+    st = _set(st, "success", tid, True)
+    return _goto(st, tid, PC.OP_DONE)
+
+
+# ===========================================================================
+# Dispatcher
+# ===========================================================================
+
+def _noop(cfg, st, tid):
+    return _ev_local(cfg, st, tid)
+
+
+_BRANCHES = {
+    PC.READ_TGT: br_read_tgt,
+    PC.READ_WAIT: br_read_wait,
+    PC.INIT_DESC: br_init_desc,
+    PC.PERSIST_DESC: br_persist_desc,
+    PC.RESERVE_TEST: br_reserve_test,
+    PC.RESERVE_WAIT: br_read_wait,     # shared wait body
+    PC.RESERVE_CAS: br_reserve_cas,
+    PC.PERSIST_TGT: br_persist_tgt,
+    PC.SET_SUCC: br_set_succ,
+    PC.PERSIST_STATE: br_persist_state,
+    PC.FIN_STORE_DIRTY: br_fin_store_dirty,
+    PC.FIN_PERSIST_DIRTY: br_fin_persist_dirty,
+    PC.FIN_STORE: br_fin_store,
+    PC.FIN_PERSIST: br_fin_persist,
+    PC.OP_DONE: br_op_done,
+    PC.O_RDCSS_CAS: br_o_rdcss_cas,
+    PC.O_PROMOTE_CAS: br_o_promote_cas,
+    PC.O_PERSIST_TGT: br_o_persist_tgt,
+    PC.O_CLEAR_TGT: br_o_clear_tgt,
+    PC.O_STATUS_CAS: br_o_status_cas,
+    PC.O_STATUS_PERSIST: br_o_status_persist,
+    PC.O_STATUS_CLEAR: br_o_status_clear,
+    PC.O_FIN_CAS: br_o_fin_cas,
+    PC.O_FIN_PERSIST: br_o_fin_persist,
+    PC.O_FIN_CLEAR: br_o_fin_clear,
+    PC.H_TEST: br_h_test,
+    PC.H_CAS: br_h_cas,
+    PC.H_STATUS_CAS: br_h_status_cas,
+    PC.H_FIN_CAS: br_h_fin_cas,
+    PC.H_FIN_PERSIST: br_h_fin_persist,
+    PC.H_FIN_CLEAR: br_h_fin_clear,
+    PC.P_READ: br_p_read,
+    PC.P_CAS: br_p_cas,
+    PC.P_PERSIST: br_p_persist,
+    PC.P_CLEAR: br_p_clear,
+}
+
+# Which PCs each algorithm can actually reach (keeps switch tables small).
+_ALG_PCS = {
+    ALG_OURS: [PC.READ_TGT, PC.READ_WAIT, PC.INIT_DESC, PC.PERSIST_DESC,
+               PC.RESERVE_TEST, PC.RESERVE_WAIT, PC.RESERVE_CAS,
+               PC.PERSIST_TGT, PC.SET_SUCC, PC.PERSIST_STATE, PC.FIN_STORE,
+               PC.FIN_PERSIST, PC.OP_DONE],
+    ALG_OURS_DF: [PC.READ_TGT, PC.READ_WAIT, PC.INIT_DESC, PC.PERSIST_DESC,
+                  PC.RESERVE_TEST, PC.RESERVE_WAIT, PC.RESERVE_CAS,
+                  PC.PERSIST_TGT, PC.SET_SUCC, PC.PERSIST_STATE,
+                  PC.FIN_STORE_DIRTY, PC.FIN_PERSIST_DIRTY, PC.FIN_STORE,
+                  PC.FIN_PERSIST, PC.OP_DONE],
+    ALG_ORIGINAL: [PC.READ_TGT, PC.INIT_DESC, PC.PERSIST_DESC,
+                   PC.O_RDCSS_CAS, PC.O_PROMOTE_CAS, PC.O_PERSIST_TGT,
+                   PC.O_CLEAR_TGT, PC.O_STATUS_CAS, PC.O_STATUS_PERSIST,
+                   PC.O_STATUS_CLEAR, PC.O_FIN_CAS, PC.O_FIN_PERSIST,
+                   PC.O_FIN_CLEAR, PC.OP_DONE, PC.H_TEST, PC.H_CAS,
+                   PC.H_STATUS_CAS, PC.H_FIN_CAS, PC.H_FIN_PERSIST,
+                   PC.H_FIN_CLEAR],
+    ALG_PCAS: [PC.P_READ, PC.READ_WAIT, PC.P_CAS, PC.P_PERSIST, PC.P_CLEAR,
+               PC.OP_DONE],
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _pc_remap(algorithm: str):
+    """Map global PC values -> dense branch indices for this algorithm."""
+    pcs = _ALG_PCS[algorithm]
+    table = [0] * PC.COUNT
+    for i, pc in enumerate(pcs):
+        table[pc] = i
+    return tuple(pcs), tuple(table)
+
+
+def step(cfg: SimConfig, st: Dict[str, Any], tid) -> Dict[str, Any]:
+    """Execute one micro-op of thread ``tid``."""
+    pcs, table = _pc_remap(cfg.algorithm)
+    remap = jnp.asarray(table, jnp.int32)
+    branches = [functools.partial(_BRANCHES[pc], cfg, tid=tid) for pc in pcs]
+    idx = remap[st["pc"][tid]]
+    return lax.switch(idx, branches, st)

@@ -1,0 +1,329 @@
+"""State model for the PMwCAS concurrency simulator.
+
+The simulator models a many-core CPU with a coherent cache hierarchy in
+front of persistent memory, at the granularity the paper reasons about:
+
+- ``cache``  -- the CPU-cache-visible value of every word (what loads/CAS see)
+- ``pmem``   -- the persisted value of every word (what survives a crash)
+- ``line_owner`` -- which thread's cache currently owns each 64-byte line
+  (modified state); writes by another thread count an *invalidation*,
+  the contention signal the paper attributes the original algorithm's
+  collapse to.
+
+Words are uint32 with the paper's low tag bits (Table 2).  The payload
+width is semantics-neutral: the numpy oracle (``core/oracle.py``) runs the
+same algorithms with 64-bit words and must agree event-for-event.
+
+Geometry is faithful to the paper's benchmark (Fig. 8): each word
+logically occupies the head of a ``block_bytes``-sized memory block, so
+``words_per_line = max(1, 64 // block_bytes)`` words share a cache line
+(the Fig. 14 false-sharing study).  Descriptors live on their own lines
+after the word array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Algorithms (paper Section 5's four competitors)
+# ---------------------------------------------------------------------------
+ALG_OURS = "ours"            # Section 4: no dirty flags (descriptor-as-WAL)
+ALG_OURS_DF = "ours_df"      # Section 3: with dirty flags
+ALG_ORIGINAL = "original"    # Wang et al. (ICDE'18): RDCSS install + helping
+ALG_PCAS = "pcas"            # Wang et al.'s persistent single-word CAS
+ALGORITHMS = (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL, ALG_PCAS)
+
+# ---------------------------------------------------------------------------
+# Word tagging.
+#
+# Ours (Table 2, 2 low bits):   00 payload | 10 descriptor | 01 dirty payload
+# Original (3 low bits):        adds an RDCSS-intermediate tag (bit 2) and may
+#                               combine descriptor/dirty bits.
+# A payload value v is stored as (v << TAG_SHIFT) | tag.
+# ---------------------------------------------------------------------------
+TAG_SHIFT = 3  # one shared shift so both schemes coexist in one word array
+TAG_MASK = np.uint32((1 << TAG_SHIFT) - 1)
+
+TAG_PAYLOAD = np.uint32(0b000)
+TAG_DIRTY = np.uint32(0b001)    # payload with dirty flag
+TAG_DESC = np.uint32(0b010)     # PMwCAS descriptor pointer
+TAG_DESC_DIRTY = np.uint32(0b011)
+TAG_RDCSS = np.uint32(0b100)    # original algorithm's intermediate descriptor
+
+# Descriptor states (paper Table 1).  The original (Wang et al.) algorithm
+# additionally distinguishes an Undecided status during its install phase.
+ST_COMPLETED = 0
+ST_FAILED = 1
+ST_SUCCEEDED = 2
+ST_UNDECIDED = 3
+# The original algorithm's status word carries its own dirty bit; we track it
+# as a separate field on the descriptor ("d_state_dirty").
+
+
+def encode(value, tag=TAG_PAYLOAD):
+    value = jnp.asarray(value, jnp.uint32)
+    return (value << TAG_SHIFT) | jnp.asarray(tag, jnp.uint32)
+
+
+def decode(word):
+    word = jnp.asarray(word, jnp.uint32)
+    return word >> TAG_SHIFT, word & jnp.uint32(TAG_MASK)
+
+
+def np_encode(value: int, tag: int = 0) -> int:
+    return (int(value) << TAG_SHIFT) | int(tag)
+
+
+def np_decode(word: int) -> Tuple[int, int]:
+    return int(word) >> TAG_SHIFT, int(word) & int(TAG_MASK)
+
+
+# ---------------------------------------------------------------------------
+# Cycle-cost model.  Instruction/invalidation COUNTS are exact; these
+# constants only convert counts into modeled wall-cycles for the throughput
+# figures.  Calibrated once (see benchmarks/calibration.md) and then frozen.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    local: int = 1          # register/ALU micro-op
+    load_hit: int = 2       # load from an owned/shared line
+    load_miss: int = 24     # load needing a coherence transfer
+    cas_owned: int = 6      # CAS on a line already in M state locally
+    cas_remote: int = 40    # CAS stealing the line (invalidation)
+    store_owned: int = 2
+    store_remote: int = 30
+    flush: int = 250        # clflushopt to Optane (~100ns-class)
+    flush_clean: int = 60   # flushing a line that is not locally modified
+    wait: int = 4           # one back-off step
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.array(
+            [self.local, self.load_hit, self.load_miss, self.cas_owned,
+             self.cas_remote, self.store_owned, self.store_remote,
+             self.flush, self.flush_clean, self.wait],
+            dtype=jnp.int64 if jax.config.jax_enable_x64 else jnp.int32,
+        )
+
+
+# Cost indices (into CostModel.as_array()).
+C_LOCAL, C_LOAD_HIT, C_LOAD_MISS, C_CAS_OWNED, C_CAS_REMOTE = 0, 1, 2, 3, 4
+C_STORE_OWNED, C_STORE_REMOTE, C_FLUSH, C_FLUSH_CLEAN, C_WAIT = 5, 6, 7, 8, 9
+
+
+# ---------------------------------------------------------------------------
+# Simulator configuration.  Frozen + hashable so jit specializes per config.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    algorithm: str = ALG_OURS
+    n_threads: int = 8
+    n_words: int = 1 << 16          # paper: 1e6; tests use smaller
+    k: int = 3                      # words per PMwCAS
+    block_bytes: int = 256          # Fig. 8 memory-block size
+    alpha: float = 0.0              # Zipf skew (Eq. 1)
+    max_ops: int = 256              # distinct pre-generated ops per thread
+    n_steps: int = 20_000           # scheduler micro-steps
+    seed: int = 0
+    backoff_init: int = 4           # back-off (paper Sec. 3 impl notes)
+    backoff_cap: int = 256
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+
+    # Derived geometry -----------------------------------------------------
+    @property
+    def words_per_line(self) -> int:
+        # 64-byte cache lines; each word heads a block_bytes-sized block.
+        return max(1, 64 // self.block_bytes)
+
+    @property
+    def n_word_lines(self) -> int:
+        wpl = self.words_per_line
+        return (self.n_words + wpl - 1) // wpl
+
+    @property
+    def desc_lines(self) -> int:
+        # state+count header (16B) + k * 24B of target info, 64B lines
+        return (16 + self.k * 24 + 63) // 64
+
+    @property
+    def n_lines(self) -> int:
+        return self.n_word_lines + self.n_threads * self.desc_lines
+
+    def desc_line(self, tid):
+        """First cache line of thread `tid`'s descriptor."""
+        return self.n_word_lines + tid * self.desc_lines
+
+    def validate(self) -> "SimConfig":
+        assert self.algorithm in ALGORITHMS, self.algorithm
+        assert self.k >= 1
+        if self.algorithm == ALG_PCAS:
+            assert self.k == 1, "PCAS is single-word"
+        assert self.n_words >= self.k
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Program counters (micro-op state machines).  One memory event per step.
+# ---------------------------------------------------------------------------
+class PC:
+    # shared front-end: benchmark reads current values (read procedure Fig. 5)
+    READ_TGT = 0
+    READ_WAIT = 1
+    INIT_DESC = 2          # Fig.4 line 1 (state <- Failed; fill targets)
+    PERSIST_DESC = 3       # Fig.4 line 2
+    RESERVE_TEST = 4       # TTAS load (impl. details, Sec. 3)
+    RESERVE_WAIT = 5       # back-off while another PMwCAS is in flight
+    RESERVE_CAS = 6        # Fig.4 line 6
+    PERSIST_TGT = 7        # Fig.4 line 13
+    SET_SUCC = 8           # Fig.4 line 14
+    PERSIST_STATE = 9      # Fig.4 line 15 (durability linearization point)
+    FIN_STORE_DIRTY = 10   # Fig.4 line 21 (ours_df only)
+    FIN_PERSIST_DIRTY = 11  # Fig.4 line 22
+    FIN_STORE = 12         # Fig.4 line 23
+    FIN_PERSIST = 13       # Fig.4 line 24
+    OP_DONE = 14           # Fig.4 line 25 (state <- Completed; next op)
+
+    # original (Wang et al.) extras: RDCSS two-phase install + dirty handling
+    O_RDCSS_CAS = 15       # CAS #1: install RDCSS intermediate
+    O_PROMOTE_CAS = 16     # CAS #2: promote to MwCAS descriptor (|dirty)
+    O_PERSIST_TGT = 17     # flush the installed (dirty) descriptor word
+    O_CLEAR_TGT = 18       # store: clear the dirty bit on the descriptor word
+    O_STATUS_CAS = 19      # CAS #3-class: Undecided -> Succeeded/Failed |dirty
+    O_STATUS_PERSIST = 20
+    O_STATUS_CLEAR = 21
+    O_FIN_CAS = 22         # CAS #4: descriptor -> final value |dirty
+    O_FIN_PERSIST = 23
+    O_FIN_CLEAR = 24       # store: clear dirty on final value
+
+    # helping (original only): a reader/installer that hits a foreign
+    # descriptor completes that operation before retrying its own.
+    H_TEST = 25
+    H_CAS = 26
+    H_STATUS_CAS = 27
+    H_FIN_CAS = 28
+    H_FIN_PERSIST = 29
+    H_FIN_CLEAR = 30
+
+    # PCAS
+    P_READ = 31
+    P_CAS = 32             # CAS(v -> (v+1)|dirty)
+    P_PERSIST = 33
+    P_CLEAR = 34           # store clean value
+
+    COUNT = 35
+
+
+# Counter slots (per thread).
+CNT_CAS = 0          # CAS-class events (incl. atomic finalize stores)
+CNT_FLUSH = 1
+CNT_LOAD = 2
+CNT_STORE = 3
+CNT_INVAL = 4        # cache-line invalidations this thread caused
+CNT_OPS = 5          # completed (successful) PMwCAS operations
+CNT_FAILS = 6        # failed PMwCAS attempts (op retried)
+CNT_CYCLES = 7       # modeled cycles consumed by this thread
+CNT_HELPS = 8        # helping episodes entered (original only)
+N_COUNTERS = 9
+
+
+def zipf_probs(n: int, alpha: float) -> np.ndarray:
+    """Eq. (1): f(k; alpha, |W|) over word ranks 1..n."""
+    if alpha == 0.0:
+        return np.full(n, 1.0 / n)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+def generate_ops(cfg: SimConfig) -> np.ndarray:
+    """Pre-generate [n_threads, max_ops, k] distinct, address-sorted targets.
+
+    The paper's benchmark selects k words per operation by Zipf rank and
+    embeds descriptors in a canonical (sorted) address order so that
+    concurrent PMwCAS operations cannot deadlock (Sec. 2.1).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    p = zipf_probs(cfg.n_words, cfg.alpha)
+    # Popularity rank r maps to word id perm[r] (stable shuffle).
+    perm = rng.permutation(cfg.n_words)
+    shape = (cfg.n_threads, cfg.max_ops, cfg.k)
+    ranks = rng.choice(cfg.n_words, size=shape, p=p)
+    # Reject duplicate words within an op (sample-until-distinct).
+    for _ in range(64):
+        ids = perm[ranks]
+        dup = np.zeros(shape, dtype=bool)
+        srt = np.sort(ids, axis=-1)
+        d = srt[..., 1:] == srt[..., :-1]
+        if not d.any():
+            break
+        # resample every position of ops that contain any duplicate
+        bad_ops = d.any(axis=-1)
+        n_bad = int(bad_ops.sum())
+        ranks[bad_ops] = rng.choice(cfg.n_words, size=(n_bad, cfg.k), p=p)
+    ids = perm[ranks]
+    ids = np.sort(ids, axis=-1)  # canonical embedding order
+    return ids.astype(np.int32)
+
+
+def generate_schedule(cfg: SimConfig) -> np.ndarray:
+    """A uniformly random but deterministic thread interleaving."""
+    rng = np.random.default_rng(cfg.seed + 0x5EED)
+    return rng.integers(0, cfg.n_threads, size=cfg.n_steps, dtype=np.int32)
+
+
+def init_state(cfg: SimConfig, ops: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    """Build the initial simulator state pytree."""
+    cfg.validate()
+    T, k = cfg.n_threads, cfg.k
+    if ops is None:
+        ops = generate_ops(cfg)
+    start_pc = PC.P_READ if cfg.algorithm == ALG_PCAS else PC.READ_TGT
+    state = {
+        # memory ------------------------------------------------------------
+        "cache": jnp.zeros(cfg.n_words, jnp.uint32),
+        "pmem": jnp.zeros(cfg.n_words, jnp.uint32),
+        "line_owner": jnp.full(cfg.n_lines, -1, jnp.int32),
+        # descriptor table (cache + pmem copies) -----------------------------
+        "d_state": jnp.full(T, ST_COMPLETED, jnp.int32),
+        "d_state_p": jnp.full(T, ST_COMPLETED, jnp.int32),
+        "d_state_dirty": jnp.zeros(T, jnp.int32),   # original's status dirty bit
+        "d_addr": jnp.full((T, k), -1, jnp.int32),
+        "d_exp": jnp.zeros((T, k), jnp.uint32),     # tagged expected words
+        "d_des": jnp.zeros((T, k), jnp.uint32),     # tagged desired words
+        "d_addr_p": jnp.full((T, k), -1, jnp.int32),
+        "d_exp_p": jnp.zeros((T, k), jnp.uint32),
+        "d_des_p": jnp.zeros((T, k), jnp.uint32),
+        # descriptor generation counters.  The descriptor *pointer* stored in
+        # a word is ver*T + tid, so helpers can detect a recycled descriptor
+        # (the ABA hazard Wang et al. solve with epoch-based GC; the paper's
+        # own algorithms never dereference foreign descriptors, so they need
+        # no GC -- one of its contributions).
+        "d_ver": jnp.zeros(T, jnp.int32),
+        "d_ver_p": jnp.zeros(T, jnp.int32),
+        # per-thread registers ------------------------------------------------
+        "pc": jnp.full(T, start_pc, jnp.int32),
+        "op_idx": jnp.zeros(T, jnp.int32),
+        "tgt_idx": jnp.zeros(T, jnp.int32),
+        "success": jnp.ones(T, jnp.bool_),
+        "backoff": jnp.zeros(T, jnp.int32),
+        "backoff_exp": jnp.full(T, cfg.backoff_init, jnp.int32),
+        "exp": jnp.zeros((T, k), jnp.uint32),       # untagged payload values
+        "help_desc": jnp.full(T, -1, jnp.int32),
+        "help_tgt": jnp.zeros(T, jnp.int32),
+        "help_ok": jnp.ones(T, jnp.bool_),
+        "ret_pc": jnp.full(T, start_pc, jnp.int32),
+        # outstanding descriptor references per owner thread (cache / pmem);
+        # see engine._ref_update for why these exist
+        "ref_cache": jnp.zeros(T, jnp.int32),
+        "ref_pmem": jnp.zeros(T, jnp.int32),
+        # instrumentation -----------------------------------------------------
+        "counters": jnp.zeros((T, N_COUNTERS), jnp.int64
+                              if jax.config.jax_enable_x64 else jnp.int32),
+        # static data ---------------------------------------------------------
+        "ops": jnp.asarray(ops),
+    }
+    return state

@@ -1,0 +1,218 @@
+"""Simulation driver: jit'd `lax.scan` over a deterministic interleaving.
+
+`run_sim` executes `cfg.n_steps` scheduler slots (one micro-op each) and
+optionally *drains* in-flight operations so the memory reaches quiescence
+(every word payload-tagged, cache == pmem) — the precondition for the exact
+sum-invariant checks in the tests.
+
+Throughput is modeled as  total completed ops / max-over-threads cycles
+(threads run concurrently on real hardware; the per-thread cycle accumulators
+already include contention, back-off and flush costs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import engine
+from .model import (ALG_PCAS, CNT_CAS, CNT_CYCLES, CNT_FAILS, CNT_FLUSH,
+                    CNT_HELPS, CNT_INVAL, CNT_LOAD, CNT_OPS, CNT_STORE, PC,
+                    SimConfig, TAG_MASK, TAG_SHIFT, generate_ops,
+                    generate_schedule, init_state)
+
+
+def _start_pc(cfg: SimConfig) -> int:
+    return PC.P_READ if cfg.algorithm == ALG_PCAS else PC.READ_TGT
+
+
+def _scan_steps(cfg: SimConfig, st: Dict[str, Any], schedule: jnp.ndarray):
+    def body(st, tid):
+        # negative schedule entries are no-ops (lets crash studies truncate a
+        # schedule without recompiling)
+        st = lax.cond(tid >= 0, lambda s: engine.step(cfg, s, tid),
+                      lambda s: s, st)
+        return st, None
+
+    st, _ = lax.scan(body, st, schedule)
+    return st
+
+
+def _clean_mask(cfg: SimConfig, st) -> jnp.ndarray:
+    """Threads with no in-flight memory side effects (op boundary)."""
+    start = _start_pc(cfg)
+    pc = st["pc"]
+    at_start = pc == start
+    waiting_clean = (pc == PC.READ_WAIT) & (st["ret_pc"] == start)
+    return at_start | waiting_clean
+
+
+def _drain(cfg: SimConfig, st: Dict[str, Any], max_rounds: int = 100_000):
+    """Step every non-clean thread until all reach an operation boundary."""
+
+    def cond(carry):
+        st, rounds = carry
+        return (~jnp.all(_clean_mask(cfg, st))) & (rounds < max_rounds)
+
+    def body(carry):
+        st, rounds = carry
+
+        def per_thread(t, st):
+            dirty = ~_clean_mask(cfg, st)[t]
+            return lax.cond(dirty, lambda s: engine.step(cfg, s, t),
+                            lambda s: s, st)
+
+        st = lax.fori_loop(0, cfg.n_threads, per_thread, st)
+        return st, rounds + 1
+
+    st, rounds = lax.while_loop(cond, body, (st, jnp.int32(0)))
+    return st, rounds
+
+
+@dataclasses.dataclass
+class SimResult:
+    cfg: SimConfig
+    state: Dict[str, Any]
+    drained: bool
+    drain_rounds: int
+
+    # ----- instrumentation accessors --------------------------------------
+    @property
+    def counters(self) -> np.ndarray:
+        return np.asarray(self.state["counters"])
+
+    def total(self, cnt: int) -> int:
+        return int(self.counters[:, cnt].sum())
+
+    @property
+    def ops_completed(self) -> int:
+        return self.total(CNT_OPS)
+
+    @property
+    def wall_cycles(self) -> int:
+        return int(self.counters[:, CNT_CYCLES].max())
+
+    @property
+    def throughput(self) -> float:
+        """Completed operations per modeled cycle (scale-free)."""
+        return self.ops_completed / max(1, self.wall_cycles)
+
+    def mean_latency_cycles(self) -> float:
+        """Average cycles per completed op, per thread, averaged."""
+        ops = self.counters[:, CNT_OPS].astype(np.float64)
+        cyc = self.counters[:, CNT_CYCLES].astype(np.float64)
+        ok = ops > 0
+        if not ok.any():
+            return float("inf")
+        return float((cyc[ok] / ops[ok]).mean())
+
+    def percentile_latency_cycles(self, q: float) -> float:
+        """Per-thread cycles/op distribution percentile (paper's p1/p99)."""
+        ops = self.counters[:, CNT_OPS].astype(np.float64)
+        cyc = self.counters[:, CNT_CYCLES].astype(np.float64)
+        ok = ops > 0
+        if not ok.any():
+            return float("inf")
+        return float(np.percentile(cyc[ok] / ops[ok], q))
+
+    def per_op(self, cnt: int) -> float:
+        """Average count per *successful* op (incl. retry overheads)."""
+        return self.total(cnt) / max(1, self.ops_completed)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "algorithm": self.cfg.algorithm,
+            "threads": self.cfg.n_threads,
+            "k": self.cfg.k,
+            "alpha": self.cfg.alpha,
+            "ops": self.ops_completed,
+            "fails": self.total(CNT_FAILS),
+            "throughput_per_cycle": self.throughput,
+            "cas_per_op": self.per_op(CNT_CAS),
+            "flush_per_op": self.per_op(CNT_FLUSH),
+            "load_per_op": self.per_op(CNT_LOAD),
+            "store_per_op": self.per_op(CNT_STORE),
+            "inval_per_op": self.per_op(CNT_INVAL),
+            "helps": self.total(CNT_HELPS),
+            "wall_cycles": self.wall_cycles,
+        }
+
+    # ----- invariants -------------------------------------------------------
+    def payload_values(self, which: str = "pmem") -> np.ndarray:
+        words = np.asarray(self.state[which])
+        return words >> TAG_SHIFT
+
+    def tags(self, which: str = "pmem") -> np.ndarray:
+        return np.asarray(self.state[which]) & int(TAG_MASK)
+
+    def expected_histogram(self) -> np.ndarray:
+        """Per-word successful-increment counts implied by op_idx.
+
+        Ops are retried until success, so thread t's completed set is exactly
+        its first op_idx[t] pre-generated ops (with wrap-around reuse).
+        """
+        ops = np.asarray(self.state["ops"])  # [T, max_ops, k]
+        op_idx = np.asarray(self.state["op_idx"])
+        hist = np.zeros(self.cfg.n_words, dtype=np.int64)
+        for t in range(self.cfg.n_threads):
+            n = int(op_idx[t])
+            full, part = divmod(n, self.cfg.max_ops)
+            if full:
+                np.add.at(hist, ops[t].reshape(-1), full)
+            if part:
+                np.add.at(hist, ops[t, :part].reshape(-1), 1)
+        return hist
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_runner(cfg: SimConfig, drain: bool):
+    @jax.jit
+    def go(st, schedule):
+        st = _scan_steps(cfg, st, schedule)
+        if drain:
+            st, rounds = _drain(cfg, st)
+        else:
+            rounds = jnp.int32(0)
+        return st, rounds
+
+    return go
+
+
+def run_sim(cfg: SimConfig,
+            ops: Optional[np.ndarray] = None,
+            schedule: Optional[np.ndarray] = None,
+            drain: bool = True) -> SimResult:
+    """Run the simulation (jit-compiled; deterministic given cfg/ops/schedule)."""
+    cfg.validate()
+    st = init_state(cfg, ops)
+    if schedule is None:
+        schedule = generate_schedule(cfg)
+    schedule = jnp.asarray(schedule, jnp.int32)
+
+    go = _compiled_runner(cfg, drain)
+    st, rounds = go(st, schedule)
+    st = jax.tree_util.tree_map(lambda x: np.asarray(x), st)
+    return SimResult(cfg=cfg, state=st, drained=drain,
+                     drain_rounds=int(rounds))
+
+
+def run_until(cfg: SimConfig, n_steps: int,
+              ops: Optional[np.ndarray] = None,
+              schedule: Optional[np.ndarray] = None) -> SimResult:
+    """Run exactly n_steps micro-ops WITHOUT draining (for crash studies).
+
+    The schedule keeps its full cfg.n_steps length with entries >= n_steps
+    masked to -1 (no-op), so every crash point reuses one compiled scan.
+    """
+    if schedule is None:
+        schedule = generate_schedule(cfg)
+    schedule = np.asarray(schedule).copy()
+    schedule[n_steps:] = -1
+    return run_sim(cfg, ops=ops, schedule=schedule, drain=False)

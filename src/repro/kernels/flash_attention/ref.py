@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the flash attention kernel: the materialized-scores
+reference from the model layer (single source of truth)."""
+from repro.models.attention import _sdpa_ref as sdpa_ref  # noqa: F401

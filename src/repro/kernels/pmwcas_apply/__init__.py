@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import pmwcas_success_pallas
+from .ops import pmwcas_apply, reserve_slots

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: batched deterministic MwCAS conflict resolution.
+
+The CPU paper resolves conflicts with CAS retry loops under cache
+coherence; the TPU has neither CAS nor coherence, so the adaptation
+(DESIGN.md Sec. 2.2) turns one *batch* of descriptors into a wait-free,
+deterministic verdict: descriptor i succeeds iff all its expected values
+match and no lower-index matching descriptor claims any of its target
+addresses.  The O(B^2 K^2) pairwise address comparison is VPU-shaped:
+tiles of the (slot x slot) boolean matrix evaluated in VMEM, accumulated
+over the j-tile grid dimension.
+
+Layout: addr/cur/exp are [B, K] (K static, small); B tiled by TB rows.
+Grid = (B/TB, B/TB); scratch holds the per-row "lose" accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(addr_i, cur_i, exp_i, addr_j, cur_j, exp_j, gi0, gj0,
+            success_ref, lose_ref, *, TB: int, K: int, n_j: int):
+    tj = pl.program_id(1)
+
+    @pl.when(tj == 0)
+    def _init():
+        lose_ref[...] = jnp.zeros_like(lose_ref)
+
+    ai = addr_i[...]                       # [TB, K] int32
+    aj = addr_j[...]
+    valid_i = ai >= 0
+    valid_j = aj >= 0
+    pass_i = jnp.where(valid_i, cur_i[...] == exp_i[...], True).all(axis=1)
+    pass_j = jnp.where(valid_j, cur_j[...] == exp_j[...], True).all(axis=1)
+
+    # pairwise same-address test over slots: [TB*K, TB*K]
+    fa_i = ai.reshape(TB * K, 1)
+    fa_j = aj.reshape(1, TB * K)
+    same = (fa_i == fa_j) & valid_i.reshape(TB * K, 1) \
+        & valid_j.reshape(1, TB * K)
+
+    # linearization: only LOWER global row index beats us
+    rows_i = gi0[0] + jax.lax.broadcasted_iota(jnp.int32, (TB, K), 0)
+    rows_j = gj0[0] + jax.lax.broadcasted_iota(jnp.int32, (TB, K), 0)
+    lower = rows_j.reshape(1, TB * K) < rows_i.reshape(TB * K, 1)
+    passj_slots = jnp.repeat(pass_j, K).reshape(1, TB * K)
+
+    lose_slots = (same & lower & passj_slots).any(axis=1)       # [TB*K]
+    lose_rows = lose_slots.reshape(TB, K).any(axis=1)
+    lose_ref[...] = lose_ref[...] | lose_rows
+
+    @pl.when(tj == n_j - 1)
+    def _finalize():
+        success_ref[...] = pass_i & ~lose_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def pmwcas_success_pallas(addr, cur, exp, *, tb: int = 128,
+                          interpret: bool = True):
+    """addr: int32[B,K] (<0 pad), cur/exp: uint32[B,K] -> bool[B]."""
+    B, K = addr.shape
+    TB = min(tb, B)
+    pad = (-B) % TB
+    if pad:
+        addr = jnp.pad(addr, ((0, pad), (0, 0)), constant_values=-1)
+        cur = jnp.pad(cur, ((0, pad), (0, 0)))
+        exp = jnp.pad(exp, ((0, pad), (0, 0)))
+    Bp = B + pad
+    n = Bp // TB
+    row0 = jnp.arange(n, dtype=jnp.int32) * TB                  # tile bases
+
+    grid = (n, n)
+    out = pl.pallas_call(
+        functools.partial(_kernel, TB=TB, K=K, n_j=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TB, K), lambda i, j: (i, 0)),   # addr_i
+            pl.BlockSpec((TB, K), lambda i, j: (i, 0)),   # cur_i
+            pl.BlockSpec((TB, K), lambda i, j: (i, 0)),   # exp_i
+            pl.BlockSpec((TB, K), lambda i, j: (j, 0)),   # addr_j
+            pl.BlockSpec((TB, K), lambda i, j: (j, 0)),   # cur_j
+            pl.BlockSpec((TB, K), lambda i, j: (j, 0)),   # exp_j
+            pl.BlockSpec((1,), lambda i, j: (i,)),        # gi0
+            pl.BlockSpec((1,), lambda i, j: (j,)),        # gj0
+        ],
+        out_specs=pl.BlockSpec((TB,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((TB,), jnp.bool_)],
+        interpret=interpret,
+    )(addr, cur, exp, addr, cur, exp, row0, row0)
+    return out[:B]

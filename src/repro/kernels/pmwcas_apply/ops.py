@@ -1,0 +1,47 @@
+"""Jit'd public op: batched MwCAS apply against a word table.
+
+Gather + scatter stay in XLA (they are memory-layout operations XLA
+already emits optimally); the Pallas kernel resolves conflicts.  On this
+CPU container the kernel runs in interpret mode; on TPU set
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import pmwcas_success_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def pmwcas_apply(words, addr, exp, des, *, use_kernel: bool = True,
+                 interpret: bool = True):
+    """words: uint32[W]; addr int32[B,K] (<0 pad); exp/des uint32[B,K].
+    Returns (new_words, success[B])."""
+    cur = words[jnp.maximum(addr, 0)]
+    if use_kernel:
+        success = pmwcas_success_pallas(addr, cur, exp, interpret=interpret)
+    else:
+        success = ref.pmwcas_success(addr, cur, exp)
+    valid = (addr >= 0) & success[:, None]
+    flat_addr = jnp.where(valid, addr, words.shape[0]).reshape(-1)
+    new = jnp.concatenate([words, jnp.zeros((1,), words.dtype)])
+    new = new.at[flat_addr].set(
+        jnp.where(valid.reshape(-1), des.reshape(-1), new[flat_addr]))
+    return new[:-1], success
+
+
+def reserve_slots(free_mask, requests, *, interpret: bool = True):
+    """KV-cache slot reservation for the serving layer: request i atomically
+    claims `requests[i]` slots (a K-word MwCAS on a free-bitmap word table).
+
+    free_mask: uint32[W] (1 = free); requests: int32[B, K] candidate slot ids
+    (<0 pad).  Returns (new_mask, granted[B]).
+    """
+    B, K = requests.shape
+    exp = jnp.ones((B, K), jnp.uint32)    # expect free
+    des = jnp.zeros((B, K), jnp.uint32)   # claim
+    return pmwcas_apply(free_mask, requests, exp, des, interpret=interpret)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the batched deterministic MwCAS primitive.
+
+Semantics ("conservative one-shot", DESIGN.md Sec. 2.2): descriptor i
+succeeds iff
+  (a) every target's current value equals its expected value, and
+  (b) for every target address, no lower-index descriptor that also
+      passes (a) targets the same address (index order = linearization,
+      the TPU-native replacement for embed-order).
+Each address is written at most once per batch; losers retry next round
+(the batched analogue of a failed CAS).  Padded slots have address < 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pmwcas_success(addr, cur, exp):
+    """addr: int32[B,K] (<0 = padding), cur/exp: uint32[B,K] -> bool[B]."""
+    B, K = addr.shape
+    valid = addr >= 0
+    slot_pass = jnp.where(valid, cur == exp, True)
+    row_pass = slot_pass.all(axis=1)                          # (a)
+
+    fa = addr.reshape(B * K)
+    fvalid = valid.reshape(B * K)
+    fpass = jnp.repeat(row_pass, K)                            # row (a) per slot
+    idx = jnp.repeat(jnp.arange(B), K)
+
+    same = (fa[:, None] == fa[None, :]) & fvalid[:, None] & fvalid[None, :]
+    lower = idx[None, :] < idx[:, None]
+    lose = (same & lower & fpass[None, :]).any(axis=1)         # (b)
+    row_lose = lose.reshape(B, K).any(axis=1)
+    return row_pass & ~row_lose
+
+
+def pmwcas_apply(words, addr, exp, des):
+    """Apply a batch of descriptors against a word table.
+
+    Returns (new_words, success[B]).  Winners' desired values are written;
+    by construction no address is written twice.
+    """
+    success = pmwcas_success(addr, words[jnp.maximum(addr, 0)], exp)
+    valid = (addr >= 0) & success[:, None]
+    flat_addr = jnp.where(valid, addr, words.shape[0]).reshape(-1)
+    flat_des = des.reshape(-1)
+    new = jnp.concatenate([words, jnp.zeros((1,), words.dtype)])
+    new = new.at[flat_addr].set(jnp.where(valid.reshape(-1), flat_des,
+                                          new[flat_addr]))
+    return new[:-1], success
+
+
+def sequential_oracle(words, addr, exp, des):
+    """True sequential one-touch application (numpy).  The conservative
+    parallel semantics must be a SUBSET of these successes, and must agree
+    wherever it succeeds."""
+    words = np.asarray(words).copy()
+    B, K = addr.shape
+    touched = set()
+    success = np.zeros(B, bool)
+    for i in range(B):
+        tgts = [(int(addr[i, k]), int(exp[i, k]), int(des[i, k]))
+                for k in range(K) if addr[i, k] >= 0]
+        if any(a in touched for a, _, _ in tgts):
+            continue
+        if all(words[a] == e for a, e, _ in tgts):
+            for a, _, d in tgts:
+                words[a] = d
+                touched.add(a)
+            success[i] = True
+    return words, success

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Writes one JSON per cell under experiments/dryrun/.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALIASES, ARCH_IDS, get_config, shapes_for, SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import build_cell, cell_model_config
+from repro.parallel.sharding import ShardingRules
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[sufb]\w?\d+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result-type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved by each collective kind (output-shape proxy)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLLECTIVES:
+            # match e.g. "bf16[8,128]{1,0} all-gather(" but not fusions
+            m = re.match(r"^\(?[^()]*\)?\s*" + kind + r"[\.\d]*\(", rhs)
+            if m:
+                out[kind] += _shape_bytes(rhs[:m.end()])
+                counts[kind] += 1
+                break
+    return out, counts
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             coll_bytes_per_device: float, n_chips: int):
+    compute_t = flops_per_device / mesh_lib.PEAK_FLOPS_BF16
+    memory_t = bytes_per_device / mesh_lib.HBM_BW
+    collective_t = coll_bytes_per_device / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = {k: (v / bound if bound else 0.0) for k, v in terms.items()}
+    return {**terms, "dominant": dom, "roofline_fraction_of_dominant": frac}
+
+
+def _compile_and_account(cfg, shape, mesh, rules_overrides):
+    """Compile one program; return (compiled, flops, bytes, coll, counts)."""
+    rules = None
+    if rules_overrides:
+        rules = ShardingRules(mesh=mesh, cfg=cell_model_config(cfg, shape),
+                              **rules_overrides)
+    cell = build_cell(cfg, shape, mesh, rules=rules)
+    compiled = cell.lower().compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll, counts = collective_bytes(hlo)
+    return (compiled, float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll, counts)
+
+
+def _accounting_cfgs(cfg, shape):
+    """1-unit and 2-unit fully-unrolled builds (+ seq reduction for the
+    sequential-scan xlstm blocks, whose cost is strictly linear in S)."""
+    import dataclasses as dc
+    u = len(cfg.unit)
+    seq_scale = 1.0
+    shape1 = shape2 = shape
+    if cfg.family == "ssm" and shape.mode != "decode":
+        from repro.configs.base import ShapeConfig
+        s_acc = min(shape.seq_len, 256)
+        seq_scale = shape.seq_len / s_acc
+        shape1 = shape2 = ShapeConfig(shape.name, s_acc, shape.global_batch,
+                                      shape.mode)
+    enc1 = min(cfg.n_enc_layers, 1) if cfg.enc_dec else 0
+    enc2 = min(cfg.n_enc_layers, 2) if cfg.enc_dec else 0
+    # cap inner-scan unroll lengths (mamba chunks) so accounting builds of
+    # hybrid stacks compile in minutes, not hours
+    mamba_chunk = max(256, shape1.seq_len // 4)
+    cfg1 = dc.replace(cfg, n_layers=u, n_enc_layers=enc1, unroll_scans=True,
+                      mamba_chunk=mamba_chunk)
+    cfg2 = dc.replace(cfg, n_layers=2 * u, n_enc_layers=enc2,
+                      unroll_scans=True, mamba_chunk=mamba_chunk)
+    return (cfg1, shape1), (cfg2, shape2), seq_scale
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             write: bool = True, rules_overrides=None, tag: str = ""):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rules = None
+    if rules_overrides:
+        rules = ShardingRules(mesh=mesh, cfg=cell_model_config(cfg, shape),
+                              **rules_overrides)
+
+    # 1. the deployment program: full scan (proves sharding + memory fit)
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, rules=rules)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+
+    # 2. accounting programs: XLA prices while bodies once, so derive
+    #    per-unit costs from 1- and 2-unit unrolled builds and extrapolate.
+    (cfg1, shape1), (cfg2, shape2), seq_scale = _accounting_cfgs(cfg, shape)
+    _, f1, b1, c1, n1 = _compile_and_account(cfg1, shape1, mesh,
+                                             rules_overrides)
+    _, f2, b2, c2, n2 = _compile_and_account(cfg2, shape2, mesh,
+                                             rules_overrides)
+    reps = cfg.n_units  # unit multiplicity in the deployment program
+
+    def extrap(x1, x2):
+        unit = max(0.0, x2 - x1)
+        return (x1 + (reps - 1) * unit) * seq_scale
+
+    flops = extrap(f1, f2)
+    bytes_accessed = extrap(b1, b2)
+    coll = {k: extrap(c1[k], c2[k]) for k in c1}
+    coll_counts = {k: int(extrap(n1[k], n2[k])) for k in n1}
+    total_coll = float(sum(coll.values()))
+
+    mcfg = cell_model_config(cfg, shape)
+    if shape.mode == "train":
+        model_flops = 6 * mcfg.n_active_params * shape.global_batch * \
+            shape.seq_len
+    elif shape.mode == "prefill":
+        model_flops = 2 * mcfg.n_active_params * shape.global_batch * \
+            shape.seq_len
+    else:
+        model_flops = 2 * mcfg.n_active_params * shape.global_batch
+
+    rf = roofline(flops, bytes_accessed, total_coll, n_chips)
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "n_chips": n_chips,
+        "mode": shape.mode,
+        "kv_dtype": mcfg.kv_dtype,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem,
+                                            "generated_code_size_in_bytes",
+                                            None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_accessed_per_device": bytes_accessed},
+        "collectives": {"bytes_per_device": coll, "counts": coll_counts,
+                        "total_bytes_per_device": total_coll},
+        "roofline": rf,
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flops_ratio":
+            (model_flops / n_chips) / flops if flops else None,
+        "accounting": {"flops_1unit": f1, "flops_2unit": f2,
+                       "bytes_1unit": b1, "bytes_2unit": b2,
+                       "seq_scale": seq_scale, "unit_reps": reps},
+        "tag": tag,
+    }
+    if write:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        name = f"{ALIASES.get(arch, arch)}_{shape_name}_" + \
+            ("mp" if multi_pod else "sp") + suffix + ".json"
+        (OUT_DIR / name).write_text(json.dumps(report, indent=1))
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ALIASES) if args.all or not args.arch else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = ([args.shape] if args.shape
+                       else [s.name for s in shapes_for(cfg)])
+        for sn in shape_names:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, sn, mp))
+
+    failures = []
+    for arch, sn, mp in cells:
+        name = f"{ALIASES.get(arch, arch)}_{sn}_" + ("mp" if mp else "sp")
+        if args.skip_existing and (OUT_DIR / f"{name}.json").exists():
+            print(f"[skip] {name}")
+            continue
+        print(f"[dryrun] {name} ...", flush=True)
+        try:
+            rep = run_cell(arch, sn, mp)
+            rf = rep["roofline"]
+            print(f"  ok: compute={rf['compute_s']:.4f}s "
+                  f"memory={rf['memory_s']:.4f}s "
+                  f"collective={rf['collective_s']:.4f}s "
+                  f"dominant={rf['dominant']} "
+                  f"(lower {rep['t_lower_s']}s compile {rep['t_compile_s']}s)",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((name, repr(e)))
+            print(f"  FAIL {name}: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells passed")
+    if failures:
+        for n, e in failures:
+            print(f"  FAILED: {n}: {e[:200]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

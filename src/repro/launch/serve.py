@@ -1,0 +1,99 @@
+"""Batched serving launcher with PMwCAS-style KV-slot admission.
+
+Continuous batching: requests arrive with prompt lengths; admission
+reserves per-request KV-cache pages through the batched deterministic
+MwCAS primitive (repro.kernels.pmwcas_apply) — the TPU-native analogue of
+the paper's multi-word reservation (all pages of a request are granted
+atomically or not at all, with index order as the linearization).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --requests 12 --steps 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels.pmwcas_apply import ops as mw_ops
+from repro.models import build_model
+
+
+class PageAllocator:
+    """KV-page table driven by batched MwCAS reservations."""
+
+    def __init__(self, n_pages: int):
+        self.free = jnp.ones(n_pages, jnp.uint32)
+        self.n_pages = n_pages
+
+    def admit(self, page_requests: np.ndarray):
+        """page_requests: int32[B, K] candidate page ids (<0 pad).
+        Returns granted: bool[B] — atomically all-or-nothing per request."""
+        self.free, granted = mw_ops.reserve_slots(
+            self.free, jnp.asarray(page_requests, jnp.int32))
+        return np.asarray(granted)
+
+    def release(self, pages):
+        self.free = self.free.at[jnp.asarray(pages)].set(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    alloc = PageAllocator(args.n_pages)
+
+    rng = np.random.default_rng(0)
+    pages_per_req = -(-(args.prompt_len + args.steps) // args.page_size)
+    # all requests propose pages simultaneously; MwCAS admission resolves
+    reqs = np.full((args.requests, pages_per_req), -1, np.int32)
+    cursor = 0
+    for i in range(args.requests):
+        reqs[i] = np.arange(cursor, cursor + pages_per_req) % args.n_pages
+        cursor += rng.integers(1, pages_per_req + 1)  # contended proposals
+    granted = alloc.admit(reqs)
+    admitted = np.nonzero(granted)[0]
+    print(f"admitted {len(admitted)}/{args.requests} requests "
+          f"(atomic page-group grants, zero partial allocations)")
+    if len(admitted) == 0:
+        return
+
+    B = len(admitted)
+    total = args.prompt_len + args.steps
+    tokens = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
+    cache = model.init_cache(B, total + cfg.frontend_len)
+    fe = (0.02 * np.ones((B, cfg.frontend_len, cfg.frontend_dim), np.float32)
+          if cfg.frontend != "none" else None)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    if fe is not None:
+        logits, cache = prefill(params, jnp.asarray(tokens), cache,
+                                jnp.asarray(fe))
+    else:
+        logits, cache = prefill(params, jnp.asarray(tokens), cache)
+    out = []
+    for _ in range(args.steps):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(nxt))
+        logits, cache = decode(params, nxt, cache)
+    gen = np.concatenate(out, axis=1)
+    print(f"generated {gen.shape} tokens for {B} admitted requests; "
+          f"sample row: {gen[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

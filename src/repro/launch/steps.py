@@ -1,0 +1,213 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``train_step`` (train_4k), ``prefill_step`` (prefill_32k) and
+``decode_step`` (decode_32k / long_500k) are the three programs the
+dry-run lowers and the launcher runs.  All inputs can be
+ShapeDtypeStructs (no allocation) — the same pattern the real launcher
+uses with concrete arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model, build_model
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# Cell = (arch config, shape config) + numeric policy decisions
+# ---------------------------------------------------------------------------
+
+def cell_model_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Per-cell numeric policy: int8 KV where bf16 cannot fit 16 GB/chip
+    (see EXPERIMENTS.md §Dry-run for the arithmetic)."""
+    if shape.is_decode and cfg.name == "qwen1.5-32b":
+        return dataclasses.replace(cfg, kv_dtype="int8")
+    return cfg
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    return specs
+
+
+def abstract_cache(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                model: Optional[Model] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = cell_model_config(cfg, shape)
+    model = model or build_model(cfg)
+    if shape.mode == "train":
+        return {"batch": abstract_batch(cfg, shape)}
+    if shape.mode == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        total = S + (cfg.frontend_len if cfg.frontend != "none"
+                     and not cfg.enc_dec else 0)  # vision/audio prefix
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "cache": abstract_cache(model, B, total)}
+        if cfg.frontend != "none":
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+        return out
+    # decode: one new token against a cache of seq_len
+    B, L = shape.global_batch, shape.seq_len
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": abstract_cache(model, B, L)}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+        params, opt_state, info = adamw.update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, tokens, cache, frontend_embeds=None):
+        return model.prefill(params, tokens, cache, frontend_embeds)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Jitted, sharded programs for one cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellProgram:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    rules: ShardingRules
+    jitted: Any          # the jit-wrapped step
+    args: Tuple          # ShapeDtypeStructs (or concrete arrays) to lower with
+    mode: str
+
+    def lower(self):
+        with self.mesh:
+            return self.jitted.lower(*self.args)
+
+
+def _sds_with(tree_specs, shardings):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_specs, shardings)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               opt_cfg: Optional[adamw.AdamWConfig] = None,
+               rules: Optional[ShardingRules] = None,
+               remat: bool = True) -> CellProgram:
+    cfg = cell_model_config(cfg, shape)
+    model = build_model(cfg)
+    rules = rules or ShardingRules(mesh=mesh, cfg=cfg)
+    # sequence-shard the residual stream only when training (decode S=1;
+    # prefill activations are transient, batch sharding suffices)
+    model.hints = rules.activation_hints(
+        shape.global_batch, shape.seq_len,
+        use_seq_sharding=(shape.mode == "train"))
+    aparams = model.abstract_params()
+    pspecs = rules.params_pspecs(aparams)
+    pshard = rules.to_named(pspecs)
+
+    if shape.mode == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        aopt = jax.eval_shape(functools.partial(adamw.init_state, opt_cfg),
+                              aparams)
+        # m/v/ef inherit the param spec; scalars replicated
+        ospecs = {
+            k: (pspecs if k in ("m", "v", "ef") else P())
+            for k in aopt
+        }
+        oshard = rules.to_named(ospecs)
+        abatch = abstract_batch(cfg, shape)
+        bshard = rules.to_named(rules.batch_pspecs(abatch))
+        step = make_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (_sds_with(aparams, pshard), _sds_with(aopt, oshard),
+                _sds_with(abatch, bshard))
+        return CellProgram(cfg, shape, mesh, rules, jitted, args, "train")
+
+    if shape.mode == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        total = S + (cfg.frontend_len if cfg.frontend != "none"
+                     and not cfg.enc_dec else 0)  # vision/audio prefix
+        acache = abstract_cache(model, B, total)
+        cshard = rules.to_named(rules.cache_pspecs(acache))
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        bspec = rules.batch_spec(B)
+        tshard = NamedSharding(mesh, P(
+            bspec if bspec and len(bspec) > 1 else
+            (bspec[0] if bspec else None), None))
+        step = make_prefill_step(model)
+        if cfg.frontend != "none":
+            fe = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.frontend_dim),
+                                      jnp.float32)
+            bax = bspec if bspec and len(bspec) > 1 else (
+                bspec[0] if bspec else None)
+            fshard = NamedSharding(mesh, P(bax, None, None))
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, tshard, cshard, fshard),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(2,))
+            args = (_sds_with(aparams, pshard), tok, acache, fe)
+        else:
+            jitted = jax.jit(step, in_shardings=(pshard, tshard, cshard),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(2,))
+            args = (_sds_with(aparams, pshard), tok, acache)
+        return CellProgram(cfg, shape, mesh, rules, jitted, args, "prefill")
+
+    # decode
+    B, L = shape.global_batch, shape.seq_len
+    acache = abstract_cache(model, B, L)
+    cshard = rules.to_named(rules.cache_pspecs(acache))
+    bspec = rules.batch_spec(B)
+    tshard = NamedSharding(mesh, P(
+        bspec if bspec and len(bspec) > 1 else
+        (bspec[0] if bspec else None), None))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    step = make_decode_step(model)
+    jitted = jax.jit(step, in_shardings=(pshard, tshard, cshard),
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+    args = (_sds_with(aparams, pshard), tok, acache)
+    return CellProgram(cfg, shape, mesh, rules, jitted, args, "decode")

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+Local run (CPU, smoke config):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 50
+
+Production lowering uses the same builder the dry-run proves
+(``repro.launch.steps.build_cell``); on a real cluster this binary runs
+once per host with jax.distributed initialized by the pod runtime.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.data.synthetic import DataConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--crash-at-step", type=int, default=None,
+                    help="inject a crash (fault-tolerance demos)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                total_steps=args.steps, weight_decay=0.0)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_async=args.ckpt_async, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(model, opt_cfg, data_cfg, tcfg)
+    params, opt, losses = trainer.run(crash_at_step=args.crash_at_step)
+    print(f"steps={len(losses)} first_loss={losses[0]:.4f} "
+          f"last_loss={losses[-1]:.4f} stragglers={trainer.stragglers}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

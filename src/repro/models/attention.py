@@ -1,0 +1,400 @@
+"""Grouped-query attention with the features the assigned archs need.
+
+Covered: GQA/MQA (kv groups), RoPE (partial rotation for glm4), QKV bias
+(qwen1.5), attention-logit softcapping + alternating local/global layers
+(gemma2), sliding windows, encoder-decoder cross attention (seamless),
+KV caches in bf16 or int8 (per-token-per-head scales), and three
+implementations of the core softmax(QK^T)V:
+
+- ``ref``      materialized [B,KV,G,S,S] scores -- the oracle
+- ``chunked``  online-softmax scan over KV chunks (flash-style, pure jnp;
+               the default: never materializes the full score matrix)
+- ``pallas``   the TPU kernel in repro.kernels.flash_attention
+
+All three are numerically interchangeable (tests assert allclose).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import KeyGen, apply_rope, make_param, softcap
+
+NEG_INF = -2.0 ** 20  # large-but-finite to keep softcap/tanh well-behaved
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(kg: KeyGen, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False,
+                   cross: bool = False) -> Dict[str, Any]:
+    p = {
+        "wq": make_param(kg(), (d_model, n_heads * head_dim), dtype),
+        "wk": make_param(kg(), (d_model, n_kv_heads * head_dim), dtype),
+        "wv": make_param(kg(), (d_model, n_kv_heads * head_dim), dtype),
+        "wo": make_param(kg(), (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Score-level mask
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """Additive bias [.., S_q, S_k] in f32."""
+    ok = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], jnp.bool_)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core softmax(QK^T)V implementations.  Layouts:
+#   q: [B, KV, G, S_q, hd]   k/v: [B, KV, S_k, hd]
+# ---------------------------------------------------------------------------
+
+def _sdpa_ref(q, k, v, q_pos, k_pos, *, causal, window, attn_cap, scale):
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_cap)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqc,bkcd->bkgqd", w.astype(v.dtype), v)
+
+
+def _chunk_kv(k, v, k_pos, chunk):
+    B, KV, Sk, hd = k.shape
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # pad sentinel: beyond the validity limit so every mask drops it
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2.0 ** 30)
+    kc = k.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    return kc, vc, pc, n_chunks, pad
+
+
+def _fmask_bias(q_pos, k_pos, causal: bool, window: int):
+    """Additive bias from float positions (custom_vjp-friendly)."""
+    ok = jnp.broadcast_to(k_pos[None, :] < 2.0 ** 29,   # drop pad sentinels
+                          q_pos.shape[-1:] + k_pos.shape[-1:])
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, attn_cap: float, scale: float,
+                chunk: int, unroll: bool):
+    """Flash attention in jnp with a recompute-based custom VJP.
+
+    Without this, differentiating through the online-softmax scan stores
+    per-chunk residuals (O(S^2 / chunk) memory) — the exact failure mode
+    flash attention exists to avoid.  Forward saves only (q, k, v, out, L);
+    backward recomputes scores chunk by chunk.
+    """
+
+    def fwd_pass(q, k, v, q_pos, k_pos):
+        B, KV, G, Sq, hd = q.shape
+        c = min(chunk, k.shape[2])
+        kc, vc, pc, n_chunks, _ = _chunk_kv(k, v, k_pos, c)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kb, vb, pb = xs
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, attn_cap)
+            s = s + _fmask_bias(q_pos, pb, causal, window)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vb.dtype),
+                vb).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc),
+                                  unroll=n_chunks if unroll else 1)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return out, lse
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_pos, k_pos):
+        return fwd_pass(q, k, v, q_pos, k_pos)[0]
+
+    def flash_fwd(q, k, v, q_pos, k_pos):
+        out, lse = fwd_pass(q, k, v, q_pos, k_pos)
+        return out, (q, k, v, q_pos, k_pos, out, lse)
+
+    def flash_bwd(res, do):
+        q, k, v, q_pos, k_pos, out, lse = res
+        B, KV, G, Sq, hd = q.shape
+        Sk = k.shape[2]
+        c = min(chunk, Sk)
+        kc, vc, pc, n_chunks, pad = _chunk_kv(k, v, k_pos, c)
+        do_f = do.astype(jnp.float32)
+        delta = jnp.sum(do_f * out.astype(jnp.float32), axis=-1)  # [B,KV,G,S]
+
+        def body(dq, xs):
+            kb, vb, pb = xs
+            sraw = jnp.einsum("bkgqd,bkcd->bkgqc", q, kb,
+                              preferred_element_type=jnp.float32) * scale
+            s = softcap(sraw, attn_cap)
+            s = s + _fmask_bias(q_pos, pb, causal, window)
+            p = jnp.exp(s - lse[..., None])                       # true probs
+            dv = jnp.einsum("bkgqc,bkgqd->bkcd", p, do_f)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_f,
+                            vb.astype(jnp.float32))
+            ds = p * (dp - delta[..., None])
+            if attn_cap > 0.0:
+                th = jnp.tanh(sraw * (1.0 / attn_cap))
+                ds = ds * (1.0 - th * th)
+            dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds,
+                                 kb.astype(jnp.float32)) * scale
+            dk = jnp.einsum("bkgqc,bkgqd->bkcd", ds,
+                            q.astype(jnp.float32)) * scale
+            return dq, (dk, dv)
+
+        dq0 = jnp.zeros(q.shape, jnp.float32)
+        dq, (dk_c, dv_c) = lax.scan(body, dq0, (kc, vc, pc),
+                                    unroll=n_chunks if unroll else 1)
+        dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(B, KV, n_chunks * c, hd)
+        dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(B, KV, n_chunks * c, hd)
+        if pad:
+            dk, dv = dk[:, :, :Sk], dv[:, :, :Sk]
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                jnp.zeros_like(q_pos), jnp.zeros_like(k_pos))
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, attn_cap, scale,
+                  chunk: int = 1024, unroll: bool = False):
+    """Flash-style attention: online softmax fwd + recompute bwd."""
+    fn = _make_flash(bool(causal), int(window), float(attn_cap),
+                     float(scale), int(chunk), bool(unroll))
+    return fn(q, k, v, q_pos.astype(jnp.float32), k_pos.astype(jnp.float32))
+
+
+def _sdpa_chunked_quant(q, k8, ks, v8, vs, q_pos, k_pos, *, causal, window,
+                        attn_cap, scale, chunk: int = 16384):
+    """Online-softmax attention DIRECTLY over an int8 KV cache: dequantize
+    chunk-by-chunk inside the scan so the bf16 copy of the full cache never
+    materializes (a whole-cache dequant costs B*KV*L*hd*2 bytes of temp —
+    21 GiB/device for qwen1.5-32B decode_32k).  Forward-only (decode)."""
+    B, KV, G, Sq, hd = q.shape
+    Sk = k8.shape[2]
+    c = min(chunk, Sk)
+    n_chunks = -(-Sk // c)
+    pad = n_chunks * c - Sk
+    if pad:
+        k8 = jnp.pad(k8, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v8 = jnp.pad(v8, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2.0 ** 30)
+    kc = k8.reshape(B, KV, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+    vc = v8.reshape(B, KV, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+    ksc = ks.reshape(B, KV, n_chunks, c).transpose(2, 0, 1, 3)
+    vsc = vs.reshape(B, KV, n_chunks, c).transpose(2, 0, 1, 3)
+    pc = k_pos.reshape(n_chunks, c).astype(jnp.float32)
+    q_posf = q_pos.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb8, vb8, ksb, vsb, pb = xs
+        kb = kb8.astype(jnp.float32) * ksb[..., None]
+        vb = vb8.astype(jnp.float32) * vsb[..., None]
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q.astype(jnp.float32), kb) * scale
+        s = softcap(s, attn_cap)
+        s = s + _fmask_bias(q_posf, pb, causal, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgqc,bkcd->bkgqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, ksc, vsc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _sdpa_pallas(q, k, v, q_pos, k_pos, **kw):
+    from repro.kernels.flash_attention import ops as fa_ops
+    return fa_ops.flash_attention(q, k, v, q_pos, k_pos, **kw)
+
+
+_IMPLS = {"ref": _sdpa_ref, "chunked": _sdpa_chunked, "pallas": _sdpa_pallas}
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 or int8 with per-token-per-head scales)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, n_kv_heads: int, max_len: int, head_dim: int,
+                  kv_dtype: str, n_layers: int) -> Dict[str, Any]:
+    """Stacked-over-layers cache (leading dim matches the layer scan)."""
+    if kv_dtype == "int8":
+        z8 = jnp.zeros((n_layers, batch, n_kv_heads, max_len, head_dim),
+                       jnp.int8)
+        sc = jnp.zeros((n_layers, batch, n_kv_heads, max_len), jnp.float32)
+        return {"k": z8, "v": z8, "k_scale": sc, "v_scale": sc,
+                "index": jnp.zeros((), jnp.int32)}
+    zb = jnp.zeros((n_layers, batch, n_kv_heads, max_len, head_dim),
+                   jnp.bfloat16)
+    return {"k": zb, "v": zb, "index": jnp.zeros((), jnp.int32)}
+
+
+def _quant(x):
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x / scale[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_update(layer_cache, k_new, v_new, index):
+    """Write [B,KV,S,hd] at position `index`; returns updated layer cache."""
+    out = dict(layer_cache)
+    if layer_cache["k"].dtype == jnp.int8:
+        kq, ks = _quant(k_new)
+        vq, vs = _quant(v_new)
+        out["k"] = lax.dynamic_update_slice_in_dim(layer_cache["k"], kq,
+                                                   index, axis=2)
+        out["v"] = lax.dynamic_update_slice_in_dim(layer_cache["v"], vq,
+                                                   index, axis=2)
+        out["k_scale"] = lax.dynamic_update_slice_in_dim(
+            layer_cache["k_scale"], ks, index, axis=2)
+        out["v_scale"] = lax.dynamic_update_slice_in_dim(
+            layer_cache["v_scale"], vs, index, axis=2)
+    else:
+        out["k"] = lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k_new.astype(layer_cache["k"].dtype), index,
+            axis=2)
+        out["v"] = lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v_new.astype(layer_cache["v"].dtype), index,
+            axis=2)
+    return out
+
+
+def cache_kv(layer_cache, dtype):
+    if layer_cache["k"].dtype == jnp.int8:
+        k = _dequant(layer_cache["k"], layer_cache["k_scale"], dtype)
+        v = _dequant(layer_cache["v"], layer_cache["v_scale"], dtype)
+        return k, v
+    return layer_cache["k"].astype(dtype), layer_cache["v"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer
+# ---------------------------------------------------------------------------
+
+def attention(p, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
+              positions, causal: bool = True, window: int = 0,
+              rotary_fraction: float = 1.0, rope_theta: float = 10_000.0,
+              use_rope: bool = True, attn_cap: float = 0.0,
+              impl: str = "chunked", chunk: int = 1024,
+              unroll: bool = False,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              k_positions=None,
+              layer_cache: Optional[Dict[str, Any]] = None,
+              cache_index=None):
+    """One attention sublayer.
+
+    - self-attention (train/prefill): kv=None, layer_cache=None
+    - cross-attention: kv=(k_mem, v_mem) precomputed from the encoder
+    - cached decode/prefill: layer_cache set; writes at cache_index
+    Returns (output [B,S,D], updated layer_cache or None).
+    """
+    B, S, _ = x.shape
+    G = n_heads // n_kv_heads
+    q = (x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)).reshape(
+        B, S, n_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rotary_fraction, rope_theta)
+
+    if kv is not None:                       # cross-attention memory
+        k, v = kv
+        k_pos = (k_positions if k_positions is not None
+                 else jnp.arange(k.shape[2]))
+        new_cache = None
+    else:
+        k = (x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)).reshape(
+            B, S, n_kv_heads, head_dim)
+        v = (x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)).reshape(
+            B, S, n_kv_heads, head_dim)
+        if use_rope:
+            k = apply_rope(k, positions, rotary_fraction, rope_theta)
+        k = k.transpose(0, 2, 1, 3)          # [B,KV,S,hd]
+        v = v.transpose(0, 2, 1, 3)
+        if layer_cache is not None:
+            new_cache = cache_update(layer_cache, k, v, cache_index)
+            if new_cache["k"].dtype == jnp.int8:
+                # fused per-chunk dequantization — never materialize the
+                # bf16 copy of the whole cache
+                k_pos = jnp.arange(new_cache["k"].shape[2])
+                qg = q.reshape(B, S, n_kv_heads, n_heads // n_kv_heads,
+                               head_dim).transpose(0, 2, 3, 1, 4)
+                out = _sdpa_chunked_quant(
+                    qg, new_cache["k"], new_cache["k_scale"],
+                    new_cache["v"], new_cache["v_scale"], positions, k_pos,
+                    causal=causal, window=window, attn_cap=attn_cap,
+                    scale=1.0 / np.sqrt(head_dim))
+                out = out.transpose(0, 3, 1, 2, 4).reshape(
+                    B, S, n_heads * head_dim)
+                return out @ p["wo"], new_cache
+            k, v = cache_kv(new_cache, x.dtype)
+            k_pos = jnp.arange(k.shape[2])
+        else:
+            new_cache = None
+            k_pos = positions
+
+    qg = q.reshape(B, S, n_kv_heads, G, head_dim).transpose(0, 2, 3, 1, 4)
+    scale = 1.0 / np.sqrt(head_dim)
+    kw = dict(causal=causal, window=window, attn_cap=attn_cap, scale=scale)
+    if impl == "chunked":
+        kw.update(chunk=chunk, unroll=unroll)
+    out = _IMPLS[impl](qg, k, v, positions, k_pos, **kw)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+def precompute_cross_kv(p, memory, n_kv_heads: int, head_dim: int):
+    """Encoder memory -> (k, v) in [B,KV,S,hd] for decoder cross-attention."""
+    B, S, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (memory @ p["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)

@@ -1,0 +1,147 @@
+"""Shared neural-net building blocks (pure JAX, params as pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16, "int8": jnp.int8}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers.  All param-producing code goes through `make_param` so that
+# abstract (shape-only) initialization works with jax.eval_shape for dry runs.
+# ---------------------------------------------------------------------------
+
+def make_param(key, shape, dtype, scale: float = 1.0, mode: str = "normal"):
+    if mode == "zeros":
+        return jnp.zeros(shape, dtype)
+    if mode == "ones":
+        return jnp.ones(shape, dtype)
+    fan_in = shape[0] if len(shape) > 1 else max(1, shape[0])
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+class KeyGen:
+    """Splittable key source so init code stays linear to read."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping."""
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial rotation supported for glm4)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_fraction: float, theta: float):
+    rot_dim = int(head_dim * rotary_fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot_dim, 2) / rot_dim))
+    return rot_dim, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x, positions, rotary_fraction: float = 1.0,
+               theta: float = 10_000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    rot_dim, inv = rope_freqs(head_dim, rotary_fraction, theta)
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # [..,S,1,rd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama-family) -- also used per-expert by MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    return {
+        "wi_gate": make_param(kg(), (d_model, d_ff), dtype),
+        "wi_up": make_param(kg(), (d_model, d_ff), dtype),
+        "wo": make_param(kg(), (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(p, x, act: str = "silu"):
+    h = act_fn(act)(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(kg: KeyGen, vocab: int, d_model: int, dtype,
+               tie: bool) -> Dict[str, Any]:
+    p = {"embedding": make_param(kg(), (vocab, d_model), dtype, scale=1.0)}
+    if not tie:
+        p["lm_head"] = make_param(kg(), (d_model, vocab), dtype)
+    return p
+
+
+def embed_tokens(p, tokens, scale_embed: bool, d_model: int, dtype):
+    x = p["embedding"][tokens].astype(dtype)
+    if scale_embed:
+        x = x * jnp.asarray(np.sqrt(d_model), dtype)
+    return x
+
+
+def unembed(p, x, logit_cap: float = 0.0, n_valid: int = 0):
+    if "lm_head" in p:
+        logits = x @ p["lm_head"]
+    else:
+        logits = x @ p["embedding"].astype(x.dtype).T
+    logits = softcap(logits.astype(jnp.float32), logit_cap)
+    V = logits.shape[-1]
+    if n_valid and n_valid < V:
+        # vocab-padding columns must never win a softmax/argmax
+        mask = jnp.where(jnp.arange(V) < n_valid, 0.0, -1e9)
+        logits = logits + mask
+    return logits
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Stable CE over (possibly vocab-sharded) logits.  [B,S,V] x [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return loss.mean()

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Dispatch uses scatter/gather with a per-expert capacity bound (tokens over
+capacity are dropped, residual passes through) — the standard TPU-friendly
+formulation: dense einsums over a [E, C, D] buffer, expert dim shardable
+over the "model"/"expert" mesh axis (EP).  XLA SPMD inserts the all-to-all
+style collectives from the sharding constraints; the explicit schedule is a
+hill-climb lever (EXPERIMENTS.md §Perf).
+
+The expert-capacity *reservation* itself is an instance of the paper's
+multi-word atomic reservation problem — see repro.kernels.pmwcas_apply for
+the batched variant used by the serving layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import KeyGen, act_fn, make_param
+
+
+def init_moe(kg: KeyGen, d_model: int, n_experts: int, d_ff: int,
+             dtype) -> Dict[str, Any]:
+    return {
+        "router": make_param(kg(), (d_model, n_experts), jnp.float32),
+        "wi_gate": make_param(kg(), (n_experts, d_model, d_ff), dtype),
+        "wi_up": make_param(kg(), (n_experts, d_model, d_ff), dtype),
+        "wo": make_param(kg(), (n_experts, d_ff, d_model), dtype),
+    }
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(n_tokens * top_k * capacity_factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8 for layout
+
+
+def apply_moe(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu", ecd_hint=None, gather_hint=None,
+              groups: int = 1, group_hint=None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    groups > 1 enforces capacity PER GROUP (= per data shard on the
+    production mesh, Switch-style) and — crucially — makes every dispatch
+    gather/scatter local to its group, so GSPMD never re-replicates the
+    buffers (the hill-climb measurement behind this is in EXPERIMENTS.md
+    §Perf, granite cell)."""
+    B, S, D = x.shape
+    N_all = B * S
+    if groups > 1 and N_all % groups == 0:
+        xg = x.reshape(groups, N_all // groups, 1, D)
+        if group_hint is not None:
+            xg = jax.lax.with_sharding_constraint(xg, group_hint)
+        yg, aux = jax.vmap(
+            lambda xi: apply_moe(p, xi, top_k=top_k,
+                                 capacity_factor=capacity_factor, act=act,
+                                 groups=1))(xg)
+        if group_hint is not None:
+            yg = jax.lax.with_sharding_constraint(yg, group_hint)
+        return yg.reshape(B, S, D), aux.mean()
+    E = p["router"].shape[1]
+    N = B * S
+    C = _capacity(N, E, top_k, capacity_factor)
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)      # [N, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert, in token order.
+    # sort-based ranking: O(NK log NK) and O(NK) memory — a [NK, E] one-hot
+    # cumsum would lower to reduce-window (quadratic cost) and 4 GB buffers.
+    flat_e = expert_ids.reshape(N * top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=E)                  # tokens/expert
+    starts = jnp.cumsum(counts) - counts                     # [E]
+    ranks_sorted = jnp.arange(N * top_k) - starts[flat_e[order]]
+    pos = jnp.zeros(N * top_k, jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32)).reshape(N, top_k)
+    keep = pos < C
+
+    # gather-based dispatch: a scatter-add into the [E*C, D] buffer forces
+    # GSPMD to replicate the operand (measured: 242 GiB/device on granite);
+    # the equivalent gather from the expert-sorted token stream stays
+    # sharded.  idx[e, c] = position of expert e's c-th assignment in the
+    # sorted stream; its token id indexes xf directly.
+    slot = jnp.where(keep, expert_ids * C + pos, E * C)       # for combine
+    tok_of = (order // top_k).astype(jnp.int32)               # [N*K]
+    grid = starts[:, None] + jnp.arange(C)[None, :]           # [E, C]
+    in_cap = jnp.arange(C)[None, :] < counts[:, None]
+    src = jnp.where(in_cap,
+                    tok_of[jnp.clip(grid, 0, N * top_k - 1)], N)
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, D), x.dtype)])
+    xe = xf_pad[src]                                          # [E, C, D]
+    if ecd_hint is not None:
+        xe = jax.lax.with_sharding_constraint(xe, ecd_hint)
+
+    # expert FFNs as batched einsums (E shardable)
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["wi_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # [E, C, D]
+    if ecd_hint is not None:
+        ye = jax.lax.with_sharding_constraint(ye, ecd_hint)
+
+    # gather back and combine with gates
+    gathered = ye.reshape(E * C, D)[jnp.minimum(slot, E * C - 1).reshape(-1)]
+    gathered = gathered.reshape(N, top_k, D)
+    if gather_hint is not None:
+        gathered = jax.lax.with_sharding_constraint(gathered, gather_hint)
+    w = (gate_vals * keep).astype(x.dtype)                    # dropped -> 0
+    y = jnp.einsum("nkd,nk->nd", gathered, w)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                   # [E]
+    ce = counts.astype(jnp.float32) / (N * top_k)             # dispatch frac
+    aux = E * jnp.sum(me * ce)
+
+    return y.reshape(B, S, D), aux
+
+
+def apply_moe_dense(p, x, *, top_k: int, act: str = "silu"):
+    """Dropless MoE for decode (S==1, N small): compute every expert and
+    combine with the normalized top-k gates.  Exactly the capacity path's
+    math with zero drops; decode is weight-read-bound anyway, so computing
+    all experts costs no extra memory traffic per expert touched."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    xf = x.reshape(B * S, D)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    w = (jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)
+         * gate_vals[..., None]).sum(axis=1)                   # [N, E]
+
+    h = act_fn(act)(jnp.einsum("nd,edf->nef", xf, p["wi_gate"])) * \
+        jnp.einsum("nd,edf->nef", xf, p["wi_up"])
+    ye = jnp.einsum("nef,efd->ned", h, p["wo"])                # [N, E, D]
+    y = jnp.einsum("ned,ne->nd", ye, w.astype(ye.dtype))
+    return y.reshape(B, S, D), jnp.zeros((), jnp.float32)

@@ -1,0 +1,126 @@
+"""Mamba (selective state-space) block — used by jamba and available to any
+hybrid stack.  Chunked associative-scan training path + O(1)-state decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import KeyGen, make_param
+
+
+def init_mamba(kg: KeyGen, d_model: int, dtype, d_state: int = 16,
+               d_conv: int = 4, expand: int = 2,
+               dt_rank: int = 0) -> Dict[str, Any]:
+    d_in = expand * d_model
+    dt_rank = dt_rank or -(-d_model // 16)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": make_param(kg(), (d_model, 2 * d_in), dtype),
+        "conv_w": make_param(kg(), (d_conv, d_in), dtype, scale=1.0),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": make_param(kg(), (d_in, dt_rank + 2 * d_state), dtype),
+        "dt_proj_w": make_param(kg(), (dt_rank, d_in), dtype),
+        "dt_proj_b": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": make_param(kg(), (d_in, d_model), dtype),
+    }
+
+
+def _ssm_scan_chunk(dA, dBx, h0):
+    """Associative scan within a chunk.  dA, dBx: [B, L, d_in, N]."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bx = lax.associative_scan(combine, (dA, dBx), axis=1)
+    # fold in the carried-in state
+    Bx = Bx + A * h0[:, None]
+    return Bx  # h_t for every t in chunk
+
+
+def _selective_ssm(p, x, h0, chunk: int, unroll: bool = False):
+    """x: [B, L, d_in] post-conv.  Returns (y, h_final)."""
+    B, L, d_in = x.shape
+    d_state = p["a_log"].shape[1]
+    dt_rank = p["x_proj"].shape[1] - 2 * d_state
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj_w"]
+        + p["dt_proj_b"]).astype(jnp.float32)                 # [B,L,d_in]
+    Bm = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                                  # [d_in, N]
+
+    dA = jnp.exp(dt[..., None] * A)                           # [B,L,d_in,N]
+    dBx = (dt * x.astype(jnp.float32))[..., None] * Bm[..., None, :]
+
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dA = dA.reshape(B, n_chunks, chunk, d_in, d_state).transpose(1, 0, 2, 3, 4)
+    dBx = dBx.reshape(B, n_chunks, chunk, d_in, d_state).transpose(1, 0, 2, 3, 4)
+
+    def body(h, xs):
+        dAc, dBxc = xs
+        hs = _ssm_scan_chunk(dAc, dBxc, h)
+        return hs[:, -1], hs
+
+    h_final, hs = lax.scan(body, h0, (dA, dBx),
+                           unroll=n_chunks if unroll else 1)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk,
+                                             d_in, d_state)[:, :L]
+    y = jnp.einsum("blds,bls->bld", hs, Cm)
+    y = y + x.astype(jnp.float32) * p["d_skip"]
+    return y, h_final
+
+
+def apply_mamba(p, x, *, chunk: int = 256, unroll: bool = False,
+                state: Optional[Dict[str, Any]] = None,
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """x: [B, S, D].  state (decode): {"conv": [B,d_conv-1,d_in],
+    "ssm": [B,d_in,N]}.  Returns (y [B,S,D], new_state or None)."""
+    B, S, D = x.shape
+    d_in = p["in_proj"].shape[1] // 2
+    d_conv = p["conv_w"].shape[0]
+    d_state = p["a_log"].shape[1]
+
+    xz = x @ p["in_proj"]
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+
+    # causal depthwise conv over the sequence
+    if state is not None:
+        hist = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+    else:
+        hist = jnp.pad(xs, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    windows = jnp.stack([hist[:, i:i + S] for i in range(d_conv)], axis=2)
+    xc = jnp.einsum("bswd,wd->bsd", windows, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, d_in, d_state), jnp.float32))
+    y, h_final = _selective_ssm(p, xc, h0, chunk, unroll)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": hist[:, -(d_conv - 1):].astype(jnp.float32),
+                     "ssm": h_final}
+    return out, new_state
+
+
+def init_mamba_state(batch: int, d_model: int, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2) -> Dict[str, Any]:
+    d_in = expand * d_model
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_in), jnp.float32),
+            "ssm": jnp.zeros((batch, d_in, d_state), jnp.float32)}

@@ -1,0 +1,413 @@
+"""Model assembly: embeddings -> scanned unit stack -> logits.
+
+One ``Model`` class covers all ten assigned architectures:
+- decoder-only dense / MoE / SSM / xLSTM / hybrid stacks (repeating units)
+- encoder-decoder (seamless-m4t) with cross-attention
+- modality frontends as stubs: precomputed patch/frame embeddings are inputs
+  (per the assignment, the backbone is what we model)
+
+Layer stacks lower through a single ``lax.scan`` over stacked unit params
+(remat-wrapped), so 64-layer configs compile one unit body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import (KeyGen, cross_entropy, dtype_of, embed_tokens,
+                     init_embed, init_mlp, apply_mlp, make_param, rms_norm,
+                     softcap, unembed)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+        self.param_dtype = dtype_of(cfg.param_dtype)
+        # optional NamedSharding hints ("act", "logits", "moe_ecd") set by
+        # the launcher; they anchor XLA's sharding propagation
+        self.hints = {}
+
+    def _hint(self, x, name):
+        h = self.hints.get(name)
+        if h is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, h)
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, kg: KeyGen, spec: LayerSpec,
+                    cross: bool = False) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.param_dtype
+        p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if spec.kind == "attn":
+            p["attn"] = attn_mod.init_attention(
+                kg, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, dt, cfg.qkv_bias)
+        elif spec.kind == "mamba":
+            m = cfg.mamba or MambaConfig()
+            p["mamba"] = ssm_mod.init_mamba(
+                kg, cfg.d_model, dt, m.d_state, m.d_conv, m.expand, m.dt_rank)
+        elif spec.kind == "mlstm":
+            x = cfg.xlstm
+            p["mlstm"] = xlstm_mod.init_mlstm(kg, cfg.d_model, cfg.n_heads,
+                                              dt, x.proj_factor)
+        elif spec.kind == "slstm":
+            x = cfg.xlstm
+            p["slstm"] = xlstm_mod.init_slstm(kg, cfg.d_model, cfg.n_heads,
+                                              dt, x.proj_factor)
+        if cross:
+            p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["cross"] = attn_mod.init_attention(
+                kg, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, dt, False, cross=True)
+        if spec.ffn != "none":
+            p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if spec.ffn == "dense":
+            p["mlp"] = init_mlp(kg, cfg.d_model, cfg.d_ff, dt)
+        elif spec.ffn == "moe":
+            p["moe"] = moe_mod.init_moe(kg, cfg.d_model, cfg.moe.n_experts,
+                                        cfg.moe.d_ff, dt)
+        return p
+
+    def _init_unit(self, kg: KeyGen, cross: bool = False) -> Dict[str, Any]:
+        return {f"layer{i}": self._init_layer(kg, spec, cross)
+                for i, spec in enumerate(self.cfg.unit)}
+
+    def init_params(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        kg = KeyGen(key)
+        params: Dict[str, Any] = {}
+        params.update(init_embed(kg, cfg.padded_vocab, cfg.d_model,
+                                 self.param_dtype, cfg.tie_embeddings))
+        cross = cfg.enc_dec
+        units = [self._init_unit(kg, cross) for _ in range(cfg.n_units)]
+        params["units"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *units)
+        params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.enc_dec:
+            enc_spec = LayerSpec(kind="attn", attn_type="global", ffn="dense")
+            enc_units = [
+                {"layer0": self._init_layer(kg, enc_spec)}
+                for _ in range(cfg.n_enc_layers)]
+            params["encoder"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *enc_units)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.frontend != "none":
+            params["frontend_proj"] = make_param(
+                kg(), (cfg.frontend_dim, cfg.d_model), self.param_dtype)
+        return params
+
+    def abstract_params(self):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return jax.eval_shape(self.init_params, key)
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int):
+        """Decode cache: one entry per unit position, stacked over units."""
+        cfg = self.cfg
+        per_pos = {}
+        for i, spec in enumerate(cfg.unit):
+            if spec.kind == "attn":
+                c = attn_mod.init_kv_cache(
+                    batch, cfg.n_kv_heads, max_len, cfg.resolved_head_dim,
+                    cfg.kv_dtype, cfg.n_units)
+                c.pop("index")
+                per_pos[f"layer{i}"] = c
+            elif spec.kind == "mamba":
+                m = cfg.mamba
+                s = ssm_mod.init_mamba_state(batch, cfg.d_model, m.d_state,
+                                             m.d_conv, m.expand)
+                per_pos[f"layer{i}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.n_units,) + x.shape), s)
+            elif spec.kind == "mlstm":
+                s = xlstm_mod.init_mlstm_state(batch, cfg.d_model,
+                                               cfg.n_heads,
+                                               cfg.xlstm.proj_factor)
+                per_pos[f"layer{i}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.n_units,) + x.shape), s)
+            elif spec.kind == "slstm":
+                s = xlstm_mod.init_slstm_state(batch, cfg.d_model,
+                                               cfg.xlstm.proj_factor)
+                per_pos[f"layer{i}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.n_units,) + x.shape), s)
+        cache = {"layers": per_pos, "index": jnp.zeros((), jnp.int32)}
+        if cfg.enc_dec:
+            cache["cross_k"] = jnp.zeros(
+                (cfg.n_units, batch, cfg.n_kv_heads, cfg.frontend_len,
+                 cfg.resolved_head_dim), self.dtype)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    # -------------------------------------------------------------- sublayer
+    def _apply_layer(self, spec: LayerSpec, p, x, *, positions,
+                     layer_cache=None, cache_index=None, cross_kv=None,
+                     causal=True):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        new_cache = layer_cache
+        if spec.kind == "attn":
+            window = cfg.sliding_window if spec.attn_type == "local" else 0
+            chunk = (cfg.decode_chunk if h.shape[1] == 1 else cfg.attn_chunk)
+            y, upd = attn_mod.attention(
+                p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                causal=causal, window=window,
+                rotary_fraction=cfg.rotary_fraction,
+                rope_theta=cfg.rope_theta, attn_cap=cfg.attn_softcap,
+                impl=cfg.attn_impl, chunk=chunk, unroll=cfg.unroll_scans,
+                layer_cache=layer_cache,
+                cache_index=cache_index)
+            if upd is not None:
+                new_cache = upd
+        elif spec.kind == "mamba":
+            y, upd = ssm_mod.apply_mamba(p["mamba"], h,
+                                         chunk=cfg.mamba_chunk,
+                                         unroll=cfg.unroll_scans,
+                                         state=layer_cache)
+            if upd is not None:
+                new_cache = upd
+        elif spec.kind == "mlstm":
+            y, upd = xlstm_mod.apply_mlstm(p["mlstm"], h,
+                                           n_heads=cfg.n_heads,
+                                           chunk=cfg.xlstm.chunk,
+                                           state=layer_cache,
+                                           hint=self.hints.get("state_b"))
+            if upd is not None:
+                new_cache = upd
+        elif spec.kind == "slstm":
+            y, upd = xlstm_mod.apply_slstm(p["slstm"], h, state=layer_cache,
+                                           hint=self.hints.get("state_b"))
+            if upd is not None:
+                new_cache = upd
+        else:
+            raise ValueError(spec.kind)
+        x = x + y
+
+        if cross_kv is not None and "cross" in p:
+            h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            y, _ = attn_mod.attention(
+                p["cross"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                causal=False, use_rope=False, impl=cfg.attn_impl,
+                kv=cross_kv)
+            x = x + y
+
+        if spec.ffn == "dense":
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + apply_mlp(p["mlp"], h, cfg.act)
+        elif spec.ffn == "moe":
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if h.shape[1] == 1:  # decode: dropless all-experts path
+                y, a = moe_mod.apply_moe_dense(p["moe"], h,
+                                               top_k=cfg.moe.top_k,
+                                               act=cfg.act)
+            else:
+                y, a = moe_mod.apply_moe(
+                    p["moe"], h, top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
+                    ecd_hint=self.hints.get("moe_ecd"),
+                    gather_hint=self.hints.get("moe_gather"),
+                    groups=self.hints.get("moe_groups", 1),
+                    group_hint=self.hints.get("moe_grp"))
+            x = x + y
+            aux = aux + a
+        return x, new_cache, aux
+
+    # ---------------------------------------------------------------- stacks
+    def _run_units(self, params, x, *, positions, cache=None,
+                   cache_index=None, causal=True, remat=True):
+        cfg = self.cfg
+
+        def unit_body(carry, xs):
+            x, aux = carry
+            x = self._hint(x, "act")
+            if cache is None:
+                unit_p = xs
+                unit_c = {}
+                cross_kv = None
+            elif cfg.enc_dec:
+                unit_p, unit_c, ck, cv = xs
+                cross_kv = (ck, cv)
+            else:
+                unit_p, unit_c = xs
+                cross_kv = None
+            new_c = {}
+            for i, spec in enumerate(cfg.unit):
+                name = f"layer{i}"
+                x, nc, a = self._apply_layer(
+                    spec, unit_p[name], x, positions=positions,
+                    layer_cache=unit_c.get(name), cache_index=cache_index,
+                    cross_kv=cross_kv, causal=causal)
+                if nc is not None:
+                    new_c[name] = nc
+                aux = aux + a
+            return (x, aux), new_c
+
+        body = unit_body
+        if remat:
+            body = jax.checkpoint(unit_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+
+        if cache is None:
+            xs = params["units"]
+        elif cfg.enc_dec:
+            xs = (params["units"], cache["layers"], cache["cross_k"],
+                  cache["cross_v"])
+        else:
+            xs = (params["units"], cache["layers"])
+
+        (x, aux), new_layers = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs,
+            unroll=cfg.n_units if cfg.unroll_scans else 1)
+        return x, aux, new_layers
+
+    def _run_encoder(self, params, x):
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])
+        enc_spec = LayerSpec(kind="attn", attn_type="global", ffn="dense")
+
+        def body(x, layer_p):
+            x = self._hint(x, "act")
+            x, _, _ = self._apply_layer(enc_spec, layer_p["layer0"], x,
+                                        positions=positions, causal=False)
+            return x, None
+
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = lax.scan(body, x, params["encoder"],
+                        unroll=cfg.n_enc_layers if cfg.unroll_scans else 1)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, tokens, frontend_embeds=None):
+        cfg = self.cfg
+        x = self._hint(embed_tokens(params, tokens, cfg.scale_embed,
+                                    cfg.d_model, self.dtype), "act")
+        if cfg.frontend != "none" and not cfg.enc_dec:
+            assert frontend_embeds is not None, \
+                f"{cfg.name} requires frontend embeddings"
+            prefix = (frontend_embeds.astype(self.dtype)
+                      @ params["frontend_proj"].astype(self.dtype))
+            x = jnp.concatenate([prefix, x], axis=1)
+        return x
+
+    # ----------------------------------------------------------- entrypoints
+    def train_loss(self, params, batch, remat: bool = True):
+        """batch: {tokens [B,S], labels [B,S], frontend_embeds?}."""
+        cfg = self.cfg
+        params = jax.tree_util.tree_map(
+            lambda x: x.astype(self.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim > 1 else x,
+            params)
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = batch.get("frontend_embeds")
+
+        if cfg.enc_dec:
+            mem = (fe.astype(self.dtype) @ params["frontend_proj"]
+                   .astype(self.dtype))
+            memory = self._run_encoder(params, mem)
+            x = self._embed_inputs(params, tokens)
+            # precompute per-unit cross kv via vmap over stacked params
+            ck, cv = jax.vmap(
+                lambda up: attn_mod.precompute_cross_kv(
+                    up["layer0"]["cross"], memory, cfg.n_kv_heads,
+                    cfg.resolved_head_dim))(params["units"])
+            cache = {"layers": _empty_layers(cfg), "cross_k": ck,
+                     "cross_v": cv}
+            positions = jnp.arange(x.shape[1])
+            x, aux, _ = self._run_units(params, x, positions=positions,
+                                        cache=cache, cache_index=None,
+                                        causal=True, remat=remat)
+        else:
+            x = self._embed_inputs(params, tokens, fe)
+            positions = jnp.arange(x.shape[1])
+            x, aux, _ = self._run_units(params, x, positions=positions,
+                                        remat=remat)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.frontend != "none" and not cfg.enc_dec:
+            x = x[:, -tokens.shape[1]:]        # loss over text positions only
+        logits = self._hint(unembed(params, x, cfg.logit_softcap,
+                                    cfg.vocab), "logits")
+        loss = cross_entropy(logits, labels)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux / cfg.n_layers
+        return loss
+
+    def prefill(self, params, tokens, cache, frontend_embeds=None):
+        """Process a full prompt, filling the cache.  Returns (logits_last,
+        cache)."""
+        cfg = self.cfg
+        params = _cast_params(params, self.dtype)
+        if cfg.enc_dec:
+            mem = (frontend_embeds.astype(self.dtype)
+                   @ params["frontend_proj"].astype(self.dtype))
+            memory = self._run_encoder(params, mem)
+            ck, cv = jax.vmap(
+                lambda up: attn_mod.precompute_cross_kv(
+                    up["layer0"]["cross"], memory, cfg.n_kv_heads,
+                    cfg.resolved_head_dim))(params["units"])
+            cache = dict(cache)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+            x = self._embed_inputs(params, tokens)
+        else:
+            x = self._embed_inputs(params, tokens, frontend_embeds)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, _, new_layers = self._run_units(
+            params, x, positions=positions, cache=cache,
+            cache_index=jnp.zeros((), jnp.int32), causal=True, remat=False)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        new_cache["index"] = jnp.asarray(S, jnp.int32)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x, cfg.logit_softcap, cfg.vocab)
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, token, cache):
+        """token: [B, 1] -> (logits [B, V], updated cache)."""
+        cfg = self.cfg
+        params = _cast_params(params, self.dtype)
+        idx = cache["index"]
+        x = embed_tokens(params, token, cfg.scale_embed, cfg.d_model,
+                         self.dtype)
+        positions = idx + jnp.arange(1)
+        x, _, new_layers = self._run_units(
+            params, x, positions=positions, cache=cache, cache_index=idx,
+            causal=True, remat=False)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        new_cache["index"] = idx + 1
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x, cfg.logit_softcap, cfg.vocab)
+        return logits[:, 0], new_cache
+
+
+def _cast_params(params, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim > 1 else x,
+        params)
+
+
+def _empty_layers(cfg):
+    return {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,263 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan).  d_ff=0 in the assignment: the
+feed-forward capacity lives in the blocks' own up-projections.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import KeyGen, make_param
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: per-head matrix memory C [hd, hd], exponential gating; computed in
+# chunkwise-parallel form (intra-chunk attention-like + inter-chunk recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(kg: KeyGen, d_model: int, n_heads: int, dtype,
+               proj_factor: float = 2.0) -> Dict[str, Any]:
+    d_in = int(proj_factor * d_model)
+    assert d_in % n_heads == 0
+    return {
+        "up_proj": make_param(kg(), (d_model, 2 * d_in), dtype),
+        "wq": make_param(kg(), (d_in, d_in), dtype),
+        "wk": make_param(kg(), (d_in, d_in), dtype),
+        "wv": make_param(kg(), (d_in, d_in), dtype),
+        "w_i": make_param(kg(), (d_in, n_heads), dtype),   # input gate
+        "w_f": make_param(kg(), (d_in, n_heads), dtype),   # forget gate
+        "b_i": jnp.zeros((n_heads,), jnp.float32),
+        "b_f": jnp.full((n_heads,), 3.0, jnp.float32),     # open at init
+        "out_norm": jnp.zeros((d_in,), jnp.float32),
+        "down_proj": make_param(kg(), (d_in, d_model), dtype),
+    }
+
+
+def _mlstm_sequential(q, k, v, log_i, log_f, C0, n0, m0, hint=None):
+    """Step recurrence (exact reference + the decode path)."""
+    def step(carry, xs):
+        C, n, m = carry
+        if hint is not None:  # keep per-step residuals batch-sharded
+            m = jax.lax.with_sharding_constraint(m, hint)
+        qt, kt, vt, li, lf = xs  # [B,H,hd] x3, [B,H] x2
+        m_new = jnp.maximum(lf + m, li)
+        f_ = jnp.exp(lf + m - m_new)
+        i_ = jnp.exp(li - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), log_i.transpose(2, 0, 1),
+          log_f.transpose(2, 0, 1))
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), (C, n, m)  # [B,H,S,hd]
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, C0, n0, m0, chunk: int):
+    """Chunkwise-parallel mLSTM (the xLSTM paper's training form).
+
+    The matrix memory C recurs only across chunk BOUNDARIES (S/chunk scan
+    steps), so the backward pass stores S/chunk matrix states instead of S
+    — the difference between ~2.4 TB and ~40 GB at S=4096.  Within a chunk
+    everything is a batched (attention-like) matmul.  Exact same math as
+    the sequential recurrence (tests assert allclose).
+    """
+    B, H, S, hd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    n_chunks = S // L
+
+    def to_chunks(x):  # [B,H,S,...] -> [n, B,H,L,...]
+        return x.reshape(B, H, n_chunks, L, *x.shape[3:]) \
+                .transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                     # [B,H,hd,hd], [B,H,hd], [B,H]
+        qt, kt, vt, li, lf = xs             # [B,H,L,hd] x3, [B,H,L] x2
+        b = jnp.cumsum(lf, axis=-1)         # inclusive forget-cumlog
+        # per-step stabilizer: max(inter, best intra source)
+        a = li - b                          # source weight exponent (+b_j)
+        a_run = lax.cummax(a, axis=a.ndim - 1)
+        m_j = jnp.maximum(m[..., None] + b, b + a_run)   # [B,H,L]
+        # inter-chunk: q_j . C_prev, decayed by exp(b_j + m - m_j)
+        w_inter = jnp.exp(b + m[..., None] - m_j)
+        num = jnp.einsum("bhld,bhde->bhle", qt, C) * w_inter[..., None]
+        den = jnp.einsum("bhld,bhd->bhl", qt, n) * w_inter
+        # intra-chunk: D_jk = exp(b_j - b_k + i_k - m_j) for k <= j
+        expo = b[..., :, None] - b[..., None, :] + li[..., None, :] \
+            - m_j[..., :, None]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(mask, jnp.exp(expo), 0.0)          # [B,H,L,L]
+        s = jnp.einsum("bhld,bhkd->bhlk", qt, kt) * D
+        num = num + jnp.einsum("bhlk,bhke->bhle", s, vt)
+        den = den + s.sum(axis=-1)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # carry to next chunk (stabilized at m_last)
+        bL = b[..., -1:]                                  # [B,H,1]
+        m_new = jnp.maximum(m + bL[..., 0],
+                            (bL - b + li).max(axis=-1))
+        w_old = jnp.exp(m + bL[..., 0] - m_new)
+        w_src = jnp.exp(bL - b + li - m_new[..., None])   # [B,H,L]
+        C = C * w_old[..., None, None] + jnp.einsum(
+            "bhl,bhld,bhle->bhde", w_src, kt, vt)
+        n = n * w_old[..., None] + jnp.einsum("bhl,bhld->bhd", w_src, kt)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = lax.scan(chunk_step, (C0, n0, m0),
+                             (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return h, (C, n, m)
+
+
+def apply_mlstm(p, x, *, n_heads: int, chunk: int = 64,
+                state: Optional[Dict[str, Any]] = None, hint=None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """mLSTM block: chunkwise-parallel for S>1, sequential for decode."""
+    B, S, D = x.shape
+    d_in = p["wq"].shape[0]
+    hd = d_in // n_heads
+
+    up = x @ p["up_proj"]
+    u, z = up[..., :d_in], up[..., d_in:]
+    q = (u @ p["wq"]).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (u @ p["wk"]).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"]).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    q = q.astype(jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    k = k.astype(jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    # gates: [B, H, S]
+    log_i = (u @ p["w_i"]).astype(jnp.float32).transpose(0, 2, 1) + p["b_i"][:, None]
+    log_f = jax.nn.log_sigmoid(
+        (u @ p["w_f"]).astype(jnp.float32).transpose(0, 2, 1)
+        + p["b_f"][:, None])
+
+    C0 = (state["C"] if state is not None
+          else jnp.zeros((B, n_heads, hd, hd), jnp.float32))
+    n0 = (state["n"] if state is not None
+          else jnp.zeros((B, n_heads, hd), jnp.float32))
+    m0 = (state["m"] if state is not None
+          else jnp.full((B, n_heads), -30.0, jnp.float32))
+
+    if S == 1:
+        hbh, (C, n, m) = _mlstm_sequential(q, k, v, log_i, log_f,
+                                           C0, n0, m0, hint)
+    elif S % min(chunk, S) == 0:
+        hbh, (C, n, m) = _mlstm_chunkwise(q, k, v, log_i, log_f,
+                                          C0, n0, m0, chunk)
+    else:
+        hbh, (C, n, m) = _mlstm_sequential(q, k, v, log_i, log_f,
+                                           C0, n0, m0, hint)
+    h = hbh.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+
+    # group-norm-ish output normalization per head, then gate + down-project
+    hn = h.reshape(B, S, n_heads, hd)
+    hn = hn * jax.lax.rsqrt(jnp.mean(hn * hn, axis=-1, keepdims=True) + 1e-6)
+    h = hn.reshape(B, S, d_in) * (1.0 + p["out_norm"])
+    h = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = h @ p["down_proj"]
+    new_state = {"C": C, "n": n, "m": m} if state is not None else None
+    return out, new_state
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int,
+                     proj_factor: float = 2.0) -> Dict[str, Any]:
+    d_in = int(proj_factor * d_model)
+    hd = d_in // n_heads
+    return {"C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+            "m": jnp.full((batch, n_heads), -30.0, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with exponential gating, sequential by construction
+# ---------------------------------------------------------------------------
+
+def init_slstm(kg: KeyGen, d_model: int, n_heads: int, dtype,
+               proj_factor: float = 2.0) -> Dict[str, Any]:
+    d_in = int(proj_factor * d_model)
+    return {
+        "up_proj": make_param(kg(), (d_model, d_in), dtype),
+        "w_z": make_param(kg(), (d_in, d_in), dtype),
+        "w_i": make_param(kg(), (d_in, d_in), dtype),
+        "w_f": make_param(kg(), (d_in, d_in), dtype),
+        "w_o": make_param(kg(), (d_in, d_in), dtype),
+        "r_z": make_param(kg(), (d_in, d_in), dtype, scale=0.5),
+        "r_i": make_param(kg(), (d_in, d_in), dtype, scale=0.5),
+        "r_f": make_param(kg(), (d_in, d_in), dtype, scale=0.5),
+        "r_o": make_param(kg(), (d_in, d_in), dtype, scale=0.5),
+        "b_z": jnp.zeros((d_in,), jnp.float32),
+        "b_i": jnp.zeros((d_in,), jnp.float32),
+        "b_f": jnp.full((d_in,), 3.0, jnp.float32),
+        "b_o": jnp.zeros((d_in,), jnp.float32),
+        "down_proj": make_param(kg(), (d_in, d_model), dtype),
+    }
+
+
+def apply_slstm(p, x, *, state: Optional[Dict[str, Any]] = None, hint=None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    B, S, D = x.shape
+    d_in = p["w_z"].shape[0]
+    u = (x @ p["up_proj"]).astype(jnp.float32)
+    # precompute input contributions for all steps
+    zi = u @ p["w_z"].astype(jnp.float32)
+    ii = u @ p["w_i"].astype(jnp.float32)
+    fi = u @ p["w_f"].astype(jnp.float32)
+    oi = u @ p["w_o"].astype(jnp.float32)
+
+    if state is not None:
+        c0, n0, m0, h0 = state["c"], state["n"], state["m"], state["h"]
+    else:
+        c0 = jnp.zeros((B, d_in), jnp.float32)
+        n0 = jnp.ones((B, d_in), jnp.float32)
+        m0 = jnp.zeros((B, d_in), jnp.float32)
+        h0 = jnp.zeros((B, d_in), jnp.float32)
+
+    rz = p["r_z"].astype(jnp.float32)
+    ri = p["r_i"].astype(jnp.float32)
+    rf = p["r_f"].astype(jnp.float32)
+    ro = p["r_o"].astype(jnp.float32)
+
+    def step(carry, xs):
+        c, n, m, h = carry
+        if hint is not None:  # keep per-step residuals batch-sharded
+            h = jax.lax.with_sharding_constraint(h, hint)
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + h @ rz + p["b_z"])
+        li = it + h @ ri + p["b_i"]
+        lf = jax.nn.log_sigmoid(ft + h @ rf + p["b_f"])
+        o = jax.nn.sigmoid(ot + h @ ro + p["b_o"])
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * z
+        n = jnp.maximum(f_ * n + i_, 1e-6)
+        h = o * (c / n)
+        return (c, n, m_new, h), h
+
+    xs = (zi.transpose(1, 0, 2), ii.transpose(1, 0, 2),
+          fi.transpose(1, 0, 2), oi.transpose(1, 0, 2))
+    (c, n, m, h_last), hs = lax.scan(step, (c0, n0, m0, h0), xs)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = h @ p["down_proj"]
+    new_state = ({"c": c, "n": n, "m": m, "h": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+def init_slstm_state(batch: int, d_model: int,
+                     proj_factor: float = 2.0) -> Dict[str, Any]:
+    d_in = int(proj_factor * d_model)
+    z = jnp.zeros((batch, d_in), jnp.float32)
+    return {"c": z, "n": jnp.ones((batch, d_in), jnp.float32), "m": z, "h": z}

@@ -1,0 +1,3 @@
+from .sharding import ShardingRules
+
+__all__ = ["ShardingRules"]

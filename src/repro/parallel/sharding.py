@@ -1,0 +1,268 @@
+"""Sharding rules: best-effort logical-axis assignment with divisibility.
+
+MaxText-style philosophy, adapted: every parameter/cache leaf gets a
+PartitionSpec derived from its *path* and the architecture's geometry.
+Assignments degrade gracefully — if a dimension does not divide the mesh
+axis (e.g. 40 attention heads on a 16-way model axis, or granite's 40
+experts), the rule falls back (FSDP-only, replication, or sequence
+sharding) instead of failing; the dry-run proves every (arch x shape x
+mesh) cell lowers.  Overrides per cell are the §Perf hill-climb lever.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Per-(arch x shape) sharding policy, overridable for perf iteration."""
+    mesh: Mesh
+    cfg: ModelConfig
+    # axis roles; tuples of mesh axis names, tried in order
+    fsdp_candidates: Tuple[Tuple[str, ...], ...] = ()
+    model_candidates: Tuple[Tuple[str, ...], ...] = ()
+    dp_candidates: Tuple[Tuple[str, ...], ...] = ()
+    # decode-cache strategy: shard sequence when heads don't fit
+    seq_shard_cache: bool = True
+    # residual-stream sequence sharding (sequence parallelism); production
+    # default for training — the remat carry per layer shrinks by |axes|
+    act_seq_axes: Optional[Tuple[str, ...]] = ("model",)
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        has_pod = "pod" in names
+        if not self.fsdp_candidates:
+            self.fsdp_candidates = ((("pod", "data") if has_pod else ("data",)),
+                                    ("data",), ())
+        if not self.model_candidates:
+            self.model_candidates = (("model",), ())
+        if not self.dp_candidates:
+            self.dp_candidates = ((("pod", "data") if has_pod else ("data",)),
+                                  ("data",), ())
+
+    # -- helpers -------------------------------------------------------------
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        return _prod(self.mesh.shape[a] for a in axes)
+
+    def fit(self, size: int, candidates, taken) -> Optional[Tuple[str, ...]]:
+        for axes in candidates:
+            if not axes:
+                return None
+            if any(a in taken for a in axes):
+                continue
+            if size % self.axis_size(axes) == 0:
+                return axes
+        return None
+
+    def _spec(self, shape, wants) -> P:
+        """wants: list of (dim, role) in priority order."""
+        assign: Dict[int, Tuple[str, ...]] = {}
+        taken: set = set()
+        for dim, role in wants:
+            cands = {"fsdp": self.fsdp_candidates,
+                     "model": self.model_candidates,
+                     "dp": self.dp_candidates}[role]
+            axes = self.fit(shape[dim], cands, taken)
+            if axes:
+                assign[dim] = axes
+                taken.update(axes)
+        parts = []
+        for d in range(len(shape)):
+            a = assign.get(d)
+            parts.append(a if a and len(a) > 1 else (a[0] if a else None))
+        return P(*parts)
+
+    # -- parameters ----------------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        cfg = self.cfg
+        scanned = bool(re.search(r"(units|encoder)", path))
+        core = shape[1:] if scanned else shape
+
+        spec = self._param_spec_core(path, core)
+        if scanned:
+            spec = P(None, *spec)
+        return spec
+
+    def _heads_ok(self, n_heads: int) -> bool:
+        m = self.axis_size(self.model_candidates[0]) \
+            if self.model_candidates[0] else 1
+        return n_heads % m == 0
+
+    def _param_spec_core(self, path: str, shape) -> P:
+        cfg = self.cfg
+        if re.search(r"embedding$", path):
+            return self._spec(shape, [(0, "model"), (1, "fsdp")])
+        if re.search(r"lm_head$", path):
+            return self._spec(shape, [(1, "model"), (0, "fsdp")])
+        if re.search(r"frontend_proj$", path):
+            return self._spec(shape, [(1, "model"), (0, "fsdp")])
+        # attention ---------------------------------------------------------
+        if re.search(r"(attn|cross)/w([qkv])$", path):
+            which = re.search(r"w([qkv])$", path).group(1)
+            heads = cfg.n_heads if which == "q" else cfg.n_kv_heads
+            if self._heads_ok(heads):
+                return self._spec(shape, [(1, "model"), (0, "fsdp")])
+            return self._spec(shape, [(0, "fsdp")])
+        if re.search(r"(attn|cross)/wo$", path):
+            if self._heads_ok(cfg.n_heads):
+                return self._spec(shape, [(0, "model"), (1, "fsdp")])
+            return self._spec(shape, [(1, "fsdp")])
+        if re.search(r"(attn|cross)/b([qkv])$", path):
+            which = re.search(r"b([qkv])$", path).group(1)
+            heads = cfg.n_heads if which == "q" else cfg.n_kv_heads
+            if self._heads_ok(heads):
+                return self._spec(shape, [(0, "model")])
+            return P(*([None] * len(shape)))
+        # dense mlp ----------------------------------------------------------
+        if re.search(r"mlp/wi_(gate|up)$", path):
+            return self._spec(shape, [(1, "model"), (0, "fsdp")])
+        if re.search(r"mlp/wo$", path):
+            return self._spec(shape, [(0, "model"), (1, "fsdp")])
+        # moe -----------------------------------------------------------------
+        if re.search(r"moe/router$", path):
+            return self._spec(shape, [(0, "fsdp")])
+        if re.search(r"moe/wi_(gate|up)$", path):  # [E, D, F]
+            return self._spec(shape, [(0, "model"), (1, "fsdp"), (2, "model")])
+        if re.search(r"moe/wo$", path):            # [E, F, D]
+            return self._spec(shape, [(0, "model"), (2, "fsdp"), (1, "model")])
+        # mamba ----------------------------------------------------------------
+        if re.search(r"mamba/in_proj$", path):
+            return self._spec(shape, [(1, "model"), (0, "fsdp")])
+        if re.search(r"mamba/conv_w$", path):
+            return self._spec(shape, [(1, "model")])
+        if re.search(r"mamba/(conv_b|dt_proj_b|d_skip)$", path):
+            return self._spec(shape, [(0, "model")])
+        if re.search(r"mamba/(x_proj|a_log|out_proj)$", path):
+            return self._spec(shape, [(0, "model"), (1, "fsdp")]
+                              if path.endswith("out_proj")
+                              else [(0, "model")])
+        if re.search(r"mamba/dt_proj_w$", path):
+            return self._spec(shape, [(1, "model")])
+        # xlstm: tiny -> replicate compute params, fsdp the projections
+        if re.search(r"(mlstm|slstm)/(up_proj|down_proj)$", path):
+            return self._spec(shape, [(0, "fsdp")])
+        if re.search(r"(mlstm|slstm)/", path):
+            return P(*([None] * len(shape)))
+        # norms / everything else: replicated
+        return P(*([None] * len(shape)))
+
+    def params_pspecs(self, abstract_params) -> Any:
+        def spec(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+            return self.param_spec(pstr, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+    # -- batches ---------------------------------------------------------------
+    def batch_spec(self, global_batch: int) -> Optional[Tuple[str, ...]]:
+        return self.fit(global_batch, self.dp_candidates, set())
+
+    def batch_pspecs(self, abstract_batch) -> Any:
+        def spec(path, leaf):
+            b = self.batch_spec(leaf.shape[0])
+            parts = [b if b and len(b) > 1 else (b[0] if b else None)]
+            parts += [None] * (len(leaf.shape) - 1)
+            return P(*parts)
+
+        return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+    # -- decode caches -----------------------------------------------------------
+    def cache_spec(self, path: str, shape) -> P:
+        """Cache leaves are stacked [n_units, B, ...]."""
+        if len(shape) == 0:     # the index scalar
+            return P()
+        taken: set = set()
+        parts = [None] * len(shape)
+        # batch
+        b = self.fit(shape[1], self.dp_candidates, taken)
+        if b:
+            parts[1] = b if len(b) > 1 else b[0]
+            taken.update(b)
+        if re.search(r"/(k|v|k_scale|v_scale)$", path):
+            kv_dim, seq_dim = 2, 3
+            kv = self.fit(shape[kv_dim], self.model_candidates, taken)
+            if kv:
+                parts[kv_dim] = kv if len(kv) > 1 else kv[0]
+            elif self.seq_shard_cache:
+                sq = self.fit(shape[seq_dim], self.model_candidates, taken)
+                if sq:
+                    parts[seq_dim] = sq if len(sq) > 1 else sq[0]
+        elif re.search(r"mamba|ssm|conv", path) and len(shape) >= 3:
+            d = self.fit(shape[-2] if path.endswith("ssm") else shape[-1],
+                         self.model_candidates, taken)
+            if d:
+                parts[-2 if path.endswith("ssm") else -1] = \
+                    d if len(d) > 1 else d[0]
+        return P(*parts)
+
+    def cache_pspecs(self, abstract_cache) -> Any:
+        def spec(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+            return self.cache_spec(pstr, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+    # -- activation hints (anchor XLA's propagation) --------------------------
+    def _axes_or_none(self, axes):
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def activation_hints(self, global_batch: int, seq_len: int,
+                         use_seq_sharding: bool = True):
+        """NamedShardings for residual stream, logits and the MoE buffer."""
+        cfg = self.cfg
+        b = self.batch_spec(global_batch)
+        taken = set(b or ())
+        seq = None
+        act_seq_axes = self.act_seq_axes if use_seq_sharding else None
+        if act_seq_axes and seq_len % self.axis_size(act_seq_axes) == 0:
+            seq = act_seq_axes
+        hints = {
+            "act": NamedSharding(self.mesh, P(self._axes_or_none(b),
+                                              self._axes_or_none(seq), None)),
+        }
+        v = self.fit(cfg.padded_vocab, self.model_candidates, taken)
+        hints["logits"] = NamedSharding(
+            self.mesh, P(self._axes_or_none(b), None, self._axes_or_none(v)))
+        if cfg.moe is not None:
+            # experts over the model axis when divisible (EP); the capacity
+            # dim always shards over the data axes (it is a token dim)
+            e = self.fit(cfg.moe.n_experts, self.model_candidates, set())
+            c_axes = self.dp_candidates[0]
+            hints["moe_ecd"] = NamedSharding(
+                self.mesh, P(self._axes_or_none(e),
+                             self._axes_or_none(c_axes), None))
+            hints["moe_gather"] = NamedSharding(
+                self.mesh, P(self._axes_or_none(c_axes), None, None))
+            # group-local dispatch: one group per data shard so every
+            # dispatch gather/scatter is shard-local (Switch-style
+            # per-device capacity)
+            hints["moe_groups"] = self.axis_size(c_axes)
+            hints["moe_grp"] = NamedSharding(
+                self.mesh, P(self._axes_or_none(c_axes), None, None, None))
+        # recurrent (xlstm/mamba) per-step states: batch-sharded
+        hints["state_b"] = NamedSharding(
+            self.mesh, P(self._axes_or_none(b), None))
+        return hints
+
+    # -- conversion ----------------------------------------------------------
+    def to_named(self, pspec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), pspec_tree,
+            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes,
+dtypes and mask variants, plus hypothesis property tests for the batched
+MwCAS primitive's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_flat
+from repro.kernels.pmwcas_apply import ops as mw_ops
+from repro.kernels.pmwcas_apply import ref as mw_ref
+from repro.kernels.pmwcas_apply.kernel import pmwcas_success_pallas
+from repro.models.attention import _sdpa_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, KV, G, Sq, Sk, hd, causal, window, cap, dtype)
+    (1, 1, 1, 16, 16, 8, True, 0, 0.0, jnp.float32),
+    (2, 2, 2, 32, 32, 16, True, 0, 0.0, jnp.float32),
+    (1, 2, 4, 24, 40, 8, True, 0, 0.0, jnp.float32),   # gqa + ragged tiles
+    (1, 1, 1, 16, 48, 8, False, 0, 0.0, jnp.float32),  # cross-attn style
+    (2, 1, 2, 32, 32, 8, True, 9, 0.0, jnp.float32),   # sliding window
+    (1, 2, 1, 32, 32, 8, True, 0, 30.0, jnp.float32),  # softcap (gemma2)
+    (1, 1, 2, 16, 16, 8, True, 0, 0.0, jnp.bfloat16),  # bf16 inputs
+    (1, 1, 1, 1, 40, 8, True, 0, 0.0, jnp.float32),    # decode: Sq=1
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_kernel_matches_ref(case):
+    B, KV, G, Sq, Sk, hd, causal, window, cap, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, Sk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, Sk, hd), jnp.float32)
+    qp = (jnp.arange(Sq) + (Sk - Sq if causal and Sq == 1 else 0))
+    kp = jnp.arange(Sk)
+    kw = dict(causal=causal, window=window, attn_cap=cap,
+              scale=1.0 / np.sqrt(hd))
+    ref = _sdpa_ref(q.astype(dtype), k.astype(dtype), v.astype(dtype),
+                    qp, kp, **kw)
+    got = flash_attention_flat(
+        q.reshape(B * KV * G, Sq, hd).astype(dtype),
+        k.reshape(B * KV, Sk, hd).astype(dtype),
+        v.reshape(B * KV, Sk, hd).astype(dtype),
+        qp, kp, g=G, tq=16, tk=16, interpret=True,
+        **kw).reshape(B, KV, G, Sq, hd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# pmwcas_apply
+# ---------------------------------------------------------------------------
+
+def _random_case(rng, W, B, K, pad_frac=0.1, val_range=4):
+    words = rng.integers(0, val_range, W).astype(np.uint32)
+    addr = np.stack([rng.choice(W, K, replace=False) for _ in range(B)])
+    addr = np.sort(addr, axis=1).astype(np.int32)
+    addr[rng.random((B, K)) < pad_frac] = -1
+    exp = rng.integers(0, val_range, (B, K)).astype(np.uint32)
+    des = (exp + 1).astype(np.uint32)
+    return words, addr, exp, des
+
+
+@pytest.mark.parametrize("W,B,K,tb", [
+    (32, 8, 1, 4), (64, 32, 3, 8), (128, 64, 4, 16), (64, 17, 2, 8),
+])
+def test_pmwcas_kernel_matches_ref(W, B, K, tb):
+    rng = np.random.default_rng(42 + W + B + K)
+    words, addr, exp, des = _random_case(rng, W, B, K)
+    cur = jnp.asarray(words)[jnp.maximum(jnp.asarray(addr), 0)]
+    s_ref = np.asarray(mw_ref.pmwcas_success(jnp.asarray(addr), cur,
+                                             jnp.asarray(exp)))
+    s_ker = np.asarray(pmwcas_success_pallas(jnp.asarray(addr), cur,
+                                             jnp.asarray(exp), tb=tb))
+    np.testing.assert_array_equal(s_ref, s_ker)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), B=st.integers(1, 40),
+       K=st.integers(1, 4), W=st.sampled_from([16, 64, 256]))
+def test_pmwcas_invariants(seed, B, K, W):
+    """Conservative-batch invariants against the sequential oracle:
+    1. every batch success also succeeds sequentially (containment),
+    2. winners' writes match, losers leave words untouched,
+    3. no address written twice."""
+    rng = np.random.default_rng(seed)
+    if K > W:
+        K = W
+    words, addr, exp, des = _random_case(rng, W, B, K)
+    new, succ = mw_ref.pmwcas_apply(jnp.asarray(words), jnp.asarray(addr),
+                                    jnp.asarray(exp), jnp.asarray(des))
+    new, succ = np.asarray(new), np.asarray(succ)
+    _, s_seq = mw_ref.sequential_oracle(words, addr, exp, des)
+    assert (~succ | s_seq).all()
+    touched = {}
+    for i in range(B):
+        for k in range(K):
+            a = addr[i, k]
+            if a < 0:
+                continue
+            if succ[i]:
+                assert a not in touched, "double write"
+                touched[a] = des[i, k]
+    for a in range(W):
+        expect = touched.get(a, words[a])
+        assert new[a] == expect
+
+
+def test_reserve_slots_grants_disjoint():
+    """Serving-layer use: concurrent requests get disjoint cache slots."""
+    free = jnp.ones(64, jnp.uint32)
+    rng = np.random.default_rng(7)
+    reqs = jnp.asarray(
+        np.stack([np.sort(rng.choice(64, 4, replace=False))
+                  for _ in range(16)]), jnp.int32)
+    new, granted = mw_ops.reserve_slots(free, reqs)
+    new, granted = np.asarray(new), np.asarray(granted)
+    claimed = []
+    for i in range(16):
+        if granted[i]:
+            claimed.extend(np.asarray(reqs)[i].tolist())
+    assert len(claimed) == len(set(claimed))
+    assert all(new[c] == 0 for c in claimed)
+    # all other slots still free
+    rest = set(range(64)) - set(claimed)
+    assert all(new[list(rest)] == 1)

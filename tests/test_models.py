@@ -1,0 +1,204 @@
+"""Model substrate tests: per-arch smoke, attention impl equivalence,
+prefill/decode parity against the full forward pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Smoke: every assigned arch, one train step on CPU, shapes + finite values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward(arch, key):
+    cfg = get_config(arch, smoke=True)
+    m = build_model(cfg)
+    params = m.init_params(key)
+    B, S = 2, 16
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    loss = jax.jit(m.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch, key):
+    """One full optimizer step: loss decreases over a few steps on a
+    memorizable batch."""
+    from repro.optim import adamw
+    cfg = get_config(arch, smoke=True)
+    m = build_model(cfg)
+    params = m.init_params(key)
+    opt_cfg = adamw.AdamWConfig(lr=5e-3, warmup_steps=1, total_steps=50,
+                                weight_decay=0.0)
+    opt = adamw.init_state(opt_cfg, params)
+    B, S = 2, 16
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(m.train_loss)(params, batch)
+        params, opt, _ = adamw.update(opt_cfg, grads, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(5):
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode parity: decoding token-by-token must match the teacher-forced
+# forward pass (same cache semantics across attn/mamba/mlstm/slstm layers)
+# ---------------------------------------------------------------------------
+
+PARITY_ARCHS = ["llama3_8b", "gemma2_9b", "glm4_9b", "qwen3_moe_30b_a3b",
+                "jamba_v01_52b", "xlstm_125m", "paligemma_3b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_decode_parity(arch, key):
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, attn_impl="chunked", attn_chunk=8)
+    if cfg.moe is not None:
+        # prefill uses the capacity path; make it effectively dropless so
+        # parity with the (always dropless) decode path is exact
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = build_model(cfg)
+    params = m.init_params(key)
+    B, S, extra = 2, 12, 4
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S + extra), 0,
+                             cfg.vocab)
+    fe = (0.02 * jnp.ones((B, cfg.frontend_len, cfg.frontend_dim),
+                          jnp.float32) if cfg.frontend != "none" else None)
+
+    # the cache covers prefix (vision/audio stub) + text positions
+    total = S + extra + cfg.frontend_len
+    # reference: prefill over k tokens gives logits for position k-1
+    def logits_at(k):
+        cache = m.init_cache(B, total)
+        lg, _ = jax.jit(m.prefill)(params, tok[:, :k], cache,
+                                   fe) if fe is not None else \
+            jax.jit(m.prefill)(params, tok[:, :k], cache)
+        return lg
+
+    cache = m.init_cache(B, total)
+    if fe is not None:
+        last, cache = jax.jit(m.prefill)(params, tok[:, :S], cache, fe)
+    else:
+        last, cache = jax.jit(m.prefill)(params, tok[:, :S], cache)
+    dec = jax.jit(m.decode_step)
+    for i in range(extra):
+        ref = logits_at(S + i)
+        # bf16 matmul reduction order differs between the batched prefill
+        # and the single-token decode; tolerance sized to bf16 eps
+        np.testing.assert_allclose(np.asarray(last, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=6e-2, atol=6e-2)
+        last, cache = dec(params, tok[:, S + i:S + i + 1], cache)
+
+
+def test_int8_kv_cache_close_to_bf16(key):
+    cfg = get_config("llama3_8b", smoke=True)
+    m16 = build_model(dataclasses.replace(cfg, kv_dtype="bfloat16"))
+    m8 = build_model(dataclasses.replace(cfg, kv_dtype="int8"))
+    params = m16.init_params(key)
+    B, S = 2, 12
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    l16, _ = jax.jit(m16.prefill)(params, tok, m16.init_cache(B, S))
+    l8, _ = jax.jit(m8.prefill)(params, tok, m8.init_cache(B, S))
+    # int8 quantization error is bounded; logits stay close
+    corr = np.corrcoef(np.asarray(l16, np.float32).ravel(),
+                       np.asarray(l8, np.float32).ravel())[0, 1]
+    assert corr > 0.99
+
+
+# ---------------------------------------------------------------------------
+# Attention implementations agree (ref vs chunked incl. gqa/softcap/window)
+# ---------------------------------------------------------------------------
+
+def test_attention_impls_agree(key):
+    from repro.models import attention as A
+    B, KV, G, Sq, Sk, hd = 2, 2, 4, 24, 24, 16
+    q = jax.random.normal(key, (B, KV, G, Sq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, Sk, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, Sk, hd))
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    for causal in (True, False):
+        for window in (0, 7):
+            for cap in (0.0, 30.0):
+                kw = dict(causal=causal, window=window, attn_cap=cap,
+                          scale=0.25)
+                o1 = A._sdpa_ref(q, k, v, qp, kp, **kw)
+                o2 = A._sdpa_chunked(q, k, v, qp, kp, chunk=5, **kw)
+                np.testing.assert_allclose(o1, o2, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_gradients_match_ref(key):
+    from repro.models import attention as A
+    B, KV, G, S, hd = 1, 2, 2, 16, 8
+    q = jax.random.normal(key, (B, KV, G, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, hd))
+    qp = kp = jnp.arange(S)
+    kw = dict(causal=True, window=0, attn_cap=25.0, scale=0.3)
+    g1 = jax.grad(lambda *a: A._sdpa_ref(*a, qp, kp, **kw).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: A._sdpa_chunked(*a, qp, kp, chunk=6,
+                                             **kw).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_moe_routes_and_combines(key):
+    from repro.models import moe as M
+    from repro.models.layers import KeyGen
+    kg = KeyGen(key)
+    D, E, F = 16, 4, 32
+    p = M.init_moe(kg, D, E, F, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, D))
+    y, aux = M.apply_moe(p, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    # Switch aux is ~1 for balanced routing (can dip slightly below when
+    # probability mass and dispatch counts anticorrelate)
+    assert 0.5 < float(aux) < 4.0
+
+
+def test_moe_capacity_drops_dont_nan(key):
+    from repro.models import moe as M
+    from repro.models.layers import KeyGen
+    kg = KeyGen(key)
+    p = M.init_moe(kg, 8, 2, 16, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 64, 8))
+    # capacity_factor tiny -> most tokens dropped -> residual passthrough
+    y, _ = M.apply_moe(p, x, top_k=2, capacity_factor=0.05)
+    assert np.isfinite(np.asarray(y)).all()

@@ -1,0 +1,91 @@
+"""Crash-recovery consistency: the paper's Figs. 6/7 state machines, tested
+by crashing at many points of real schedules and at hypothesis-chosen
+configurations.  The central invariant:
+
+    recovered(w) == initial(w) + #(durably-committed ops covering w)
+
+where durable commitment is exactly "state=Succeeded was persisted"
+(Fig. 4 line 15) — descriptors acting as write-ahead logs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
+                        SimConfig, check_crash_consistency, recover,
+                        run_until)
+
+ALGS = [(ALG_OURS, 3), (ALG_OURS_DF, 3), (ALG_ORIGINAL, 2), (ALG_PCAS, 1)]
+
+
+def _cfg(alg, k, seed=3, **kw):
+    base = dict(algorithm=alg, n_threads=4, n_words=64, k=k,
+                n_steps=1200, max_ops=32, seed=seed)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+@pytest.mark.parametrize("alg,k", ALGS)
+def test_crash_sweep(alg, k):
+    """Crash at a grid of points across one schedule."""
+    cfg = _cfg(alg, k)
+    for step in range(1, cfg.n_steps, 53):
+        r = run_until(cfg, step)
+        check_crash_consistency(cfg, r.state)
+
+
+@pytest.mark.parametrize("alg,k", ALGS)
+def test_crash_exhaustive_prefix(alg, k):
+    """Every single crash point of a short hot schedule (16 words, dense
+    conflicts) recovers consistently."""
+    cfg = _cfg(alg, k, n_words=16, n_steps=400, alpha=1.0)
+    for step in range(1, 400, 1):
+        r = run_until(cfg, step)
+        check_crash_consistency(cfg, r.state)
+
+
+@pytest.mark.parametrize("alg,k", ALGS)
+def test_recovery_idempotent(alg, k):
+    cfg = _cfg(alg, k)
+    r = run_until(cfg, 777)
+    rec1 = recover(cfg, r.state)
+    st2 = dict(r.state)
+    st2["pmem"] = rec1
+    rec2 = recover(cfg, st2)
+    assert np.array_equal(rec1, rec2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    alg=st.sampled_from([ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL]),
+    k=st.integers(min_value=1, max_value=4),
+    threads=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    crash_frac=st.floats(min_value=0.01, max_value=0.99),
+    alpha=st.sampled_from([0.0, 1.0]),
+)
+def test_crash_consistency_property(alg, k, threads, seed, crash_frac, alpha):
+    """Hypothesis: any (algorithm, geometry, skew, schedule, crash point)
+    combination recovers to the committed-prefix state."""
+    cfg = SimConfig(algorithm=alg, n_threads=threads, n_words=32, k=k,
+                    n_steps=600, max_ops=16, seed=seed, alpha=alpha)
+    step = max(1, int(600 * crash_frac))
+    r = run_until(cfg, step)
+    check_crash_consistency(cfg, r.state)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       crash_frac=st.floats(min_value=0.01, max_value=0.99))
+def test_crash_consistency_pcas_property(seed, crash_frac):
+    cfg = SimConfig(algorithm=ALG_PCAS, n_threads=4, n_words=16, k=1,
+                    n_steps=600, max_ops=16, seed=seed, alpha=1.0)
+    r = run_until(cfg, max(1, int(600 * crash_frac)))
+    check_crash_consistency(cfg, r.state)
+
+
+def test_recovered_state_has_no_tags():
+    for alg, k in ALGS:
+        cfg = _cfg(alg, k, alpha=1.0, n_words=16)
+        r = run_until(cfg, 399)
+        rec = recover(cfg, r.state)
+        assert (rec & 0b111 == 0).all()
