@@ -4,9 +4,9 @@ storms); blocks >= 64 B never do.  High-competitive environment only,
 matching the paper."""
 from __future__ import annotations
 
-from repro.core import ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, SimConfig
+from repro.pmwcas import ORIGINAL, OURS, OURS_DF
 
-from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cell
 
 BLOCKS = (8, 16, 32, 64, 128, 256)
 
@@ -16,12 +16,11 @@ def run(quick: bool = False):
     steps = BENCH_STEPS // 4 if quick else BENCH_STEPS
     for k in (1, 3):
         for bs in blocks:
-            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
-                cfg = SimConfig(algorithm=alg, n_threads=32, k=k,
-                                n_words=BENCH_WORDS // 4, alpha=1.0,
-                                block_bytes=bs, n_steps=steps,
-                                max_ops=512, seed=19)
-                r = run_cfg(cfg)
+            for alg in (OURS, OURS_DF, ORIGINAL):
+                r = run_cell(alg, n_threads=32, k=k,
+                             n_words=BENCH_WORDS // 4, alpha=1.0,
+                             block_bytes=bs, n_steps=steps, max_ops=512,
+                             seed=19)
                 emit(row(f"fig14_k{k}_block{bs}_{alg}", r))
 
 

@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from repro.checkpoint import Committer, MarkerCommitter, PMemPool
+from repro import Committer, MarkerCommitter, PMemPool
 
 from .common import emit
 

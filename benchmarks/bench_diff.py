@@ -1,0 +1,41 @@
+"""Cross-backend differential smoke-bench: the same MwCASOp batch through
+SimBackend / KernelBackend / DurableBackend, reporting per-backend wall
+time and asserting verdict agreement.  Primarily an API regression tripwire
+for benchmarks/run.py (scripts/ci.sh runs it with --quick)."""
+from __future__ import annotations
+
+import time
+
+from repro.pmwcas import (DurableBackend, KernelBackend, OURS, SimBackend,
+                          increment_batch)
+
+from .common import emit
+
+
+def run(quick: bool = False):
+    n_ops, k, n_words = (6, 2, 32) if quick else (12, 3, 128)
+    initial, ops = increment_batch(n_words=n_words, k=k, n_ops=n_ops,
+                                   seed=23)
+    backends = [
+        SimBackend(n_words, algorithm=OURS, values=initial),
+        KernelBackend(values=initial, use_kernel=not quick),
+        DurableBackend(),          # auto-cleaned temp pool
+    ]
+    backends[2].seed({a: int(initial[a])
+                      for op in ops for a in op.addrs})
+    verdicts = {}
+    for b in backends:
+        t0 = time.time()
+        res = b.execute(list(ops))
+        dt = time.time() - t0
+        verdicts[b.name] = [r.success for r in res]
+        emit(f"diff_{b.name}_B{len(ops)}_k{k},{dt*1e6:.1f},"
+             f"granted={sum(verdicts[b.name])}/{len(ops)}")
+    vs = list(verdicts.values())
+    agree = all(v == vs[0] for v in vs)
+    emit(f"diff_agreement,0.0,agree={agree}")
+    assert agree, f"cross-backend disagreement: {verdicts}"
+
+
+if __name__ == "__main__":
+    run()

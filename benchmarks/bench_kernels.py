@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.pmwcas_apply import ref as mw_ref
 from repro.models.attention import _sdpa_chunked, _sdpa_ref
+from repro.pmwcas import pmwcas_apply_ref
 
 from .common import emit
 
@@ -35,7 +35,7 @@ def run(quick: bool = False):
                                    axis=1), jnp.int32)
         exp = jnp.zeros((B, K), jnp.uint32)
         des = jnp.ones((B, K), jnp.uint32)
-        f = jax.jit(mw_ref.pmwcas_apply)
+        f = jax.jit(pmwcas_apply_ref)
         dt = _time(f, words, addr, exp, des)
         emit(f"kern_pmwcas_apply_B{B},{dt*1e6:.1f},"
              f"descriptors_per_sec={B/dt:.0f}")

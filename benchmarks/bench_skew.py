@@ -1,10 +1,9 @@
 """Paper Fig. 13: effect of Zipf access skew on P1wCAS/P3wCAS."""
 from __future__ import annotations
 
-from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
-                        SimConfig)
+from repro.pmwcas import ORIGINAL, OURS, OURS_DF, PCAS
 
-from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cell
 
 ALPHAS = (0.0, 0.25, 0.5, 0.75, 1.0, 1.25)
 
@@ -13,15 +12,14 @@ def run(quick: bool = False):
     alphas = (0.0, 0.75, 1.25) if quick else ALPHAS
     steps = BENCH_STEPS // 4 if quick else BENCH_STEPS
     for k in (1, 3):
-        algs = (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL)
+        algs = (OURS, OURS_DF, ORIGINAL)
         if k == 1:
-            algs = algs + (ALG_PCAS,)
+            algs = algs + (PCAS,)
         for alpha in alphas:
             for alg in algs:
-                cfg = SimConfig(algorithm=alg, n_threads=32, k=k,
-                                n_words=BENCH_WORDS, alpha=alpha,
-                                n_steps=steps, max_ops=512, seed=17)
-                r = run_cfg(cfg)
+                r = run_cell(alg, n_threads=32, k=k, n_words=BENCH_WORDS,
+                             alpha=alpha, n_steps=steps, max_ops=512,
+                             seed=17)
                 emit(row(f"fig13_k{k}_{alg}_a{alpha:g}", r))
 
 

@@ -2,10 +2,9 @@
 in low- (alpha=0) and high- (alpha=1) competitive environments."""
 from __future__ import annotations
 
-from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
-                        SimConfig)
+from repro.pmwcas import ORIGINAL, OURS, OURS_DF, PCAS
 
-from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cell
 
 THREADS = (1, 4, 8, 16, 32, 56)
 
@@ -16,20 +15,18 @@ def run(quick: bool = False):
     # Fig. 9: persistent three-word CAS
     for alpha in (0.0, 1.0):
         for t in threads:
-            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
-                cfg = SimConfig(algorithm=alg, n_threads=t, k=3,
-                                n_words=BENCH_WORDS, alpha=alpha,
-                                n_steps=steps, max_ops=512, seed=11)
-                r = run_cfg(cfg)
+            for alg in (OURS, OURS_DF, ORIGINAL):
+                r = run_cell(alg, n_threads=t, k=3, n_words=BENCH_WORDS,
+                             alpha=alpha, n_steps=steps, max_ops=512,
+                             seed=11)
                 emit(row(f"fig9_p3wcas_{alg}_t{t}_a{alpha:g}", r))
     # Fig. 10: persistent one-word CAS (incl. the PCAS competitor)
     for alpha in (0.0, 1.0):
         for t in threads:
-            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL, ALG_PCAS):
-                cfg = SimConfig(algorithm=alg, n_threads=t, k=1,
-                                n_words=BENCH_WORDS, alpha=alpha,
-                                n_steps=steps, max_ops=512, seed=11)
-                r = run_cfg(cfg)
+            for alg in (OURS, OURS_DF, ORIGINAL, PCAS):
+                r = run_cell(alg, n_threads=t, k=1, n_words=BENCH_WORDS,
+                             alpha=alpha, n_steps=steps, max_ops=512,
+                             seed=11)
                 emit(row(f"fig10_p1wcas_{alg}_t{t}_a{alpha:g}", r))
 
 

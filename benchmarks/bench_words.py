@@ -2,9 +2,9 @@
 including relative-to-P1wCAS curves against the 1/k ideal."""
 from __future__ import annotations
 
-from repro.core import ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, SimConfig
+from repro.pmwcas import ORIGINAL, OURS, OURS_DF
 
-from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cfg, \
+from .common import BENCH_STEPS, BENCH_WORDS, emit, row, run_cell, \
     throughput_mops
 
 WORDS = (1, 2, 3, 4, 5, 6, 8)
@@ -16,13 +16,12 @@ def run(quick: bool = False):
     base = {}
     for alpha in (0.0, 1.0):
         for k in words:
-            for alg in (ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL):
-                cfg = SimConfig(algorithm=alg, n_threads=32, k=k,
-                                n_words=BENCH_WORDS, alpha=alpha,
-                                n_steps=steps, max_ops=512, seed=13)
-                r = run_cfg(cfg)
+            for alg in (OURS, OURS_DF, ORIGINAL):
+                r = run_cell(alg, n_threads=32, k=k, n_words=BENCH_WORDS,
+                             alpha=alpha, n_steps=steps, max_ops=512,
+                             seed=13)
                 emit(row(f"fig11_k{k}_{alg}_a{alpha:g}", r))
-                if alg == ALG_OURS:
+                if alg is OURS:
                     base.setdefault(alpha, {})[k] = throughput_mops(r)
     # Fig. 12: ours relative to its own k=1 (ideal: 1/k)
     for alpha, per_k in base.items():

@@ -1,18 +1,18 @@
 """Shared helpers for the paper-figure benchmarks.
 
 The simulator reports exact instruction/invalidation counts; wall-clock is
-modeled at CLOCK_GHZ from the per-event cycle model (core.model.CostModel,
+modeled at CLOCK_GHZ from the per-event cycle model (repro CostModel,
 calibrated once against the paper's Fig. 9/10 ratios — see
 benchmarks/calibration.md).  Every row reports both.
+
+Benchmarks import ONLY the repro.pmwcas public surface: configurations
+are built with the fluent SimSession and the algorithm strategy objects
+(OURS / OURS_DF / ORIGINAL / PCAS).
 """
 from __future__ import annotations
 
-import dataclasses
-import sys
-from typing import Dict, Iterable, List
-
-from repro.core import SimConfig, SimResult, run_sim
-from repro.core.model import (CNT_CAS, CNT_FLUSH, CNT_INVAL)
+from repro.pmwcas import (CNT_CAS, CNT_FLUSH, CNT_INVAL, SimResult,
+                          SimSession)
 
 CLOCK_GHZ = 2.0  # cycles -> seconds conversion for reporting only
 
@@ -23,8 +23,13 @@ BENCH_WORDS = 1 << 16
 BENCH_STEPS = 60_000
 
 
-def run_cfg(cfg: SimConfig) -> SimResult:
-    return run_sim(cfg)
+def session(alg, **cfg) -> SimSession:
+    """One benchmark cell: algorithm strategy + SimConfig overrides."""
+    return SimSession().with_algorithm(alg).configure(**cfg)
+
+
+def run_cell(alg, **cfg) -> SimResult:
+    return session(alg, **cfg).run()
 
 
 def throughput_mops(r: SimResult) -> float:

@@ -14,11 +14,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sweeps (CI)")
     ap.add_argument("--only", default=None,
-                    help="threads|words|skew|blocks|ckpt|kernels")
+                    help="threads|words|skew|blocks|ckpt|kernels|diff")
     args = ap.parse_args()
 
-    from . import (bench_blocks, bench_ckpt, bench_kernels, bench_skew,
-                   bench_threads, bench_words)
+    from . import (bench_blocks, bench_ckpt, bench_diff, bench_kernels,
+                   bench_skew, bench_threads, bench_words)
     sections = {
         "threads": bench_threads.run,   # paper Figs. 9 & 10
         "words": bench_words.run,       # paper Figs. 11 & 12
@@ -26,7 +26,11 @@ def main() -> None:
         "blocks": bench_blocks.run,     # paper Fig. 14
         "ckpt": bench_ckpt.run,         # Sec. 4 insight at file granularity
         "kernels": bench_kernels.run,   # TPU-adaptation micro-benches
+        "diff": bench_diff.run,         # cross-backend differential smoke
     }
+    if args.only and args.only not in sections:
+        ap.error(f"unknown section {args.only!r}; "
+                 f"choose from {', '.join(sections)}")
     names = [args.only] if args.only else list(sections)
     print("name,us_per_call,derived")
     for name in names:

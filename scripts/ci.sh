@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI entry point: install the package, run the tier-1 suite, then a quick
+# benchmark smoke so API regressions in benchmarks/run.py are caught.
+#
+#   bash scripts/ci.sh            # full tier-1 + smoke
+#   SKIP_INSTALL=1 bash scripts/ci.sh   # PYTHONPATH fallback (no pip)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "=== 1. install ==="
+if [ "${SKIP_INSTALL:-0}" = "1" ]; then
+    echo "SKIP_INSTALL=1: using PYTHONPATH=src instead of pip"
+    export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+elif pip install -e . --no-deps --no-build-isolation --quiet 2>/dev/null; then
+    # --no-build-isolation: the image's setuptools builds offline;
+    # --no-deps: jax/numpy come from the environment ('pip install -e
+    # .[test]' adds the optional hypothesis when a network exists)
+    echo "installed repro-pmwcas (editable)"
+else
+    echo "pip install failed (offline image?); falling back to PYTHONPATH=src"
+    export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+fi
+
+echo "=== 2. tier-1 tests ==="
+python -m pytest -x -q
+
+echo "=== 3. benchmark smoke (API regression tripwire) ==="
+python -m benchmarks.run --quick --only diff
+python -m benchmarks.run --quick --only ckpt
+
+echo "=== 4. cross-backend differential example ==="
+python examples/quickstart.py > /dev/null
+echo "quickstart OK"
+
+echo "CI PASSED"

@@ -1,0 +1,67 @@
+"""repro — reproduction of "Practical Persistent Multi-Word Compare-and-
+Swap Algorithms for Many-Core CPUs" grown into a jax/Pallas system.
+
+Public surface (import from here or from :mod:`repro.pmwcas`):
+
+- ``repro.pmwcas`` — the unified PMwCAS API: operation model
+  (``Target``/``MwCASOp``/``OpResult``), algorithm strategies
+  (``OURS``/``OURS_DF``/``ORIGINAL``/``PCAS``), pluggable backends
+  (``SimBackend``/``KernelBackend``/``DurableBackend``), the fluent
+  ``SimSession`` builder and cross-backend ``run_differential``.
+- checkpoint layer: ``Committer``, ``MarkerCommitter``,
+  ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
+  ``SimulatedCrash``.
+
+Attribute access is lazy so ``import repro`` never initializes a jax
+backend (``launch.dryrun`` must set XLA flags first).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+__version__ = "0.1.0"
+
+# name -> providing module (resolved lazily on first attribute access)
+_CHECKPOINT = ("Committer", "MarkerCommitter", "CheckpointManager",
+               "AsyncCheckpointManager", "PMemPool", "SimulatedCrash")
+_PMWCAS = (
+    "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",
+    "batch_width", "ops_to_arrays", "ops_from_arrays", "results_from_mask",
+    "Algorithm", "OURS", "OURS_DF", "ORIGINAL", "PCAS", "STRATEGIES",
+    "resolve", "ALGORITHMS",
+    "Backend", "SimBackend", "KernelBackend", "DurableBackend",
+    "UnsupportedBatch",
+    "SimSession", "SimConfig", "SimResult", "CostModel",
+    "run_sim", "run_until", "generate_ops", "generate_schedule",
+    "recover", "committed_histogram", "check_crash_consistency",
+    "RecoveryError",
+    "run_differential", "increment_batch", "DifferentialReport",
+    "pmwcas_apply", "pmwcas_apply_ref", "pmwcas_success_ref",
+    "pmwcas_success_pallas", "reserve_slots", "sequential_oracle",
+    "CNT_CAS", "CNT_CYCLES", "CNT_FAILS", "CNT_FLUSH", "CNT_HELPS",
+    "CNT_INVAL", "CNT_LOAD", "CNT_OPS", "CNT_STORE",
+    "TAG_DESC", "TAG_DESC_DIRTY", "TAG_DIRTY", "TAG_MASK", "TAG_PAYLOAD",
+    "TAG_SHIFT",
+)
+_LAZY = {name: "repro.pmwcas" for name in _PMWCAS}
+_LAZY.update({name: "repro.checkpoint" for name in _CHECKPOINT})
+
+__all__ = sorted(_LAZY) + ["pmwcas"]
+
+
+def __getattr__(name: str) -> Any:
+    if name == "pmwcas":
+        return importlib.import_module("repro.pmwcas")
+    try:
+        module = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return __all__

@@ -71,7 +71,22 @@ class Committer:
         payloads: desired data per slot (written out-of-place first).
         """
         pool = self.pool
-        # 1. prepare desired values
+        # 0. versions must advance.  An exp == des "no-op move" would pass
+        # every check and then GC its own live data file in step 6
+        # (delete of data_rel(name, exp) == data_rel(name, des)).
+        for _name, exp, des in targets:
+            if des == exp:
+                return False
+        # 1. prepare desired values (out-of-place).  A desired version that
+        # collides with the slot's LIVE version (stale exp) must not
+        # clobber its data: refuse before writing anything.  The exists()
+        # stat keeps the common path (fresh desired versions) to one cheap
+        # check per target.
+        for name, _exp, des in targets:
+            if pool.exists(data_rel(name, des)) and \
+                    des == self.slot_version(name) and \
+                    pool.read(data_rel(name, des)) != payloads[name]:
+                return False
         for name, _exp, des in targets:
             pool.write_persist(data_rel(name, des), payloads[name])
         # 2. the descriptor IS the write-ahead log
@@ -111,6 +126,13 @@ class Committer:
             for name, exp, _des in targets:
                 if exp:
                     pool.delete(data_rel(name, exp))  # GC old version
+        else:
+            # GC the desired data files written in step 1: the rolled-back
+            # slots never reference them, and leaving them would leak
+            # orphaned data/*.bin until the next recover()
+            for name, _exp, des in targets:
+                if des != self.slot_version(name):
+                    pool.delete(data_rel(name, des))
         return success
 
     # -- recovery -----------------------------------------------------------------

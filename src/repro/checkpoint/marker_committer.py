@@ -38,6 +38,16 @@ class MarkerCommitter:
     def commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
                payloads: Dict[str, bytes]) -> bool:
         pool = self.pool
+        # versions must advance + never clobber a live version's data
+        # (see Committer.commit steps 0/1)
+        for _name, exp, des in targets:
+            if des == exp:
+                return False
+        for name, _exp, des in targets:
+            if pool.exists(data_rel(name, des)) and \
+                    des == self.slot_version(name) and \
+                    pool.read(data_rel(name, des)) != payloads[name]:
+                return False
         for name, _exp, des in targets:
             pool.write_persist(data_rel(name, des), payloads[name])
         desc = {"id": cid, "state": ST_FAILED,
@@ -74,6 +84,11 @@ class MarkerCommitter:
             for name, exp, _des in targets:
                 if exp:
                     pool.delete(data_rel(name, exp))
+        else:
+            # GC desired data files from step 1 (same leak as Committer)
+            for name, _exp, des in targets:
+                if des != self.slot_version(name):
+                    pool.delete(data_rel(name, des))
         return success
 
     def recover(self) -> Dict[str, int]:

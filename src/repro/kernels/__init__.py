@@ -1,0 +1,9 @@
+"""Pallas kernels (TPU-native adaptations; interpret mode on CPU).
+
+- ``pmwcas_apply``   batched deterministic MwCAS conflict resolution
+- ``flash_attention``  fused attention for the model stack
+
+Import the public entry points from :mod:`repro.pmwcas` (MwCAS) or
+:mod:`repro.models.attention` (attention); these modules are the
+implementation layer.
+"""

@@ -34,14 +34,22 @@ def pmwcas_apply(words, addr, exp, des, *, use_kernel: bool = True,
     return new[:-1], success
 
 
-def reserve_slots(free_mask, requests, *, interpret: bool = True):
+def reserve_slots(free_mask, requests, *, use_kernel: bool = True,
+                  interpret: bool = True):
     """KV-cache slot reservation for the serving layer: request i atomically
     claims `requests[i]` slots (a K-word MwCAS on a free-bitmap word table).
 
     free_mask: uint32[W] (1 = free); requests: int32[B, K] candidate slot ids
     (<0 pad).  Returns (new_mask, granted[B]).
+
+    Semantics corner cases (asserted kernel == ref in tests):
+    - duplicate slot ids within one request claim the slot once and still
+      grant the request;
+    - an all-padded request is vacuously granted (claims nothing);
+    - overlapping requests are linearized by batch index (lower wins).
     """
     B, K = requests.shape
     exp = jnp.ones((B, K), jnp.uint32)    # expect free
     des = jnp.zeros((B, K), jnp.uint32)   # claim
-    return pmwcas_apply(free_mask, requests, exp, des, interpret=interpret)
+    return pmwcas_apply(free_mask, requests, exp, des,
+                        use_kernel=use_kernel, interpret=interpret)

@@ -1,0 +1,5 @@
+"""Launchers (train / serve / dryrun / report).
+
+Kept import-light: launching modules set XLA flags before jax backend
+initialization, so nothing here may touch device state at import time.
+"""

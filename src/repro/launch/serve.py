@@ -2,7 +2,7 @@
 
 Continuous batching: requests arrive with prompt lengths; admission
 reserves per-request KV-cache pages through the batched deterministic
-MwCAS primitive (repro.kernels.pmwcas_apply) — the TPU-native analogue of
+MwCAS primitive (repro.pmwcas.reserve_slots) — the TPU-native analogue of
 the paper's multi-word reservation (all pages of a request are granted
 atomically or not at all, with index order as the linearization).
 
@@ -19,8 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.kernels.pmwcas_apply import ops as mw_ops
 from repro.models import build_model
+from repro.pmwcas import reserve_slots
 
 
 class PageAllocator:
@@ -33,7 +33,7 @@ class PageAllocator:
     def admit(self, page_requests: np.ndarray):
         """page_requests: int32[B, K] candidate page ids (<0 pad).
         Returns granted: bool[B] — atomically all-or-nothing per request."""
-        self.free, granted = mw_ops.reserve_slots(
+        self.free, granted = reserve_slots(
             self.free, jnp.asarray(page_requests, jnp.int32))
         return np.asarray(granted)
 

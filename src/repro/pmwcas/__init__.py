@@ -1,0 +1,111 @@
+"""Unified PMwCAS API: one operation model, pluggable backends.
+
+The paper's contribution — persistent multi-word CAS with descriptors as
+write-ahead logs — exists in this repo on three substrates.  This package
+is the single public surface over all of them:
+
+- operation model: :class:`Target`, :class:`MwCASOp`, :class:`Descriptor`,
+  :class:`OpResult`
+- :class:`Backend` protocol with :class:`SimBackend`,
+  :class:`KernelBackend`, :class:`DurableBackend`
+- algorithm strategies :data:`OURS`, :data:`OURS_DF`, :data:`ORIGINAL`,
+  :data:`PCAS` (replacing the legacy magic strings)
+- the fluent :class:`SimSession` builder over the cycle-accurate simulator
+- :func:`run_differential` for cross-backend agreement checks
+
+Legacy entry points (``repro.core.run_sim``, ``repro.kernels.
+pmwcas_apply.ops``, ``repro.checkpoint.Committer``) remain importable as
+the implementation layer for one deprecation cycle; new code should
+import from here or from ``repro`` directly.  See DESIGN.md Sec. 3 for
+the backend matrix and Sec. 4 for the migration table.
+"""
+from repro.core import (CostModel, RecoveryError, SimConfig, SimResult,
+                        check_crash_consistency, committed_histogram,
+                        recover, run_sim, run_until)
+# Instrumentation vocabulary (counter slots / tag bits) — re-exported so
+# benchmarks and tests never reach into core.model.
+from repro.core.model import (ALGORITHMS, CNT_CAS, CNT_CYCLES, CNT_FAILS,
+                              CNT_FLUSH, CNT_HELPS, CNT_INVAL, CNT_LOAD,
+                              CNT_OPS, CNT_STORE, TAG_DESC, TAG_DESC_DIRTY,
+                              TAG_DIRTY, TAG_MASK, TAG_PAYLOAD, TAG_SHIFT,
+                              generate_ops, generate_schedule)
+
+from .algorithms import (Algorithm, ORIGINAL, OURS, OURS_DF, PCAS,
+                         STRATEGIES, resolve)
+from .backends import (Backend, DurableBackend, KernelBackend, SimBackend,
+                       UnsupportedBatch)
+from .descriptor import (Addr, Descriptor, MwCASOp, OpResult, Target,
+                         batch_width, ops_from_arrays, ops_to_arrays,
+                         results_from_mask)
+from .differential import (DifferentialReport, increment_batch,
+                           run_differential)
+from .session import SimSession
+
+
+# Batched-primitive entry points (wrap the kernel layer lazily: Pallas
+# imports are deferred until first use so `import repro.pmwcas` stays
+# cheap on machines without a compiled jaxlib cache).
+def pmwcas_apply(words, addr, exp, des, **kw):
+    """Batched MwCAS against a word table; see kernels.pmwcas_apply.ops."""
+    from repro.kernels.pmwcas_apply.ops import pmwcas_apply as _impl
+    return _impl(words, addr, exp, des, **kw)
+
+
+def reserve_slots(free_mask, requests, **kw):
+    """Atomic K-slot reservation on a free-bitmap (serving layer)."""
+    from repro.kernels.pmwcas_apply.ops import reserve_slots as _impl
+    return _impl(free_mask, requests, **kw)
+
+
+def pmwcas_apply_ref(words, addr, exp, des):
+    """Pure-jnp oracle of :func:`pmwcas_apply` (no Pallas)."""
+    from repro.kernels.pmwcas_apply.ref import pmwcas_apply as _impl
+    return _impl(words, addr, exp, des)
+
+
+def pmwcas_success_ref(addr, cur, exp):
+    """Pure-jnp success verdicts (condition (a) + (b))."""
+    from repro.kernels.pmwcas_apply.ref import pmwcas_success as _impl
+    return _impl(addr, cur, exp)
+
+
+def sequential_oracle(words, addr, exp, des):
+    """Numpy sequential one-touch oracle (containment reference)."""
+    from repro.kernels.pmwcas_apply.ref import sequential_oracle as _impl
+    return _impl(words, addr, exp, des)
+
+
+def pmwcas_success_pallas(addr, cur, exp, **kw):
+    """Raw Pallas success verdicts (tiling/interpret knobs exposed)."""
+    from repro.kernels.pmwcas_apply.kernel import \
+        pmwcas_success_pallas as _impl
+    return _impl(addr, cur, exp, **kw)
+
+
+__all__ = [
+    # operation model
+    "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",
+    "batch_width", "ops_to_arrays", "ops_from_arrays", "results_from_mask",
+    # strategies
+    "Algorithm", "OURS", "OURS_DF", "ORIGINAL", "PCAS", "STRATEGIES",
+    "resolve", "ALGORITHMS",
+    # backends
+    "Backend", "SimBackend", "KernelBackend", "DurableBackend",
+    "UnsupportedBatch",
+    # session + sim surface
+    "SimSession", "SimConfig", "SimResult", "CostModel",
+    "run_sim", "run_until", "generate_ops", "generate_schedule",
+    # recovery
+    "recover", "committed_histogram", "check_crash_consistency",
+    "RecoveryError",
+    # differential
+    "run_differential", "increment_batch", "DifferentialReport",
+    # batched primitives
+    "pmwcas_apply", "pmwcas_apply_ref", "pmwcas_success_ref",
+    "pmwcas_success_pallas", "reserve_slots", "sequential_oracle",
+    # instrumentation vocabulary
+    "CNT_CAS", "CNT_CYCLES", "CNT_FAILS", "CNT_FLUSH", "CNT_HELPS",
+    "CNT_INVAL", "CNT_LOAD", "CNT_OPS", "CNT_STORE",
+    "TAG_DESC", "TAG_DESC_DIRTY", "TAG_DIRTY", "TAG_MASK", "TAG_PAYLOAD",
+    "TAG_SHIFT",
+]

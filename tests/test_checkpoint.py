@@ -7,9 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (AsyncCheckpointManager, CheckpointManager,
-                              Committer, MarkerCommitter, PMemPool,
-                              SimulatedCrash)
+from repro import (AsyncCheckpointManager, CheckpointManager, Committer,
+                   MarkerCommitter, PMemPool, SimulatedCrash)
 from repro.checkpoint.committer import data_rel
 
 
@@ -37,6 +36,64 @@ def test_commit_payloads_roundtrip(tmp_path):
     c = Committer(pool)
     c.commit("c1", [("a", 0, 7)], {"a": b"hello"})
     assert pool.read(data_rel("a", c.slot_version("a"))) == b"hello"
+
+
+@pytest.mark.parametrize("committer_cls", [Committer, MarkerCommitter])
+def test_failed_commit_gcs_desired_data(tmp_path, committer_cls):
+    """Regression: a failed commit must delete the desired data files it
+    wrote in step 1 instead of leaking orphaned data/*.bin until the next
+    recover()."""
+    pool = PMemPool(tmp_path)
+    c = committer_cls(pool)
+    names = ["a", "b"]
+    assert c.commit("c1", [(n, 0, 1) for n in names],
+                    {n: b"v1" for n in names})
+    assert sorted(pool.listdir("data")) == ["a.v1.bin", "b.v1.bin"]
+    # 'a' reserves fine (exp matches), 'b' fails its expected check ->
+    # the whole commit rolls back; both desired files must be GC'd
+    bad = [("a", 1, 2), ("b", 99, 2)]
+    assert not c.commit("c2", bad, {n: b"v2" for n, _, _ in bad})
+    assert c.slot_version("a") == 1 and c.slot_version("b") == 1
+    assert sorted(pool.listdir("data")) == ["a.v1.bin", "b.v1.bin"]
+
+
+def test_failed_commit_gc_spares_live_versions(tmp_path):
+    """The failure-path GC must not delete a desired file that equals the
+    slot's live version (degenerate no-op commit shapes)."""
+    pool = PMemPool(tmp_path)
+    c = Committer(pool)
+    assert c.commit("c1", [("a", 0, 1)], {"a": b"v1"})
+    # desired == live version, expected wrong -> fails, but a.v1.bin stays
+    assert not c.commit("c2", [("a", 99, 1)], {"a": b"v1"})
+    assert c.slot_version("a") == 1
+    assert pool.listdir("data") == ["a.v1.bin"]
+    assert pool.read(data_rel("a", 1)) == b"v1"
+
+
+@pytest.mark.parametrize("committer_cls", [Committer, MarkerCommitter])
+def test_noop_version_commit_rejected_keeps_data(tmp_path, committer_cls):
+    """Regression: an exp == des 'no-op move' used to pass every check and
+    then GC its own live data file in step 6 (data loss with the slot
+    still pointing at the deleted version).  Versions must advance."""
+    pool = PMemPool(tmp_path)
+    c = committer_cls(pool)
+    assert c.commit("c1", [("a", 0, 1)], {"a": b"GOOD"})
+    assert not c.commit("c2", [("a", 1, 1)], {"a": b"GOOD"})
+    assert c.slot_version("a") == 1
+    assert pool.read(data_rel("a", 1)) == b"GOOD"   # live data intact
+
+
+@pytest.mark.parametrize("committer_cls", [Committer, MarkerCommitter])
+def test_failed_commit_never_clobbers_live_data(tmp_path, committer_cls):
+    """Regression: a commit whose desired version collides with the slot's
+    LIVE version must refuse before step 1 writes anything — otherwise the
+    failed commit's payload would silently replace the live data file."""
+    pool = PMemPool(tmp_path)
+    c = committer_cls(pool)
+    assert c.commit("c1", [("a", 0, 1)], {"a": b"GOOD"})
+    assert not c.commit("c2", [("a", 99, 1)], {"a": b"EVIL"})
+    assert c.slot_version("a") == 1
+    assert pool.read(data_rel("a", 1)) == b"GOOD"
 
 
 @pytest.mark.parametrize("committer_cls", [Committer, MarkerCommitter])

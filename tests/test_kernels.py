@@ -1,17 +1,24 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes,
-dtypes and mask variants, plus hypothesis property tests for the batched
-MwCAS primitive's invariants."""
+dtypes and mask variants.  Property tests for the batched MwCAS
+invariants run under hypothesis when it is installed (optional dep:
+``pip install -e .[test]``) and fall back to a deterministic seed sweep
+otherwise."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dependency
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.flash_attention.kernel import flash_attention_flat
-from repro.kernels.pmwcas_apply import ops as mw_ops
-from repro.kernels.pmwcas_apply import ref as mw_ref
-from repro.kernels.pmwcas_apply.kernel import pmwcas_success_pallas
 from repro.models.attention import _sdpa_ref
+from repro.pmwcas import (pmwcas_apply_ref, pmwcas_success_pallas,
+                          pmwcas_success_ref, reserve_slots,
+                          sequential_oracle)
 
 
 # ---------------------------------------------------------------------------
@@ -77,17 +84,14 @@ def test_pmwcas_kernel_matches_ref(W, B, K, tb):
     rng = np.random.default_rng(42 + W + B + K)
     words, addr, exp, des = _random_case(rng, W, B, K)
     cur = jnp.asarray(words)[jnp.maximum(jnp.asarray(addr), 0)]
-    s_ref = np.asarray(mw_ref.pmwcas_success(jnp.asarray(addr), cur,
-                                             jnp.asarray(exp)))
+    s_ref = np.asarray(pmwcas_success_ref(jnp.asarray(addr), cur,
+                                          jnp.asarray(exp)))
     s_ker = np.asarray(pmwcas_success_pallas(jnp.asarray(addr), cur,
                                              jnp.asarray(exp), tb=tb))
     np.testing.assert_array_equal(s_ref, s_ker)
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 2 ** 16), B=st.integers(1, 40),
-       K=st.integers(1, 4), W=st.sampled_from([16, 64, 256]))
-def test_pmwcas_invariants(seed, B, K, W):
+def _check_pmwcas_invariants(seed, B, K, W):
     """Conservative-batch invariants against the sequential oracle:
     1. every batch success also succeeds sequentially (containment),
     2. winners' writes match, losers leave words untouched,
@@ -96,10 +100,10 @@ def test_pmwcas_invariants(seed, B, K, W):
     if K > W:
         K = W
     words, addr, exp, des = _random_case(rng, W, B, K)
-    new, succ = mw_ref.pmwcas_apply(jnp.asarray(words), jnp.asarray(addr),
-                                    jnp.asarray(exp), jnp.asarray(des))
+    new, succ = pmwcas_apply_ref(jnp.asarray(words), jnp.asarray(addr),
+                                 jnp.asarray(exp), jnp.asarray(des))
     new, succ = np.asarray(new), np.asarray(succ)
-    _, s_seq = mw_ref.sequential_oracle(words, addr, exp, des)
+    _, s_seq = sequential_oracle(words, addr, exp, des)
     assert (~succ | s_seq).all()
     touched = {}
     for i in range(B):
@@ -115,6 +119,40 @@ def test_pmwcas_invariants(seed, B, K, W):
         assert new[a] == expect
 
 
+# Deterministic fallback sweep: always runs, hypothesis or not.
+@pytest.mark.parametrize("seed,B,K,W", [
+    (0, 1, 1, 16), (1, 40, 4, 16), (2, 17, 2, 64), (3, 32, 3, 256),
+    (4, 8, 4, 16), (5, 25, 1, 64),
+])
+def test_pmwcas_invariants_deterministic(seed, B, K, W):
+    _check_pmwcas_invariants(seed, B, K, W)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), B=st.integers(1, 40),
+           K=st.integers(1, 4), W=st.sampled_from([16, 64, 256]))
+    def test_pmwcas_invariants(seed, B, K, W):
+        _check_pmwcas_invariants(seed, B, K, W)
+else:
+    def test_pmwcas_invariants():
+        pytest.importorskip("hypothesis")  # records skip: optional dep absent
+
+
+# ---------------------------------------------------------------------------
+# reserve_slots (serving-layer slot admission)
+# ---------------------------------------------------------------------------
+
+def _both_paths(free, reqs):
+    """Run reserve_slots through the Pallas kernel AND the jnp oracle,
+    assert they agree, return the (mask, granted) verdict."""
+    new_k, g_k = reserve_slots(free, reqs, use_kernel=True)
+    new_r, g_r = reserve_slots(free, reqs, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    return np.asarray(new_k), np.asarray(g_k)
+
+
 def test_reserve_slots_grants_disjoint():
     """Serving-layer use: concurrent requests get disjoint cache slots."""
     free = jnp.ones(64, jnp.uint32)
@@ -122,8 +160,7 @@ def test_reserve_slots_grants_disjoint():
     reqs = jnp.asarray(
         np.stack([np.sort(rng.choice(64, 4, replace=False))
                   for _ in range(16)]), jnp.int32)
-    new, granted = mw_ops.reserve_slots(free, reqs)
-    new, granted = np.asarray(new), np.asarray(granted)
+    new, granted = _both_paths(free, reqs)
     claimed = []
     for i in range(16):
         if granted[i]:
@@ -133,3 +170,55 @@ def test_reserve_slots_grants_disjoint():
     # all other slots still free
     rest = set(range(64)) - set(claimed)
     assert all(new[list(rest)] == 1)
+
+
+def test_reserve_slots_duplicate_ids_within_request():
+    """A request listing the same slot twice claims it once and is still
+    granted (the duplicate is a self-conflict, not a cross-request one)."""
+    free = jnp.ones(8, jnp.uint32)
+    reqs = jnp.asarray([[3, 3, 5, -1]], jnp.int32)
+    new, granted = _both_paths(free, reqs)
+    assert granted[0]
+    assert new[3] == 0 and new[5] == 0
+    assert new[[0, 1, 2, 4, 6, 7]].sum() == 6  # everything else untouched
+
+
+def test_reserve_slots_all_padded_request():
+    """An all-padded request (addr < 0 everywhere) is vacuously granted
+    and claims nothing."""
+    free = jnp.ones(8, jnp.uint32)
+    reqs = jnp.asarray([[-1, -1, -1], [0, 1, -1]], jnp.int32)
+    new, granted = _both_paths(free, reqs)
+    assert granted[0] and granted[1]
+    assert new[0] == 0 and new[1] == 0
+    assert new[2:].sum() == 6
+
+
+def test_reserve_slots_contention_lower_index_wins():
+    """Overlapping requests linearize by batch index: the lower-index
+    request wins every contested slot; later requests sharing any slot
+    with a passing earlier request are denied atomically (no partial
+    grants)."""
+    free = jnp.ones(16, jnp.uint32)
+    reqs = jnp.asarray([
+        [0, 1, 2, 3],      # wins
+        [3, 4, 5, 6],      # shares 3 with request 0 -> denied, grants none
+        [7, 8, 9, 10],     # disjoint -> wins
+        [4, 5, 11, 12],    # 4/5 were NOT claimed (request 1 denied) but
+                           # request 1 passed its expected check, so the
+                           # conservative one-shot verdict still denies
+    ], jnp.int32)
+    new, granted = _both_paths(free, reqs)
+    assert granted.tolist() == [True, False, True, False]
+    assert all(new[s] == 0 for s in [0, 1, 2, 3, 7, 8, 9, 10])
+    # denied requests must not leave partial claims
+    assert all(new[s] == 1 for s in [4, 5, 6, 11, 12, 13, 14, 15])
+
+
+def test_reserve_slots_already_claimed_slot_fails():
+    """Requests against a non-free slot fail their expected check."""
+    free = jnp.ones(8, jnp.uint32).at[2].set(0)
+    reqs = jnp.asarray([[1, 2, -1]], jnp.int32)
+    new, granted = _both_paths(free, reqs)
+    assert not granted[0]
+    assert new[1] == 1          # untouched: all-or-nothing

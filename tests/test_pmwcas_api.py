@@ -1,0 +1,187 @@
+"""The unified repro.pmwcas API: operation model validation, the fluent
+SimSession builder, backend adapters, and the cross-backend differential
+check — one MwCASOp batch through sim, kernel and durable backends must
+yield identical per-op verdicts and final values."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.pmwcas import (DurableBackend, KernelBackend, MwCASOp, OpResult,
+                          ORIGINAL, OURS, OURS_DF, PCAS, SimBackend,
+                          SimConfig, SimSession, Target, UnsupportedBatch,
+                          increment_batch, ops_from_arrays, ops_to_arrays,
+                          resolve, run_differential)
+
+
+# ---------------------------------------------------------------------------
+# operation model
+# ---------------------------------------------------------------------------
+
+def test_mwcas_op_validation():
+    with pytest.raises(ValueError):
+        MwCASOp([])                                    # no targets
+    with pytest.raises(ValueError):
+        MwCASOp([(0, 1, 2), (0, 3, 4)])                # duplicate address
+    with pytest.raises(ValueError):
+        Target(-1, 0, 1)                               # negative address
+    op = MwCASOp([(3, 1, 2), (1, 5, 9)])
+    assert op.sorted().addrs == (1, 3)
+    assert not op.is_increment()                       # 5 -> 9 is a jump
+    assert MwCASOp.increment([1, 3], [5, 1]).is_increment()
+
+
+def test_ops_array_roundtrip():
+    ops = [MwCASOp([(0, 1, 2), (4, 5, 6)]), MwCASOp([(2, 3, 4)])]
+    addr, exp, des = ops_to_arrays(ops)
+    assert addr.shape == (2, 2) and addr[1, 1] == -1   # padded
+    back = ops_from_arrays(addr, exp, des)
+    assert back == ops
+
+
+def test_algorithm_strategies():
+    assert resolve("ours") is OURS
+    assert resolve(OURS_DF) is OURS_DF
+    with pytest.raises(ValueError):
+        resolve("nope")
+    assert OURS.cas_per_op(3) == 6 and ORIGINAL.cas_per_op(3) == 12
+    assert PCAS.max_k == 1 and not PCAS.supports_k(2)
+    assert str(OURS) == "ours"                         # legacy-string bridge
+    # flush formula matches the engine (desc_lines=2 at k=3, see
+    # SimConfig.desc_lines and quickstart's measured 9/12 flushes per op)
+    assert OURS.flush_per_op(3, desc_lines=2) == 9
+    assert OURS_DF.flush_per_op(3, desc_lines=2) == 12
+    assert ORIGINAL.flush_per_op(3) is None
+    assert PCAS.flush_per_op(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# SimSession builder
+# ---------------------------------------------------------------------------
+
+def test_session_is_immutable_and_forkable():
+    base = SimSession().with_algorithm(OURS).with_words(128).with_k(2)
+    a = base.with_threads(2)
+    b = base.with_threads(4)
+    assert base.cfg.n_threads == SimConfig().n_threads
+    assert (a.cfg.n_threads, b.cfg.n_threads) == (2, 4)
+    assert a.cfg.n_words == b.cfg.n_words == 128
+    assert a.algorithm is OURS
+
+
+def test_session_runs_and_matches_legacy_path():
+    from repro.pmwcas import run_sim
+    s = (SimSession().with_algorithm(OURS).with_threads(2).with_words(64)
+         .with_k(2).with_steps(1500).with_max_ops(32).with_seed(9))
+    r1 = s.run()
+    r2 = run_sim(s.cfg)                  # legacy entry point, same config
+    assert r1.ops_completed == r2.ops_completed
+    assert np.array_equal(r1.counters, r2.counters)
+
+
+def test_session_with_schedule_crash():
+    s = (SimSession().with_algorithm(OURS_DF).with_threads(4).with_words(32)
+         .with_k(2).with_steps(600).with_max_ops(16))
+    rec, hist = s.crash_at(211)
+    assert rec.shape == (32,)
+    assert (rec & 0b111 == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+def test_kernel_backend_carries_state():
+    kb = KernelBackend(values=[5, 5, 5])
+    r1 = kb.execute([MwCASOp([(0, 5, 7)])])
+    assert r1[0].success and kb.read(0) == 7
+    # second batch sees the first batch's writes
+    r2 = kb.execute([MwCASOp([(0, 5, 9)])])
+    assert not r2[0].success and kb.read(0) == 7
+
+
+def test_sim_backend_rejects_inexpressible_batches():
+    sb = SimBackend(8, algorithm=OURS, values=[1] * 8)
+    with pytest.raises(UnsupportedBatch):
+        sb.execute([MwCASOp([(0, 1, 5)])])             # not an increment
+    with pytest.raises(UnsupportedBatch):
+        sb.execute([MwCASOp([(0, 9, 10)])])            # stale expected
+    with pytest.raises(UnsupportedBatch):
+        sb.execute([MwCASOp([(3, 1, 2), (1, 1, 2)])])  # unsorted addrs
+    with pytest.raises(UnsupportedBatch):              # PCAS is single-word
+        SimBackend(8, algorithm=PCAS, values=[1] * 8).execute(
+            [MwCASOp([(0, 1, 2), (1, 1, 2)])])
+
+
+def test_sim_backend_counts_real_work():
+    sb = SimBackend(8, algorithm=OURS, values=[0] * 8)
+    res = sb.execute([MwCASOp.increment([0, 1], [0, 0]),
+                      MwCASOp.increment([2, 3], [0, 0])])
+    assert all(r.success for r in res)
+    assert sb.counters is not None and sb.counters.sum() > 0
+    assert sb.values()[:4].tolist() == [1, 1, 1, 1]
+
+
+def test_durable_backend_is_actually_durable(tmp_path):
+    db = DurableBackend(tmp_path)
+    db.seed({0: 3, 1: 4})
+    res = db.execute([MwCASOp([(0, 3, 4), (1, 4, 5)])])
+    assert res[0].success
+    # survive a crash: unpersisted state dropped, committed state recovered
+    db2 = db.crash()
+    assert db2.read(0) == 4 and db2.read(1) == 5
+
+
+def test_guard_word_ops_agree_kernel_vs_durable(tmp_path):
+    """A desired == expected target is a guard word: it participates in
+    the verdict (expected check + address claim) but moves nothing.
+    Kernel and durable backends must agree on such ops."""
+    op = MwCASOp([(0, 3, 3), (1, 4, 5)])        # word 0 guards, word 1 moves
+    kb = KernelBackend(values=[3, 4])
+    db = DurableBackend(tmp_path)
+    db.seed({0: 3, 1: 4})
+    (rk,) = kb.execute([op])
+    (rd,) = db.execute([op])
+    assert rk.success and rd.success
+    assert kb.read(0) == 3 and kb.read(1) == 5
+    assert db.read(0) == 3 and db.read(1) == 5
+    # guard word with a WRONG expectation fails everywhere
+    op2 = MwCASOp([(0, 99, 99), (1, 5, 6)])
+    (rk2,) = kb.execute([op2])
+    (rd2,) = db.execute([op2])
+    assert not rk2.success and not rd2.success
+    assert kb.read(1) == 5 and db.read(1) == 5
+
+
+def test_op_result_truthiness():
+    op = MwCASOp([(0, 1, 2)])
+    assert OpResult(0, True, "kernel", op)
+    assert not OpResult(0, False, "kernel", op)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance differential: sim == kernel == durable
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alg,k", [(OURS, 3), (OURS_DF, 2), (ORIGINAL, 2),
+                                   (PCAS, 1)])
+def test_cross_backend_differential(tmp_path, alg, k):
+    """One MwCASOp batch through SimBackend, KernelBackend and
+    DurableBackend: identical per-op success verdicts and final values."""
+    initial, ops = increment_batch(n_words=24, k=k, n_ops=8,
+                                   seed=100 + k)
+    assert len(ops) >= 4 and any(True for _ in ops)
+    rep = run_differential(ops, initial, algorithm=alg,
+                           durable_root=tmp_path / alg.name,
+                           use_kernel=True)
+    assert rep.agree, rep.summary()
+    # the batch must actually exercise both outcomes
+    v = rep.verdicts["kernel"]
+    assert v.any() and (~v).any(), "degenerate batch: craft better conflicts"
+
+
+def test_differential_uses_all_three_backends(tmp_path):
+    initial, ops = increment_batch(n_words=16, k=2, n_ops=6, seed=42)
+    rep = run_differential(ops, initial, durable_root=tmp_path)
+    assert set(rep.verdicts) == {"sim", "kernel", "durable"}
+    assert set(rep.values) == {"sim", "kernel", "durable"}

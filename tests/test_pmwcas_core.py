@@ -1,27 +1,32 @@
 """Core PMwCAS algorithm tests: quiescent invariants + the paper's
-instruction-count claims (Sec. 2.1/3/4)."""
+instruction-count claims (Sec. 2.1/3/4), through the repro.pmwcas
+public surface (SimSession + algorithm strategies)."""
 import numpy as np
 import pytest
 
-from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
-                        SimConfig, run_sim)
-from repro.core.model import (CNT_CAS, CNT_FLUSH, CNT_HELPS, TAG_DIRTY)
+from repro.pmwcas import (CNT_CAS, CNT_FLUSH, CNT_HELPS, CNT_INVAL,
+                          ORIGINAL, OURS, OURS_DF, PCAS, SimSession,
+                          TAG_DIRTY)
 
 
-def _cfg(alg, k, **kw):
-    base = dict(algorithm=alg, n_threads=4, n_words=256, k=k,
-                n_steps=4000, max_ops=64, seed=7)
+def _session(alg, k, **kw) -> SimSession:
+    base = dict(n_threads=4, n_words=256, k=k, n_steps=4000, max_ops=64,
+                seed=7)
     base.update(kw)
-    return SimConfig(**base)
+    return SimSession().with_algorithm(alg).configure(**base)
 
 
-QUIESCE = [(ALG_OURS, 3), (ALG_OURS_DF, 3), (ALG_ORIGINAL, 3), (ALG_PCAS, 1)]
+def _run(alg, k, **kw):
+    return _session(alg, k, **kw).run()
+
+
+QUIESCE = [(OURS, 3), (OURS_DF, 3), (ORIGINAL, 3), (PCAS, 1)]
 
 
 @pytest.mark.parametrize("alg,k", QUIESCE)
 def test_quiescent_sum_invariant(alg, k):
     """Every successful k-word op adds exactly 1 to each target word."""
-    r = run_sim(_cfg(alg, k))
+    r = _run(alg, k)
     assert r.ops_completed > 0
     # cache is always clean at quiescence
     assert (r.tags("cache") == 0).all()
@@ -30,7 +35,7 @@ def test_quiescent_sum_invariant(alg, k):
     # pmem holds the same values; ours/ours_df also clear tags in pmem,
     # original/pcas legitimately leave dirty flags (single-flush finalize)
     ptags = r.tags("pmem")
-    if alg in (ALG_OURS, ALG_OURS_DF):
+    if alg in (OURS, OURS_DF):
         assert (ptags == 0).all()
         assert np.array_equal(r.state["cache"], r.state["pmem"])
     else:
@@ -42,39 +47,41 @@ def test_quiescent_sum_invariant(alg, k):
 @pytest.mark.parametrize("alg,k", QUIESCE)
 def test_no_descriptor_references_leak(alg, k):
     """The paper's no-GC claim: zero outstanding references at quiescence."""
-    r = run_sim(_cfg(alg, k))
+    r = _run(alg, k)
     assert (r.state["ref_cache"] == 0).all()
     assert (r.state["ref_pmem"] == 0).all()
 
 
 def test_cas_counts_ours_2k():
-    """Sec 2.1: ours needs 2k CAS-class ops per op in the no-conflict case."""
+    """Sec 2.1: ours needs 2k CAS-class ops per op in the no-conflict case,
+    exactly the strategy object's analytical claim."""
     # single thread -> zero conflicts -> exact counts
-    r = run_sim(_cfg(ALG_OURS, 3, n_threads=1, n_steps=3000))
+    r = _run(OURS, 3, n_threads=1, n_steps=3000)
     assert r.ops_completed > 10
-    assert r.per_op(CNT_CAS) == pytest.approx(2 * 3, abs=0.01)
+    assert r.per_op(CNT_CAS) == pytest.approx(OURS.cas_per_op(3), abs=0.01)
 
 
 def test_cas_counts_original_4k():
     """Sec 2.1: the original algorithm needs 4k CAS-class ops on the target
     words (+1 for the status-word CAS, which the paper does not count)."""
-    r = run_sim(_cfg(ALG_ORIGINAL, 3, n_threads=1, n_steps=3000))
+    r = _run(ORIGINAL, 3, n_threads=1, n_steps=3000)
     assert r.ops_completed > 10
-    assert r.per_op(CNT_CAS) == pytest.approx(4 * 3 + 1, abs=0.01)
+    assert r.per_op(CNT_CAS) == pytest.approx(ORIGINAL.cas_per_op(3) + 1,
+                                              abs=0.01)
 
 
 def test_cas_counts_pcas():
     """PCAS: one CAS + one clear store (2 CAS-class), single flush."""
-    r = run_sim(_cfg(ALG_PCAS, 1, n_threads=1, n_steps=2000))
-    assert r.per_op(CNT_CAS) == pytest.approx(2, abs=0.01)
+    r = _run(PCAS, 1, n_threads=1, n_steps=2000)
+    assert r.per_op(CNT_CAS) == pytest.approx(PCAS.cas_per_op(1), abs=0.01)
     assert r.per_op(CNT_FLUSH) == pytest.approx(1, abs=0.01)
 
 
 def test_flush_counts_ours_vs_df():
     """Dirty flags add exactly k flushes per op (lines 20-22 of Fig. 4)."""
     k = 3
-    r1 = run_sim(_cfg(ALG_OURS, k, n_threads=1, n_steps=3000))
-    r2 = run_sim(_cfg(ALG_OURS_DF, k, n_threads=1, n_steps=3000))
+    r1 = _run(OURS, k, n_threads=1, n_steps=3000)
+    r2 = _run(OURS_DF, k, n_threads=1, n_steps=3000)
     assert r2.per_op(CNT_FLUSH) - r1.per_op(CNT_FLUSH) == pytest.approx(
         k, abs=0.01)
 
@@ -83,8 +90,8 @@ def test_ours_beats_original_under_contention():
     """Fig. 9's headline: fewer CAS/flush events under high contention."""
     kw = dict(n_threads=8, n_words=64, alpha=1.0, n_steps=12_000,
               max_ops=128)
-    ours = run_sim(_cfg(ALG_OURS, 3, **kw))
-    orig = run_sim(_cfg(ALG_ORIGINAL, 3, **kw))
+    ours = _run(OURS, 3, **kw)
+    orig = _run(ORIGINAL, 3, **kw)
     assert ours.per_op(CNT_CAS) < orig.per_op(CNT_CAS)
     assert ours.per_op(CNT_FLUSH) < orig.per_op(CNT_FLUSH)
     assert ours.throughput > orig.throughput
@@ -93,8 +100,7 @@ def test_ours_beats_original_under_contention():
 
 def test_original_helping_completes_foreign_ops():
     """Readers of the original algorithm help in-flight operations."""
-    r = run_sim(_cfg(ALG_ORIGINAL, 2, n_threads=8, n_words=32, alpha=1.0,
-                     n_steps=8000))
+    r = _run(ORIGINAL, 2, n_threads=8, n_words=32, alpha=1.0, n_steps=8000)
     assert r.total(CNT_HELPS) > 0
     got = r.payload_values("cache").astype(np.int64)
     assert np.array_equal(got, r.expected_histogram())
@@ -102,8 +108,8 @@ def test_original_helping_completes_foreign_ops():
 
 def test_determinism():
     """Same config => bit-identical results."""
-    a = run_sim(_cfg(ALG_OURS, 3))
-    b = run_sim(_cfg(ALG_OURS, 3))
+    a = _run(OURS, 3)
+    b = _run(OURS, 3)
     assert np.array_equal(a.state["pmem"], b.state["pmem"])
     assert np.array_equal(a.counters, b.counters)
 
@@ -111,9 +117,8 @@ def test_determinism():
 def test_word_geometry_false_sharing():
     """Smaller blocks => words share cache lines => more invalidations
     (the Fig. 14 mechanism)."""
-    from repro.core.model import CNT_INVAL
     kw = dict(n_threads=8, n_words=512, alpha=1.0, n_steps=10_000,
               max_ops=128)
-    big = run_sim(_cfg(ALG_OURS, 1, block_bytes=256, **kw))
-    small = run_sim(_cfg(ALG_OURS, 1, block_bytes=8, **kw))
+    big = _run(OURS, 1, block_bytes=256, **kw)
+    small = _run(OURS, 1, block_bytes=8, **kw)
     assert small.per_op(CNT_INVAL) > big.per_op(CNT_INVAL)

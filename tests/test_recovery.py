@@ -1,91 +1,128 @@
 """Crash-recovery consistency: the paper's Figs. 6/7 state machines, tested
-by crashing at many points of real schedules and at hypothesis-chosen
-configurations.  The central invariant:
+by crashing at many points of real schedules.  The central invariant:
 
     recovered(w) == initial(w) + #(durably-committed ops covering w)
 
 where durable commitment is exactly "state=Succeeded was persisted"
-(Fig. 4 line 15) — descriptors acting as write-ahead logs."""
+(Fig. 4 line 15) — descriptors acting as write-ahead logs.
+
+Property tests run under hypothesis when installed (``pip install -e
+.[test]``); a deterministic configuration sweep runs regardless."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
-                        SimConfig, check_crash_consistency, recover,
-                        run_until)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dependency
+    HAVE_HYPOTHESIS = False
 
-ALGS = [(ALG_OURS, 3), (ALG_OURS_DF, 3), (ALG_ORIGINAL, 2), (ALG_PCAS, 1)]
+from repro.pmwcas import (ORIGINAL, OURS, OURS_DF, PCAS, SimConfig,
+                          SimSession, check_crash_consistency, recover,
+                          run_until)
+
+ALGS = [(OURS, 3), (OURS_DF, 3), (ORIGINAL, 2), (PCAS, 1)]
 
 
-def _cfg(alg, k, seed=3, **kw):
-    base = dict(algorithm=alg, n_threads=4, n_words=64, k=k,
-                n_steps=1200, max_ops=32, seed=seed)
+def _session(alg, k, seed=3, **kw) -> SimSession:
+    base = dict(n_threads=4, n_words=64, k=k, n_steps=1200, max_ops=32,
+                seed=seed)
     base.update(kw)
-    return SimConfig(**base)
+    return SimSession().with_algorithm(alg).configure(**base)
 
 
 @pytest.mark.parametrize("alg,k", ALGS)
 def test_crash_sweep(alg, k):
     """Crash at a grid of points across one schedule."""
-    cfg = _cfg(alg, k)
-    for step in range(1, cfg.n_steps, 53):
-        r = run_until(cfg, step)
-        check_crash_consistency(cfg, r.state)
+    s = _session(alg, k)
+    for step in range(1, s.cfg.n_steps, 53):
+        s.crash_at(step)
 
 
 @pytest.mark.parametrize("alg,k", ALGS)
 def test_crash_exhaustive_prefix(alg, k):
     """Every single crash point of a short hot schedule (16 words, dense
     conflicts) recovers consistently."""
-    cfg = _cfg(alg, k, n_words=16, n_steps=400, alpha=1.0)
+    s = _session(alg, k, n_words=16, n_steps=400, alpha=1.0)
     for step in range(1, 400, 1):
-        r = run_until(cfg, step)
-        check_crash_consistency(cfg, r.state)
+        s.crash_at(step)
 
 
 @pytest.mark.parametrize("alg,k", ALGS)
 def test_recovery_idempotent(alg, k):
-    cfg = _cfg(alg, k)
-    r = run_until(cfg, 777)
-    rec1 = recover(cfg, r.state)
+    s = _session(alg, k)
+    r = s.run_until(777)
+    rec1 = recover(s.cfg, r.state)
     st2 = dict(r.state)
     st2["pmem"] = rec1
-    rec2 = recover(cfg, st2)
+    rec2 = recover(s.cfg, st2)
     assert np.array_equal(rec1, rec2)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    alg=st.sampled_from([ALG_OURS, ALG_OURS_DF, ALG_ORIGINAL]),
-    k=st.integers(min_value=1, max_value=4),
-    threads=st.integers(min_value=2, max_value=6),
-    seed=st.integers(min_value=0, max_value=2 ** 16),
-    crash_frac=st.floats(min_value=0.01, max_value=0.99),
-    alpha=st.sampled_from([0.0, 1.0]),
-)
-def test_crash_consistency_property(alg, k, threads, seed, crash_frac, alpha):
-    """Hypothesis: any (algorithm, geometry, skew, schedule, crash point)
-    combination recovers to the committed-prefix state."""
-    cfg = SimConfig(algorithm=alg, n_threads=threads, n_words=32, k=k,
-                    n_steps=600, max_ops=16, seed=seed, alpha=alpha)
-    step = max(1, int(600 * crash_frac))
-    r = run_until(cfg, step)
-    check_crash_consistency(cfg, r.state)
+def _check_crash_property(alg, k, threads, seed, crash_frac, alpha):
+    """Any (algorithm, geometry, skew, schedule, crash point) combination
+    recovers to the committed-prefix state."""
+    s = (SimSession().with_algorithm(alg)
+         .configure(n_threads=threads, n_words=32, k=k, n_steps=600,
+                    max_ops=16, seed=seed, alpha=alpha))
+    s.crash_at(max(1, int(600 * crash_frac)))
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(min_value=0, max_value=2 ** 16),
-       crash_frac=st.floats(min_value=0.01, max_value=0.99))
-def test_crash_consistency_pcas_property(seed, crash_frac):
-    cfg = SimConfig(algorithm=ALG_PCAS, n_threads=4, n_words=16, k=1,
+# Deterministic sweep: always runs, hypothesis or not.
+@pytest.mark.parametrize("alg,k,threads,seed,crash_frac,alpha", [
+    (OURS, 3, 4, 0, 0.13, 1.0),
+    (OURS, 1, 2, 1, 0.77, 0.0),
+    (OURS_DF, 4, 6, 2, 0.42, 1.0),
+    (OURS_DF, 2, 3, 3, 0.95, 0.0),
+    (ORIGINAL, 2, 4, 4, 0.31, 1.0),
+    (ORIGINAL, 3, 5, 5, 0.58, 0.0),
+])
+def test_crash_consistency_deterministic(alg, k, threads, seed, crash_frac,
+                                         alpha):
+    _check_crash_property(alg, k, threads, seed, crash_frac, alpha)
+
+
+@pytest.mark.parametrize("seed,crash_frac", [(0, 0.2), (1, 0.6), (2, 0.9)])
+def test_crash_consistency_pcas_deterministic(seed, crash_frac):
+    cfg = SimConfig(algorithm=PCAS.name, n_threads=4, n_words=16, k=1,
                     n_steps=600, max_ops=16, seed=seed, alpha=1.0)
     r = run_until(cfg, max(1, int(600 * crash_frac)))
     check_crash_consistency(cfg, r.state)
 
 
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        alg=st.sampled_from([OURS, OURS_DF, ORIGINAL]),
+        k=st.integers(min_value=1, max_value=4),
+        threads=st.integers(min_value=2, max_value=6),
+        seed=st.integers(min_value=0, max_value=2 ** 16),
+        crash_frac=st.floats(min_value=0.01, max_value=0.99),
+        alpha=st.sampled_from([0.0, 1.0]),
+    )
+    def test_crash_consistency_property(alg, k, threads, seed, crash_frac,
+                                        alpha):
+        _check_crash_property(alg, k, threads, seed, crash_frac, alpha)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 16),
+           crash_frac=st.floats(min_value=0.01, max_value=0.99))
+    def test_crash_consistency_pcas_property(seed, crash_frac):
+        cfg = SimConfig(algorithm=PCAS.name, n_threads=4, n_words=16, k=1,
+                        n_steps=600, max_ops=16, seed=seed, alpha=1.0)
+        r = run_until(cfg, max(1, int(600 * crash_frac)))
+        check_crash_consistency(cfg, r.state)
+else:
+    def test_crash_consistency_property():
+        pytest.importorskip("hypothesis")
+
+    def test_crash_consistency_pcas_property():
+        pytest.importorskip("hypothesis")
+
+
 def test_recovered_state_has_no_tags():
     for alg, k in ALGS:
-        cfg = _cfg(alg, k, alpha=1.0, n_words=16)
-        r = run_until(cfg, 399)
-        rec = recover(cfg, r.state)
+        s = _session(alg, k, alpha=1.0, n_words=16)
+        r = s.run_until(399)
+        rec = recover(s.cfg, r.state)
         assert (rec & 0b111 == 0).all()

@@ -16,9 +16,10 @@ from repro.parallel.sharding import ShardingRules
 
 
 def _mesh(multi_pod=False):
+    # AbstractMesh takes a tuple of (axis_name, size) pairs
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return AbstractMesh(shape, axes)
+    return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def _check_spec_divides(shape, spec, mesh):
