@@ -8,8 +8,6 @@ import shutil
 import tempfile
 import time
 
-import numpy as np
-
 from repro import Committer, MarkerCommitter, PMemPool
 
 from .common import emit

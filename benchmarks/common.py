@@ -53,5 +53,41 @@ def row(name: str, r: SimResult) -> str:
             f"p99_us={latency_us(r, 99):.3f}")
 
 
+_ROWS: list = []     # parsed rows since the last drain (see benchmarks.run)
+
+
+def _parse_row(line: str):
+    """``name,us_per_call,k=v;k=v`` -> dict (numbers coerced where they
+    parse; anything malformed lands under a ``raw`` key)."""
+    parts = line.split(",", 2)
+    if len(parts) < 2:
+        return {"raw": line}
+    row = {"name": parts[0]}
+    try:
+        row["us_per_call"] = float(parts[1])
+    except ValueError:
+        return {"raw": line}
+    if len(parts) == 3 and parts[2]:
+        for kv in parts[2].split(";"):
+            key, sep, val = kv.partition("=")
+            if not sep:
+                row.setdefault("notes", []).append(kv)
+                continue
+            try:
+                row[key] = float(val)
+            except ValueError:
+                row[key] = val
+    return row
+
+
 def emit(line: str):
+    """Print one benchmark row AND record it for machine-readable output
+    (``benchmarks.run`` drains the record into BENCH_<section>.json)."""
     print(line, flush=True)
+    _ROWS.append(_parse_row(line))
+
+
+def drain_rows() -> list:
+    """Hand over (and clear) the rows emitted since the last drain."""
+    rows, _ROWS[:] = list(_ROWS), []
+    return rows

@@ -1,12 +1,35 @@
 """Benchmark aggregator — one section per paper table/figure plus the
-framework-level benches.  Prints ``name,us_per_call,derived`` CSV.
+framework-level benches.  Prints ``name,us_per_call,derived`` CSV and,
+per section, writes a machine-readable ``BENCH_<section>.json`` (the
+same rows as structured records: ops/s, CAS/op, flush/op, ... per
+variant) so successive runs form a perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+                                            [--json-dir DIR | --no-json]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import platform
 import sys
+import time
+
+
+def write_section_json(directory: pathlib.Path, section: str, rows: list,
+                       quick: bool, elapsed_s: float) -> pathlib.Path:
+    out = {
+        "section": section,
+        "quick": quick,
+        "elapsed_s": round(elapsed_s, 3),
+        "unix_time": int(time.time()),
+        "python": platform.python_version(),
+        "rows": rows,
+    }
+    path = directory / f"BENCH_{section}.json"
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return path
 
 
 def main() -> None:
@@ -14,11 +37,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sweeps (CI)")
     ap.add_argument("--only", default=None,
-                    help="threads|words|skew|blocks|ckpt|kernels|diff")
+                    help="threads|words|skew|blocks|ckpt|kernels|diff|structs")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<section>.json (default: cwd)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the machine-readable output")
     args = ap.parse_args()
 
     from . import (bench_blocks, bench_ckpt, bench_diff, bench_kernels,
-                   bench_skew, bench_threads, bench_words)
+                   bench_skew, bench_structs, bench_threads, bench_words,
+                   common)
     sections = {
         "threads": bench_threads.run,   # paper Figs. 9 & 10
         "words": bench_words.run,       # paper Figs. 11 & 12
@@ -27,15 +55,27 @@ def main() -> None:
         "ckpt": bench_ckpt.run,         # Sec. 4 insight at file granularity
         "kernels": bench_kernels.run,   # TPU-adaptation micro-benches
         "diff": bench_diff.run,         # cross-backend differential smoke
+        "structs": bench_structs.run,   # lock-free structures on PMwCAS
     }
     if args.only and args.only not in sections:
         ap.error(f"unknown section {args.only!r}; "
                  f"choose from {', '.join(sections)}")
     names = [args.only] if args.only else list(sections)
+    json_dir = None
+    if not args.no_json:
+        json_dir = pathlib.Path(args.json_dir)
+        json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for name in names:
         print(f"# --- {name} ---", flush=True)
+        common.drain_rows()                     # anything stray stays out
+        t0 = time.time()
         sections[name](quick=args.quick)
+        rows = common.drain_rows()
+        if json_dir is not None:
+            path = write_section_json(json_dir, name, rows, args.quick,
+                                      time.time() - t0)
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ one TPU host).
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset 100m] [--steps N]
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.data.synthetic import DataConfig

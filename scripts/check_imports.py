@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Dead-import linter (stdlib-only fallback for ruff/pyflakes).
+
+The public-surface migration keeps moving imports around; this catches
+the classic residue — a name imported and never referenced — without
+needing any package the image doesn't have.
+
+    python scripts/check_imports.py src tests benchmarks examples
+
+Heuristics (deliberately conservative, zero false positives preferred):
+- a binding is "used" if its name occurs anywhere in the file outside
+  its own import statement lines (source-text word match, so names in
+  docstrings/string annotations/comments count as used);
+- ``__init__.py`` files are skipped entirely (re-export surfaces);
+- names listed in ``__all__``, underscore-prefixed names, and
+  ``from __future__`` imports are exempt;
+- an import line carrying a ``noqa`` comment is exempt (deliberate
+  re-exports, import-order side effects).
+Exit status 1 if any dead import is found.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+
+def iter_py_files(roots: List[str]) -> Iterator[pathlib.Path]:
+    for root in roots:
+        p = pathlib.Path(root)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+
+
+def import_bindings(tree: ast.Module) -> List[Tuple[str, int, int]]:
+    """(bound name, first line, last line) of every import statement."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.asname or alias.name.split(".")[0]
+                out.append((name, node.lineno, node.end_lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                name = alias.asname or alias.name
+                out.append((name, node.lineno, node.end_lineno))
+    return out
+
+
+def declared_all(tree: ast.Module) -> set:
+    names = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if "__all__" in targets:
+                for elt in getattr(node.value, "elts", []):
+                    if isinstance(elt, ast.Constant) and \
+                            isinstance(elt.value, str):
+                        names.add(elt.value)
+    return names
+
+
+def dead_imports(path: pathlib.Path) -> List[str]:
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [f"{path}:{exc.lineno}: syntax error: {exc.msg}"]
+    exported = declared_all(tree)
+    lines = source.splitlines()
+    findings = []
+    for name, lo, hi in import_bindings(tree):
+        if name.startswith("_") or name in exported:
+            continue
+        if any("noqa" in lines[i - 1]
+               for i in range(lo, (hi or lo) + 1) if i <= len(lines)):
+            continue
+        pattern = re.compile(rf"\b{re.escape(name)}\b")
+        uses = 0
+        for i, line in enumerate(lines, start=1):
+            if lo <= i <= (hi or lo):
+                continue                      # the import statement itself
+            uses += len(pattern.findall(line))
+        if uses == 0:
+            findings.append(f"{path}:{lo}: '{name}' imported but unused")
+    return findings
+
+
+def main(argv: List[str]) -> int:
+    roots = argv or ["src", "tests", "benchmarks", "examples"]
+    findings = []
+    n_files = 0
+    for path in iter_py_files(roots):
+        if path.name == "__init__.py":
+            continue
+        n_files += 1
+        findings.extend(dead_imports(path))
+    for f in findings:
+        print(f)
+    print(f"check_imports: {n_files} files, {len(findings)} dead imports")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -21,15 +21,28 @@ else
     export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 fi
 
-echo "=== 2. tier-1 tests ==="
+echo "=== 2. lint: dead imports can't land ==="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check --select F401 src tests benchmarks examples
+elif python -c "import pyflakes" 2>/dev/null; then
+    python -m pyflakes src tests benchmarks examples
+else
+    # offline image: stdlib fallback with the same intent
+    python scripts/check_imports.py src tests benchmarks examples
+fi
+
+echo "=== 3. tier-1 tests ==="
 python -m pytest -x -q
 
-echo "=== 3. benchmark smoke (API regression tripwire) ==="
-python -m benchmarks.run --quick --only diff
-python -m benchmarks.run --quick --only ckpt
+echo "=== 4. benchmark smoke (API regression tripwire) ==="
+python -m benchmarks.run --quick --only diff --no-json
+python -m benchmarks.run --quick --only ckpt --no-json
+python -m benchmarks.run --quick --only structs --no-json
 
-echo "=== 4. cross-backend differential example ==="
+echo "=== 5. cross-backend differential examples ==="
 python examples/quickstart.py > /dev/null
 echo "quickstart OK"
+python examples/kv_store.py > /dev/null
+echo "kv_store OK"
 
 echo "CI PASSED"

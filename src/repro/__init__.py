@@ -8,6 +8,10 @@ Public surface (import from here or from :mod:`repro.pmwcas`):
   (``OURS``/``OURS_DF``/``ORIGINAL``/``PCAS``), pluggable backends
   (``SimBackend``/``KernelBackend``/``DurableBackend``), the fluent
   ``SimSession`` builder and cross-backend ``run_differential``.
+- ``repro.structures`` — lock-free persistent data structures built on
+  the unified API (``HashMap``, ``SortedNode``, ``FreeListAllocator``),
+  plus the YCSB-style workload compiler, structure-level crash
+  checkers and ``run_struct_differential``.
 - checkpoint layer: ``Committer``, ``MarkerCommitter``,
   ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
   ``SimulatedCrash``.
@@ -24,7 +28,14 @@ __version__ = "0.1.0"
 
 # name -> providing module (resolved lazily on first attribute access)
 _CHECKPOINT = ("Committer", "MarkerCommitter", "CheckpointManager",
-               "AsyncCheckpointManager", "PMemPool", "SimulatedCrash")
+               "AsyncCheckpointManager", "PMemPool", "SimulatedCrash",
+               "data_rel")
+_STRUCTURES = ("HashMap", "KVOp", "StructResult", "SortedNode",
+               "FreeListAllocator", "WorkloadSpec", "WorkloadStats",
+               "compile_workload", "run_workload",
+               "run_struct_differential", "StructDifferentialReport",
+               "check_durable_crash_sweep", "check_sim_crash_sweep",
+               "TornStructure", "CrashCheckError")
 _PMWCAS = (
     "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",
     "batch_width", "ops_to_arrays", "ops_from_arrays", "results_from_mask",
@@ -34,6 +45,7 @@ _PMWCAS = (
     "UnsupportedBatch",
     "SimSession", "SimConfig", "SimResult", "CostModel",
     "run_sim", "run_until", "generate_ops", "generate_schedule",
+    "zipf_probs",
     "recover", "committed_histogram", "check_crash_consistency",
     "RecoveryError",
     "run_differential", "increment_batch", "DifferentialReport",
@@ -46,13 +58,14 @@ _PMWCAS = (
 )
 _LAZY = {name: "repro.pmwcas" for name in _PMWCAS}
 _LAZY.update({name: "repro.checkpoint" for name in _CHECKPOINT})
+_LAZY.update({name: "repro.structures" for name in _STRUCTURES})
 
-__all__ = sorted(_LAZY) + ["pmwcas"]
+__all__ = sorted(_LAZY) + ["pmwcas", "structures"]
 
 
 def __getattr__(name: str) -> Any:
-    if name == "pmwcas":
-        return importlib.import_module("repro.pmwcas")
+    if name in ("pmwcas", "structures"):
+        return importlib.import_module(f"repro.{name}")
     try:
         module = _LAZY[name]
     except KeyError:

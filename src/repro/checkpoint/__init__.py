@@ -1,7 +1,8 @@
-from .committer import Committer
+from .committer import Committer, data_rel
 from .manager import AsyncCheckpointManager, CheckpointManager
 from .marker_committer import MarkerCommitter
 from .pmem import PMemPool, SimulatedCrash
 
 __all__ = ["Committer", "MarkerCommitter", "CheckpointManager",
-           "AsyncCheckpointManager", "PMemPool", "SimulatedCrash"]
+           "AsyncCheckpointManager", "PMemPool", "SimulatedCrash",
+           "data_rel"]

@@ -19,7 +19,7 @@ Recovery reads only descriptors + slot pointers and rolls forward/back.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .pmem import PMemPool
 

@@ -17,7 +17,7 @@ import json
 import os
 import pathlib
 import zlib
-from typing import Dict, Optional, Set
+from typing import Dict, Optional
 
 
 class SimulatedCrash(Exception):

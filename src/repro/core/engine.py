@@ -25,9 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .model import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS, C_CAS_OWNED,
-                    C_CAS_REMOTE, C_FLUSH, C_LOAD_HIT, C_LOAD_MISS, C_LOCAL,
-                    C_STORE_OWNED, C_STORE_REMOTE, C_WAIT, CNT_CAS, CNT_CYCLES,
+from .model import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
+                    CNT_CAS, CNT_CYCLES,
                     CNT_FAILS, CNT_FLUSH, CNT_HELPS, CNT_INVAL, CNT_LOAD,
                     CNT_OPS, CNT_STORE, PC, ST_COMPLETED, ST_FAILED,
                     ST_SUCCEEDED, ST_UNDECIDED, SimConfig, TAG_DESC,

@@ -12,7 +12,7 @@ already include contention, back-off and flush costs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,7 @@ from jax import lax
 from . import engine
 from .model import (ALG_PCAS, CNT_CAS, CNT_CYCLES, CNT_FAILS, CNT_FLUSH,
                     CNT_HELPS, CNT_INVAL, CNT_LOAD, CNT_OPS, CNT_STORE, PC,
-                    SimConfig, TAG_MASK, TAG_SHIFT, generate_ops,
+                    SimConfig, TAG_MASK, TAG_SHIFT,
                     generate_schedule, init_state)
 
 

@@ -8,7 +8,7 @@ the uniform bound)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -2,8 +2,6 @@
 (the `attn_impl="pallas"` path of repro.models.attention)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from .kernel import flash_attention_flat
 
 # interpret mode on this CPU container; flip to False on real TPU

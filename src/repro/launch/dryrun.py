@@ -19,9 +19,9 @@ import sys
 import time
 import traceback
 
-import jax
+import jax  # noqa: initialize jax right after the XLA flags above
 
-from repro.configs import ALIASES, ARCH_IDS, get_config, shapes_for, SHAPES
+from repro.configs import ALIASES, get_config, shapes_for, SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch.steps import build_cell, cell_model_config
 from repro.parallel.sharding import ShardingRules

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import sys
 
 DRYRUN = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 

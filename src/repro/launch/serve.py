@@ -12,7 +12,6 @@ atomically or not at all, with index order as the linearization).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

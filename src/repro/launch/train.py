@@ -11,12 +11,10 @@ once per host with jax.distributed initialized by the pod runtime.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
 from repro.configs import get_config
-from repro.configs.base import SHAPES, ShapeConfig
 from repro.data.synthetic import DataConfig
 from repro.models import build_model
 from repro.optim import adamw

@@ -1,7 +1,7 @@
 """Shared neural-net building blocks (pure JAX, params as pytrees)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

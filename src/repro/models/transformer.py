@@ -11,13 +11,10 @@ Layer stacks lower through a single ``lax.scan`` over stacked unit params
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.configs.base import LayerSpec, MambaConfig, ModelConfig
@@ -27,7 +24,7 @@ from . import ssm as ssm_mod
 from . import xlstm as xlstm_mod
 from .layers import (KeyGen, cross_entropy, dtype_of, embed_tokens,
                      init_embed, init_mlp, apply_mlp, make_param, rms_norm,
-                     softcap, unembed)
+                     unembed)
 
 
 class Model:

@@ -8,7 +8,7 @@ distributed-optimization levers recorded in EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ from repro.core.model import (ALGORITHMS, CNT_CAS, CNT_CYCLES, CNT_FAILS,
                               CNT_FLUSH, CNT_HELPS, CNT_INVAL, CNT_LOAD,
                               CNT_OPS, CNT_STORE, TAG_DESC, TAG_DESC_DIRTY,
                               TAG_DIRTY, TAG_MASK, TAG_PAYLOAD, TAG_SHIFT,
-                              generate_ops, generate_schedule)
+                              generate_ops, generate_schedule, zipf_probs)
 
 from .algorithms import (Algorithm, ORIGINAL, OURS, OURS_DF, PCAS,
                          STRATEGIES, resolve)
@@ -95,6 +95,7 @@ __all__ = [
     # session + sim surface
     "SimSession", "SimConfig", "SimResult", "CostModel",
     "run_sim", "run_until", "generate_ops", "generate_schedule",
+    "zipf_probs",
     # recovery
     "recover", "committed_histogram", "check_crash_consistency",
     "RecoveryError",

@@ -15,7 +15,7 @@ winner; :func:`increment_batch` builds batches with that property.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 

@@ -1,0 +1,65 @@
+"""repro.structures — lock-free persistent data structures on PMwCAS.
+
+The paper's closing claim is that a practical PMwCAS enables lock-free
+persistent data structures; this package is that claim made executable.
+Every structure is implemented ONLY against the public ``repro.pmwcas``
+surface (``MwCASOp`` + the ``Backend`` protocol), so each one runs
+unchanged on the cycle-accurate simulator (shadowed), the batched Pallas
+kernel, and the durable descriptor-WAL committer:
+
+- :class:`HashMap` — fixed-capacity open-addressing map; insert/update/
+  delete each compile to ONE 2-word MwCAS (key word + value word).
+- :class:`SortedNode` — BzTree-style sorted-array node; insert is a
+  2-word MwCAS (meta + slot), split freezes then materializes both
+  halves with ONE wide MwCAS.
+- :class:`FreeListAllocator` — atomic K-slot reservation layered on
+  ``reserve_slots`` (the serving-layer primitive).
+- workload compiler — YCSB-style mixes with Zipfian key popularity,
+  compiled to the hash map's logical-op vocabulary and batched into
+  the kernel's ``ops_to_arrays`` wire form.
+- checkers + differential — structure-level crash-consistency sweeps
+  (durable crash-at-every-persist, simulator micro-op crash sweep) and
+  :func:`run_struct_differential`, the three-substrate agreement check
+  for whole logical workloads.
+
+See DESIGN.md Sec. 6 for operation compilation, per-backend semantics
+and the crash invariants.
+"""
+from .bztree import (COUNT_MASK, FROZEN_BIT, NODE_EXHAUSTED, NODE_EXISTS,
+                     NODE_FROZEN, NODE_FULL, NODE_OK, SortedNode, SplitError,
+                     read_pointer, swap_pointer)
+from .checkers import (CrashCheckError, check_durable_crash_sweep,
+                       check_sim_crash_sweep, replay_effects)
+from .differential import (StructDifferentialReport, conservative_verdicts,
+                           run_struct_differential, shadow_batch,
+                           winner_blocking_verdicts)
+from .freelist import DoubleFree, FreeListAllocator
+from .hashmap import (DELETE, EMPTY, EXHAUSTED, EXISTS, FULL, HashMap,
+                      INSERT, KVOp, NOT_FOUND, OK, READ, RoundTrace, SCAN,
+                      StructResult, TOMBSTONE, TornStructure, UPDATE)
+from .workload import (LOAD, WorkloadSpec, WorkloadStats, YCSB_A, YCSB_B,
+                       YCSB_C, batches, compile_workload, kernel_round_arrays,
+                       load_phase, run_workload)
+
+__all__ = [
+    # hash map
+    "HashMap", "KVOp", "StructResult", "RoundTrace", "TornStructure",
+    "EMPTY", "TOMBSTONE",
+    "READ", "INSERT", "UPDATE", "DELETE", "SCAN",
+    "OK", "EXISTS", "NOT_FOUND", "FULL", "EXHAUSTED",
+    # bztree node
+    "SortedNode", "SplitError", "swap_pointer", "read_pointer",
+    "FROZEN_BIT", "COUNT_MASK",
+    "NODE_OK", "NODE_FULL", "NODE_FROZEN", "NODE_EXISTS", "NODE_EXHAUSTED",
+    # allocator
+    "FreeListAllocator", "DoubleFree",
+    # workload
+    "WorkloadSpec", "WorkloadStats", "YCSB_A", "YCSB_B", "YCSB_C", "LOAD",
+    "compile_workload", "load_phase", "batches", "run_workload",
+    "kernel_round_arrays",
+    # checkers + differential
+    "check_durable_crash_sweep", "check_sim_crash_sweep", "replay_effects",
+    "CrashCheckError",
+    "run_struct_differential", "StructDifferentialReport",
+    "conservative_verdicts", "winner_blocking_verdicts", "shadow_batch",
+]

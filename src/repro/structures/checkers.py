@@ -1,0 +1,148 @@
+"""Structure-level crash-consistency checkers.
+
+Two substrates, two sweeps, one invariant — *no torn multi-word effect,
+no lost committed effect*:
+
+- **Durable sweep** (:func:`check_durable_crash_sweep`): replay a logical
+  hash-map workload against a :class:`repro.pmwcas.DurableBackend` whose
+  pmem pool crashes on the N-th persist, for every N until a run
+  completes.  After each crash + recovery the rebuilt map must contain
+  exactly the effects of the ops the client saw commit — plus at most
+  the one in-flight op (committed iff its SUCCEEDED record was
+  persisted before the crash; the client just never saw the verdict).
+- **Simulator sweep** (:func:`check_sim_crash_sweep`): shadow a compiled
+  structure round into the cycle-accurate simulator (one thread per op,
+  the round's address graph preserved) and crash at a sweep of
+  micro-op steps via ``SimSession.crash_at``, which already asserts the
+  paper's recovery invariant; on top we assert the *structure* reading —
+  all words of one op move together (no torn 2-word insert at the
+  micro-op granularity either).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro import PMemPool, SimulatedCrash
+from repro.pmwcas import (Algorithm, DurableBackend, MwCASOp, OURS,
+                          SimSession, resolve)
+
+from .differential import shadow_batch
+from .hashmap import DELETE, HashMap, INSERT, KVOp, OK, UPDATE
+
+
+class CrashCheckError(AssertionError):
+    """Recovered structure state the committed history cannot explain."""
+
+
+def replay_effects(ops_with_status: Iterable[Tuple[KVOp, str]]
+                   ) -> Dict[int, int]:
+    """Client-side model: the live map after a sequence of (op, status)."""
+    model: Dict[int, int] = {}
+    for op, status in ops_with_status:
+        if status != OK:
+            continue
+        if op.kind == INSERT or op.kind == UPDATE:
+            model[op.key] = op.value
+        elif op.kind == DELETE:
+            model.pop(op.key, None)
+    return model
+
+
+def check_durable_crash_sweep(kvops: Sequence[KVOp], n_buckets: int,
+                              root, *, committer: str = "wal",
+                              max_crash_points: int = 400) -> int:
+    """Crash-at-every-persist sweep over a whole logical workload.
+
+    Returns the number of crash points swept (== persists of a clean
+    run).  Raises :class:`CrashCheckError` (or
+    :class:`repro.structures.TornStructure`) on any torn or lost state.
+    """
+    import pathlib
+    root = pathlib.Path(root)
+    for crash_at in range(max_crash_points + 1):
+        pool = PMemPool(root / f"crash{crash_at}",
+                        crash_after_persists=crash_at)
+        backend = DurableBackend(pool=pool, committer=committer)
+        hmap = HashMap(backend, n_buckets)
+        committed: List[Tuple[KVOp, str]] = []
+        inflight: Optional[KVOp] = None
+        crashed = False
+        for op in kvops:
+            try:
+                (res,) = hmap.apply([op])
+            except SimulatedCrash:
+                inflight = op
+                crashed = True
+                break
+            committed.append((op, res.status))
+        # crash (drop unpersisted writes), reopen, recover, re-attach
+        recovered = backend.crash()
+        hmap2 = HashMap(recovered, n_buckets)
+        items = hmap2.check_integrity()          # no torn bucket pair
+        base = replay_effects(committed)
+        acceptable = [base]
+        if inflight is not None:
+            acceptable.append(replay_effects(committed + [(inflight, OK)]))
+        if items not in acceptable:
+            raise CrashCheckError(
+                f"crash_at={crash_at}: recovered {items}, expected one of "
+                f"{acceptable} (committed={len(committed)} ops, "
+                f"inflight={inflight})")
+        if not crashed:
+            return crash_at
+    raise CrashCheckError(
+        f"sweep never completed within {max_crash_points} persists")
+
+
+def check_sim_crash_sweep(ops: Sequence[MwCASOp], *,
+                          algorithm: Union[str, Algorithm] = OURS,
+                          crash_steps: Optional[Sequence[int]] = None,
+                          n_steps: int = 4000, seed: int = 0) -> int:
+    """Sweep simulator crash points over a shadowed structure round.
+
+    ``ops`` is a compiled structure batch (e.g. ``HashMap`` round or
+    BzTree inserts); each op becomes one simulated thread executing an
+    increment over the op's (compressed) address set.  Every probed step
+    runs ``SimSession.crash_at`` — recovery from the persisted
+    descriptors plus the central crash invariant — and additionally
+    asserts per-op atomicity for ops with private addresses.  Returns
+    the number of crash points checked.
+    """
+    widths = {op.k for op in ops}
+    if len(widths) != 1:
+        raise ValueError(f"need one uniform op width, got {sorted(widths)}")
+    (k,) = widths
+    n_shadow, shadow = shadow_batch(ops)
+    T = len(shadow)
+    table = np.asarray([[list(op.addrs)] for op in shadow], np.int32)
+
+    session = (SimSession().with_algorithm(resolve(algorithm))
+               .with_threads(T).with_words(n_shadow).with_k(k)
+               .with_max_ops(1).with_steps(n_steps).with_seed(seed)
+               .with_ops(table))
+    if crash_steps is None:
+        rng = np.random.default_rng(seed)
+        crash_steps = sorted(set(
+            rng.integers(1, n_steps, size=12).tolist()))
+
+    # which shadow addresses belong to exactly one op (private)
+    counts: Dict[int, int] = {}
+    for op in shadow:
+        for a in op.addrs:
+            counts[a] = counts.get(a, 0) + 1
+    checked = 0
+    for step in crash_steps:
+        rec, hist = session.crash_at(int(step))
+        assert rec.shape == (n_shadow,)
+        for op in shadow:
+            if any(counts[a] > 1 for a in op.addrs):
+                continue                      # shared word: counts mix
+            per_word = {int(hist[a]) for a in op.addrs}
+            if len(per_word) != 1:
+                raise CrashCheckError(
+                    f"crash@{step}: op over {op.addrs} committed "
+                    f"unevenly: {sorted(per_word)} — torn multi-word op")
+        checked += 1
+    return checked

@@ -1,0 +1,154 @@
+"""Cross-backend differential execution for structure workloads.
+
+``repro.pmwcas.run_differential`` checks one hand-built increment batch;
+this module raises the stakes: an entire *logical* hash-map workload runs
+to completion on the kernel backend and the durable backend, and every
+executed CAS round is additionally replayed through the cycle-accurate
+simulator as a *shadow batch*.
+
+Why a shadow batch: the simulator's state machines execute the paper's
+benchmark shape (increments of the current value, uniform width).  A
+structure round compiled from a snapshot has exactly the conflict
+structure that matters — every op passes condition (a), so the verdict
+is a pure function of which ops share addresses.  The shadow batch maps
+each round's addresses onto fresh words (value 0) and each op onto an
+increment over its address set: same sharing graph, simulator-expressible.
+Shadow verdicts are compared whenever the conservative and
+winner-blocking semantics provably coincide for that graph (computed
+combinatorially below); rounds where they diverge are counted but not
+asserted — that divergence is a documented property of the substrates
+(DESIGN.md Sec. 3.2), not a bug.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.pmwcas import (Algorithm, DurableBackend, KernelBackend, MwCASOp,
+                          OURS, SimBackend)
+
+from .hashmap import HashMap, KVOp, RoundTrace
+
+
+def conservative_verdicts(ops: Sequence[MwCASOp]) -> np.ndarray:
+    """Kernel/durable semantics for an all-(a)-passing batch: op i loses
+    iff a lower-index op (passing (a), i.e. any op here) shares an
+    address — every (a)-passer claims its addresses."""
+    claimed: set = set()
+    out = []
+    for op in ops:
+        blocked = any(a in claimed for a in op.addrs)
+        claimed.update(op.addrs)
+        out.append(not blocked)
+    return np.asarray(out)
+
+
+def winner_blocking_verdicts(ops: Sequence[MwCASOp]) -> np.ndarray:
+    """Simulator semantics: only actual winners keep their claims (a
+    loser's reservations roll back before the next attempt starts)."""
+    claimed: set = set()
+    out = []
+    for op in ops:
+        ok = not any(a in claimed for a in op.addrs)
+        if ok:
+            claimed.update(op.addrs)
+        out.append(ok)
+    return np.asarray(out)
+
+
+def shadow_batch(ops: Sequence[MwCASOp]) -> tuple:
+    """Map a round onto the simulator's vocabulary: compress the round's
+    addresses to 0..n-1 and turn every op into an increment (0 -> 1)
+    over its compressed address set.  Returns (n_shadow_words, ops)."""
+    addrs = sorted({a for op in ops for a in op.addrs})
+    index = {a: i for i, a in enumerate(addrs)}
+    shadow = [MwCASOp.increment(sorted(index[a] for a in op.addrs),
+                                [0] * op.k)
+              for op in ops]
+    return len(addrs), shadow
+
+
+@dataclasses.dataclass
+class StructDifferentialReport:
+    kvops: List[KVOp]
+    statuses: Dict[str, List[str]]        # backend -> per-logical-op status
+    items: Dict[str, Dict[int, int]]      # backend -> final live k/v pairs
+    rounds: Dict[str, int]                # backend -> CAS rounds executed
+    sim_rounds_checked: int               # shadow rounds asserted against sim
+    sim_rounds_skipped: int               # rounds where semantics diverge
+    agree: bool
+
+    def summary(self) -> str:
+        lines = [f"struct differential over {len(self.kvops)} logical ops: "
+                 f"{'AGREE' if self.agree else 'DISAGREE'}"]
+        for name, st in self.statuses.items():
+            ok = sum(1 for s in st if s == "ok")
+            lines.append(f"  {name:8s} ok={ok}/{len(st)} "
+                         f"rounds={self.rounds.get(name)}")
+        lines.append(f"  sim shadow: {self.sim_rounds_checked} rounds "
+                     f"checked, {self.sim_rounds_skipped} skipped "
+                     "(winner-blocking != conservative)")
+        return "\n".join(lines)
+
+
+def _replay_rounds_on_sim(history: List[RoundTrace],
+                          algorithm: Union[str, Algorithm]) -> tuple:
+    """Shadow every executed round through SimBackend; returns
+    (checked, skipped, all_matched)."""
+    checked = skipped = 0
+    matched = True
+    for trace in history:
+        cons = conservative_verdicts(trace.ops)
+        wb = winner_blocking_verdicts(trace.ops)
+        if not np.array_equal(cons, wb):
+            skipped += 1
+            continue
+        n_shadow, shadow = shadow_batch(trace.ops)
+        sim = SimBackend(n_shadow, algorithm=algorithm)
+        verdicts = np.asarray([r.success for r in sim.execute(shadow)])
+        checked += 1
+        if not np.array_equal(verdicts, np.asarray(trace.success)):
+            matched = False
+    return checked, skipped, matched
+
+
+def run_struct_differential(kvops: Sequence[KVOp], n_buckets: int, *,
+                            algorithm: Union[str, Algorithm] = OURS,
+                            durable_root=None, use_kernel: bool = False,
+                            interpret: bool = True,
+                            max_rounds: Optional[int] = None
+                            ) -> StructDifferentialReport:
+    """One logical workload on kernel + durable backends, with every
+    kernel round shadow-verified on the simulator.  Agreement means:
+    identical per-op statuses, identical final live items, identical
+    round counts, and every shadow-checked round's verdicts match."""
+    kvops = list(kvops)
+    kernel = KernelBackend(n_words=2 * n_buckets, use_kernel=use_kernel,
+                           interpret=interpret)
+    durable = DurableBackend(durable_root)
+    maps = {"kernel": HashMap(kernel, n_buckets),
+            "durable": HashMap(durable, n_buckets)}
+
+    statuses: Dict[str, List[str]] = {}
+    items: Dict[str, Dict[int, int]] = {}
+    rounds: Dict[str, int] = {}
+    histories: Dict[str, List[RoundTrace]] = {}
+    for name, hmap in maps.items():
+        results = hmap.apply(kvops, max_rounds=max_rounds)
+        statuses[name] = [r.status for r in results]
+        items[name] = hmap.check_integrity()
+        rounds[name] = hmap.rounds_run
+        histories[name] = hmap.last_history
+
+    checked, skipped, sim_ok = _replay_rounds_on_sim(
+        histories["kernel"], algorithm)
+
+    agree = (statuses["kernel"] == statuses["durable"]
+             and items["kernel"] == items["durable"]
+             and rounds["kernel"] == rounds["durable"]
+             and sim_ok)
+    return StructDifferentialReport(
+        kvops=kvops, statuses=statuses, items=items, rounds=rounds,
+        sim_rounds_checked=checked, sim_rounds_skipped=skipped, agree=agree)

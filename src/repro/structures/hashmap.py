@@ -1,0 +1,283 @@
+"""Fixed-capacity open-addressing hash map on the unified PMwCAS API.
+
+The paper's closing claim is that a fast PMwCAS unlocks lock-free
+persistent data structures; this is the first one in the repo.  Every
+mutation compiles to exactly ONE 2-word :class:`repro.pmwcas.MwCASOp`
+over the bucket's pair of words, so the structure runs unchanged on any
+:class:`repro.pmwcas.Backend` (simulator shadow, Pallas kernel, durable
+committer):
+
+======== =========================================== =====================
+op       MwCAS targets                               crash invariant
+======== =========================================== =====================
+insert   (key word: EMPTY/TOMB -> key,               key never visible
+          value word: 0 -> value)                    without its value
+update   (key word: key -> key  [guard],             value moves only
+          value word: old -> new)                    while key unchanged
+delete   (key word: key -> TOMBSTONE,                chain stays probe-
+          value word: old -> 0)                      able; pair atomic
+======== =========================================== =====================
+
+Bucket ``b`` owns words ``base + 2b`` (key) and ``base + 2b + 1``
+(value) — addresses are adjacent and ascending, i.e. already in the
+paper's canonical sorted embedding order.
+
+Execution is round-based (the batched analogue of the lock-free retry
+loop): every logical op is compiled against one snapshot of the table,
+the whole round executes as one backend batch under the deterministic
+one-shot semantics, and losers are recompiled against the next snapshot.
+All compiled ops carry pre-batch expected values, so condition (a) of
+the batch semantics always passes and the lowest-index op of every
+conflict component wins — each round commits at least one op and the
+retry loop terminates in at most ``len(ops)`` rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.pmwcas import Backend, MwCASOp
+
+EMPTY = 0
+TOMBSTONE = (1 << 32) - 1          # uint32 max; keys/values must stay below
+
+# logical operation kinds
+READ, INSERT, UPDATE, DELETE, SCAN = ("read", "insert", "update", "delete",
+                                      "scan")
+_KINDS = (READ, INSERT, UPDATE, DELETE, SCAN)
+
+# result statuses
+OK = "ok"                  # committed (mutations) / answered (reads)
+EXISTS = "exists"          # insert found the key already live
+NOT_FOUND = "not_found"    # update/delete/read missed
+FULL = "full"              # insert found no writable bucket
+EXHAUSTED = "exhausted"    # still losing conflicts after max_rounds
+
+
+class TornStructure(AssertionError):
+    """A bucket pair violates the crash invariant — must never happen."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KVOp:
+    """One logical hash-map operation (the workload vocabulary)."""
+    kind: str
+    key: int
+    value: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown op kind {self.kind!r}")
+        if not 0 < self.key < TOMBSTONE:
+            raise ValueError(f"key {self.key} outside (0, 2^32-1)")
+        if self.kind in (INSERT, UPDATE) and not 0 < self.value < TOMBSTONE:
+            raise ValueError(f"{self.kind} needs a value in (0, 2^32-1)")
+
+
+@dataclasses.dataclass
+class StructResult:
+    """Per-logical-op outcome of :meth:`HashMap.apply`."""
+    op: KVOp
+    status: str
+    value: Optional[int] = None    # reads: the value found (None on miss)
+    rounds: int = 0                # CAS rounds this op participated in
+
+    def __bool__(self) -> bool:
+        return self.status == OK
+
+
+@dataclasses.dataclass
+class RoundTrace:
+    """One executed round: the compiled batch and its verdicts.
+
+    Recorded by :meth:`HashMap.apply` so the structure differential can
+    replay every round through a shadow simulator batch.
+    """
+    ops: List[MwCASOp]
+    owners: List[int]              # batch position -> logical op index
+    success: np.ndarray            # bool[B]
+
+
+class HashMap:
+    """Open-addressing (linear probing, tombstone) map over a Backend.
+
+    The map holds no authoritative state of its own: keys and values
+    live in the backend's word table, read back via ``backend.read`` —
+    which is what makes a crash/recover cycle on the durable backend
+    transparent (attach a fresh ``HashMap`` to the recovered backend).
+    """
+
+    def __init__(self, backend: Backend, n_buckets: int, base: int = 0):
+        if n_buckets < 1:
+            raise ValueError("need at least one bucket")
+        self.backend = backend
+        self.n_buckets = n_buckets
+        self.base = base
+        self.last_history: List[RoundTrace] = []
+        # cumulative instrumentation across apply() calls
+        self.rounds_run = 0
+        self.mwcas_submitted = 0
+        self.mwcas_won = 0
+
+    # -- layout ----------------------------------------------------------------
+    def key_addr(self, bucket: int) -> int:
+        return self.base + 2 * bucket
+
+    def value_addr(self, bucket: int) -> int:
+        return self.base + 2 * bucket + 1
+
+    @property
+    def n_words(self) -> int:
+        return 2 * self.n_buckets
+
+    def _home(self, key: int) -> int:
+        return (key * 2654435761) % self.n_buckets     # Knuth multiplicative
+
+    # -- reads -----------------------------------------------------------------
+    def snapshot(self) -> np.ndarray:
+        """One consistent-enough read of the whole region (int64[2N]).
+
+        Array-shaped backends expose the full word table in one call;
+        the durable backend resolves slots one at a time.
+        """
+        values = getattr(self.backend, "values", None)
+        if callable(values):
+            table = np.asarray(values(), np.int64)
+            return table[self.base:self.base + self.n_words]
+        return np.asarray([self.backend.read(self.base + i)
+                           for i in range(self.n_words)], np.int64)
+
+    def _locate(self, key: int, snap: np.ndarray
+                ) -> Tuple[Optional[int], Optional[int]]:
+        """(bucket holding key or None, first writable bucket or None)."""
+        writable = None
+        b = self._home(key)
+        for _ in range(self.n_buckets):
+            kw = int(snap[2 * b])
+            if kw == key:
+                return b, writable
+            if kw == TOMBSTONE:
+                if writable is None:
+                    writable = b
+            elif kw == EMPTY:
+                return None, b if writable is None else writable
+            b = (b + 1) % self.n_buckets
+        return None, writable
+
+    def lookup(self, key: int,
+               snap: Optional[np.ndarray] = None) -> Optional[int]:
+        snap = self.snapshot() if snap is None else snap
+        b, _ = self._locate(key, snap)
+        return None if b is None else int(snap[2 * b + 1])
+
+    def items(self, snap: Optional[np.ndarray] = None) -> Dict[int, int]:
+        """All live (key, value) pairs."""
+        snap = self.snapshot() if snap is None else snap
+        out = {}
+        for b in range(self.n_buckets):
+            kw = int(snap[2 * b])
+            if kw not in (EMPTY, TOMBSTONE):
+                out[kw] = int(snap[2 * b + 1])
+        return out
+
+    def check_integrity(self, snap: Optional[np.ndarray] = None
+                        ) -> Dict[int, int]:
+        """Assert no bucket pair is torn; return the live items.
+
+        Invariant (each mutation moves both words in ONE MwCAS):
+        key EMPTY or TOMBSTONE  <=>  value == 0.
+        """
+        snap = self.snapshot() if snap is None else snap
+        for b in range(self.n_buckets):
+            kw, vw = int(snap[2 * b]), int(snap[2 * b + 1])
+            if kw in (EMPTY, TOMBSTONE):
+                if vw != 0:
+                    raise TornStructure(
+                        f"bucket {b}: key word {kw} but value {vw} != 0")
+            elif vw == 0:
+                raise TornStructure(
+                    f"bucket {b}: live key {kw} with value 0 (torn insert)")
+        return self.items(snap)
+
+    # -- operation compilation -------------------------------------------------
+    def compile_op(self, op: KVOp, snap: np.ndarray
+                   ) -> Union[MwCASOp, StructResult]:
+        """One logical op -> one 2-word MwCASOp (or an immediate result).
+
+        Expected values come from ``snap``; executing the compiled op in
+        the same round as its snapshot guarantees condition (a) passes.
+        """
+        found, writable = self._locate(op.key, snap)
+        if op.kind == READ:
+            val = None if found is None else int(snap[2 * found + 1])
+            return StructResult(op, OK if found is not None else NOT_FOUND,
+                                value=val)
+        if op.kind == SCAN:
+            items = self.items(snap)
+            return StructResult(op, OK, value=len(
+                [k for k in items if k >= op.key]))
+        if op.kind == INSERT:
+            if found is not None:
+                return StructResult(op, EXISTS,
+                                    value=int(snap[2 * found + 1]))
+            if writable is None:
+                return StructResult(op, FULL)
+            kw_cur = int(snap[2 * writable])         # EMPTY or TOMBSTONE
+            return MwCASOp([(self.key_addr(writable), kw_cur, op.key),
+                            (self.value_addr(writable), 0, op.value)])
+        if found is None:                            # UPDATE / DELETE miss
+            return StructResult(op, NOT_FOUND)
+        v_cur = int(snap[2 * found + 1])
+        if op.kind == UPDATE:
+            # key word is a guard (expected == desired): it pins the key
+            # in place and claims the bucket against concurrent deletes
+            return MwCASOp([(self.key_addr(found), op.key, op.key),
+                            (self.value_addr(found), v_cur, op.value)])
+        return MwCASOp([(self.key_addr(found), op.key, TOMBSTONE),
+                        (self.value_addr(found), v_cur, 0)])
+
+    # -- round-based execution -------------------------------------------------
+    def apply(self, ops: Sequence[KVOp],
+              max_rounds: Optional[int] = None) -> List[StructResult]:
+        """Execute one batch of logical ops; losers retry next round."""
+        max_rounds = len(ops) + 1 if max_rounds is None else max_rounds
+        results: List[Optional[StructResult]] = [None] * len(ops)
+        pending = list(range(len(ops)))
+        self.last_history = []
+        rounds = 0
+        while pending and rounds < max_rounds:
+            snap = self.snapshot()
+            batch_ops: List[MwCASOp] = []
+            owners: List[int] = []
+            still_pending: List[int] = []
+            for idx in pending:
+                compiled = self.compile_op(ops[idx], snap)
+                if isinstance(compiled, StructResult):
+                    compiled.rounds = rounds
+                    results[idx] = compiled
+                else:
+                    batch_ops.append(compiled)
+                    owners.append(idx)
+            if not batch_ops:
+                pending = []
+                break
+            rounds += 1
+            self.rounds_run += 1
+            verdicts = self.backend.execute(batch_ops)
+            success = np.asarray([r.success for r in verdicts])
+            self.last_history.append(
+                RoundTrace(ops=batch_ops, owners=owners, success=success))
+            self.mwcas_submitted += len(batch_ops)
+            self.mwcas_won += int(success.sum())
+            for pos, idx in enumerate(owners):
+                if success[pos]:
+                    results[idx] = StructResult(ops[idx], OK, rounds=rounds)
+                else:
+                    still_pending.append(idx)
+            pending = still_pending
+        for idx in pending:
+            results[idx] = StructResult(ops[idx], EXHAUSTED, rounds=rounds)
+        assert all(r is not None for r in results)
+        return results               # type: ignore[return-value]

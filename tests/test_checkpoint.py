@@ -1,15 +1,11 @@
 """Checkpoint layer: descriptor-WAL atomic commit, crash-at-every-persist
 recovery, elastic restore, async overlap — the paper's technique at file
 granularity (DESIGN.md Sec. 2.3)."""
-import json
-
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import (AsyncCheckpointManager, CheckpointManager, Committer,
-                   MarkerCommitter, PMemPool, SimulatedCrash)
-from repro.checkpoint.committer import data_rel
+                   MarkerCommitter, PMemPool, SimulatedCrash, data_rel)
 
 
 def _targets(c, names, ver):

@@ -2,16 +2,21 @@
 SimSession builder, backend adapters, and the cross-backend differential
 check — one MwCASOp batch through sim, kernel and durable backends must
 yield identical per-op verdicts and final values."""
-import dataclasses
-
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dependency
+    HAVE_HYPOTHESIS = False
 
 from repro.pmwcas import (DurableBackend, KernelBackend, MwCASOp, OpResult,
                           ORIGINAL, OURS, OURS_DF, PCAS, SimBackend,
                           SimConfig, SimSession, Target, UnsupportedBatch,
-                          increment_batch, ops_from_arrays, ops_to_arrays,
-                          resolve, run_differential)
+                          batch_width, increment_batch, ops_from_arrays,
+                          ops_to_arrays, resolve, results_from_mask,
+                          run_differential)
 
 
 # ---------------------------------------------------------------------------
@@ -37,6 +42,85 @@ def test_ops_array_roundtrip():
     assert addr.shape == (2, 2) and addr[1, 1] == -1   # padded
     back = ops_from_arrays(addr, exp, des)
     assert back == ops
+
+
+def _check_array_roundtrip(seed: int):
+    """Property: ops_to_arrays / ops_from_arrays / results_from_mask are
+    mutually consistent for random batches with mixed widths, arbitrary
+    (unsorted) addresses, uint32-extreme values and -1 padding."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 12))
+    W = 64
+    ops = []
+    for _ in range(B):
+        k = int(rng.integers(1, 5))
+        addrs = rng.choice(W, k, replace=False)        # arbitrary order
+        exp = rng.integers(0, 1 << 32, k, dtype=np.uint64)
+        des = rng.integers(0, 1 << 32, k, dtype=np.uint64)
+        ops.append(MwCASOp([(int(a), int(e), int(d))
+                            for a, e, d in zip(addrs, exp, des)]))
+    K = batch_width(ops)
+    assert K == max(op.k for op in ops)
+    addr, exp, des = ops_to_arrays(ops)
+    assert addr.shape == (B, K) and addr.dtype == np.int32
+    assert exp.dtype == np.uint32 and des.dtype == np.uint32
+    # padding exactly where an op runs out of targets, values zeroed
+    for i, op in enumerate(ops):
+        assert (addr[i, op.k:] == -1).all()
+        assert (exp[i, op.k:] == 0).all() and (des[i, op.k:] == 0).all()
+        # target order is preserved (the descriptor's embedding order)
+        assert [int(a) for a in addr[i, :op.k]] == list(op.addrs)
+    assert ops_from_arrays(addr, exp, des) == ops      # inverse modulo pad
+    # widening the batch only adds padding
+    addr2, exp2, des2 = ops_to_arrays(ops, k=K + 2)
+    assert (addr2[:, K:] == -1).all()
+    assert ops_from_arrays(addr2, exp2, des2) == ops
+    # results_from_mask pairs verdicts with ops positionally
+    mask = rng.random(B) < 0.5
+    res = results_from_mask(ops, mask, "test")
+    assert [r.success for r in res] == mask.tolist()
+    assert [r.index for r in res] == list(range(B))
+    assert all(r.op is ops[i] and r.backend == "test"
+               for i, r in enumerate(res))
+    # int -> w<addr> durable-slot mapping (one batch, every backend)
+    for op in ops:
+        for t in op.targets:
+            assert t.slot_name == f"w{t.addr}"
+
+
+# Deterministic fallback sweep: always runs, hypothesis or not.
+@pytest.mark.parametrize("seed", range(8))
+def test_array_roundtrip_deterministic(seed):
+    _check_array_roundtrip(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_array_roundtrip(seed):
+        _check_array_roundtrip(seed)
+else:
+    def test_array_roundtrip():
+        pytest.importorskip("hypothesis")  # records skip: optional dep absent
+
+
+def test_ops_to_arrays_rejects_bad_batches():
+    with pytest.raises(ValueError):
+        ops_to_arrays([])                              # empty batch
+    with pytest.raises(ValueError):                    # op wider than K
+        ops_to_arrays([MwCASOp([(0, 1, 2), (1, 1, 2)])], k=1)
+    with pytest.raises(TypeError):                     # str addr has no index
+        ops_to_arrays([MwCASOp([("slot", 1, 2)])])
+
+
+def test_int_addr_maps_to_durable_slot(tmp_path):
+    """The w<addr> mapping is what lets one int-addressed batch run on
+    the durable backend: seeding word 3 and reading slot 'w3' agree."""
+    db = DurableBackend(tmp_path)
+    db.seed({3: 7})
+    assert db.read(3) == 7 and db.read("w3") == 7
+    (res,) = db.execute([MwCASOp([(3, 7, 8)])])
+    assert res.success and db.read("w3") == 8
 
 
 def test_algorithm_strategies():

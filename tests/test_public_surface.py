@@ -1,0 +1,80 @@
+"""The deprecation cycle promised in DESIGN.md Sec. 4 is over: user-side
+code (benchmarks/, examples/, launch/) must import the PMwCAS world only
+through the public surface (``repro`` / ``repro.pmwcas`` /
+``repro.structures``), never the implementation layer (``repro.core``,
+``repro.kernels.pmwcas_apply``, ``repro.checkpoint``).  The structures
+package holds itself to an even stricter rule — it is the proof that the
+unified API composes, so it may touch nothing below the public surface.
+"""
+import ast
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# the PMwCAS implementation layer of DESIGN.md Sec. 1 (adapters may wrap
+# it; user-side code must not reach into it).  repro.kernels.flash_attention
+# is a different subsystem and stays importable by its own tests.
+IMPL_PREFIXES = ("repro.core", "repro.kernels.pmwcas_apply",
+                 "repro.checkpoint")
+
+USER_SIDE_DIRS = ("benchmarks", "examples", "src/repro/launch", "tests")
+
+
+def repro_imports(path: pathlib.Path):
+    """Absolute ``repro``-rooted module names imported by one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    found = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            found += [(a.name, node.lineno) for a in node.names
+                      if a.name.split(".")[0] == "repro"]
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module and node.module.split(".")[0] == "repro":
+            found.append((node.module, node.lineno))
+    return found
+
+
+def files_under(*dirs):
+    out = []
+    for d in dirs:
+        out += sorted((REPO / d).rglob("*.py"))
+    assert out, f"no files found under {dirs} — layout changed?"
+    return out
+
+
+@pytest.mark.parametrize("path", files_under(*USER_SIDE_DIRS),
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_user_side_code_avoids_impl_layer(path):
+    bad = [(mod, line) for mod, line in repro_imports(path)
+           if mod.startswith(IMPL_PREFIXES)]
+    assert not bad, (
+        f"{path.relative_to(REPO)} imports the implementation layer "
+        f"{bad}; use repro / repro.pmwcas / repro.structures "
+        "(DESIGN.md Sec. 4 migration table)")
+
+
+@pytest.mark.parametrize("path", files_under("src/repro/structures"),
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_structures_built_only_on_public_surface(path):
+    allowed = {"repro", "repro.pmwcas"}
+    bad = [(mod, line) for mod, line in repro_imports(path)
+           if mod not in allowed]
+    assert not bad, (
+        f"{path.relative_to(REPO)} must build only on the public PMwCAS "
+        f"surface, found {bad}")
+
+
+def test_public_surface_covers_the_migration_table():
+    """Names the DESIGN.md Sec. 4 table routes through the public
+    surface actually resolve there (the cycle can end safely)."""
+    import repro
+    for name in ("SimSession", "SimConfig", "run_sim", "CNT_CAS",
+                 "TAG_DIRTY", "pmwcas_apply", "reserve_slots",
+                 "Committer", "PMemPool", "data_rel", "HashMap",
+                 "SortedNode", "FreeListAllocator", "zipf_probs"):
+        assert hasattr(repro, name), name
+    import repro.pmwcas as pm
+    for name in ("MwCASOp", "Backend", "run_differential", "zipf_probs"):
+        assert hasattr(pm, name), name

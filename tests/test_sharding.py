@@ -1,6 +1,5 @@
 """Sharding rules: every (arch x mesh) assignment must be divisible and
 well-formed — no compile needed, so this covers all 10 archs cheaply."""
-import os
 
 import numpy as np
 import pytest

@@ -1,0 +1,401 @@
+"""The structures layer: lock-free persistent data structures built only
+on the public ``repro.pmwcas`` surface, exercised on the kernel and
+durable backends, shadow-verified on the simulator, and crash-swept on
+both persistent substrates."""
+import numpy as np
+import pytest
+
+from repro.pmwcas import DurableBackend, KernelBackend, MwCASOp
+from repro.structures import (DELETE, EXISTS, FULL, FreeListAllocator,
+                              DoubleFree, HashMap, INSERT, KVOp, NODE_FROZEN,
+                              NODE_FULL, NODE_OK, NOT_FOUND, OK, READ, SCAN,
+                              SortedNode, SplitError, TOMBSTONE, TornStructure,
+                              UPDATE, WorkloadSpec, check_durable_crash_sweep,
+                              check_sim_crash_sweep, compile_workload,
+                              conservative_verdicts, kernel_round_arrays,
+                              load_phase, read_pointer, run_struct_differential,
+                              run_workload, swap_pointer,
+                              winner_blocking_verdicts)
+
+
+def oracle_map(n_buckets=16, n_words=None, **kw):
+    return HashMap(KernelBackend(n_words=n_words or 2 * n_buckets,
+                                 use_kernel=False, **kw), n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# operation model
+# ---------------------------------------------------------------------------
+
+def test_kvop_validation():
+    with pytest.raises(ValueError):
+        KVOp("bump", 1)                        # unknown kind
+    with pytest.raises(ValueError):
+        KVOp(INSERT, 0, 1)                     # key 0 is the EMPTY word
+    with pytest.raises(ValueError):
+        KVOp(INSERT, TOMBSTONE, 1)             # key collides with tombstone
+    with pytest.raises(ValueError):
+        KVOp(INSERT, 5, 0)                     # value 0 means "no value"
+    KVOp(READ, 5)                              # reads need no value
+
+
+# ---------------------------------------------------------------------------
+# hash map: sequential semantics
+# ---------------------------------------------------------------------------
+
+def test_hashmap_insert_read_update_delete():
+    h = oracle_map()
+    assert all(h.apply([KVOp(INSERT, 5, 100), KVOp(INSERT, 7, 200)]))
+    (r,) = h.apply([KVOp(READ, 5)])
+    assert r.status == OK and r.value == 100
+    (r,) = h.apply([KVOp(UPDATE, 5, 111)])
+    assert r.status == OK and h.lookup(5) == 111
+    (r,) = h.apply([KVOp(DELETE, 7)])
+    assert r.status == OK
+    (r,) = h.apply([KVOp(READ, 7)])
+    assert r.status == NOT_FOUND and r.value is None
+    assert h.check_integrity() == {5: 111}
+
+
+def test_hashmap_miss_paths():
+    h = oracle_map()
+    assert h.apply([KVOp(UPDATE, 9, 1)])[0].status == NOT_FOUND
+    assert h.apply([KVOp(DELETE, 9)])[0].status == NOT_FOUND
+    assert all(h.apply([KVOp(INSERT, 9, 1)]))
+    assert h.apply([KVOp(INSERT, 9, 2)])[0].status == EXISTS
+    assert h.lookup(9) == 1                    # losing insert changed nothing
+
+
+def test_hashmap_full_and_tombstone_reuse():
+    h = oracle_map(n_buckets=4)
+    keys = [3, 7, 11, 15]
+    assert all(h.apply([KVOp(INSERT, k, k) for k in keys]))
+    assert h.apply([KVOp(INSERT, 99, 1)])[0].status == FULL
+    # delete one -> its tombstone is reused by the next insert
+    assert all(h.apply([KVOp(DELETE, 7)]))
+    assert all(h.apply([KVOp(INSERT, 99, 42)]))
+    assert h.check_integrity() == {3: 3, 11: 11, 15: 15, 99: 42}
+    # probe chains survive the tombstone: every key still findable
+    for k in (3, 11, 15):
+        assert h.lookup(k) == k
+
+
+def test_hashmap_one_mwcas_per_mutation():
+    """The tentpole claim: insert/update/delete compile to exactly one
+    2-word MwCASOp over the bucket's (key word, value word) pair."""
+    h = oracle_map()
+    snap = h.snapshot()
+    op = h.compile_op(KVOp(INSERT, 5, 100), snap)
+    assert isinstance(op, MwCASOp) and op.k == 2
+    (kw, vw) = op.addrs
+    assert vw == kw + 1 and kw % 2 == 0        # adjacent pair, sorted
+    h.apply([KVOp(INSERT, 5, 100)])
+    snap = h.snapshot()
+    upd = h.compile_op(KVOp(UPDATE, 5, 7), snap)
+    assert upd.k == 2 and upd.targets[0].expected == upd.targets[0].desired
+    dele = h.compile_op(KVOp(DELETE, 5), snap)
+    assert dele.k == 2 and dele.targets[0].desired == TOMBSTONE
+    assert dele.targets[1].desired == 0
+
+
+# ---------------------------------------------------------------------------
+# hash map: concurrent batches (the one-shot semantics)
+# ---------------------------------------------------------------------------
+
+def test_hashmap_concurrent_duplicate_insert():
+    h = oracle_map()
+    res = h.apply([KVOp(INSERT, 5, 100), KVOp(INSERT, 5, 300)])
+    assert [r.status for r in res] == [OK, EXISTS]
+    assert h.lookup(5) == 100                  # lower index won
+
+
+def test_hashmap_concurrent_update_vs_delete():
+    """Update guards the key word, delete moves it: the two ops conflict
+    on both words, so exactly one commits per round — never a value
+    written into a dead bucket."""
+    for first, second in [(KVOp(UPDATE, 5, 9), KVOp(DELETE, 5)),
+                          (KVOp(DELETE, 5), KVOp(UPDATE, 5, 9))]:
+        h = oracle_map()
+        h.apply([KVOp(INSERT, 5, 1)])
+        res = h.apply([first, second])
+        # lower index wins round 1; the loser recompiles: after a delete
+        # the update misses, after an update the delete still applies
+        assert res[0].status == OK
+        assert res[1].status == (NOT_FOUND if first.kind == DELETE else OK)
+        h.check_integrity()
+        if first.kind == DELETE:
+            assert h.lookup(5) is None
+        else:
+            assert h.lookup(5) is None         # update then delete
+
+
+def test_hashmap_conflict_rounds_make_progress():
+    """Keys forced into one probe neighborhood: every round commits at
+    least one op (lowest index passes (a) and wins), so a batch of N
+    finishes in <= N rounds."""
+    h = oracle_map(n_buckets=4)
+    keys = [3, 7, 11, 15]                      # all compete for 4 buckets
+    res = h.apply([KVOp(INSERT, k, k) for k in keys])
+    assert all(r.status == OK for r in res)
+    assert h.rounds_run <= len(keys)
+    assert h.check_integrity() == {k: k for k in keys}
+
+
+def test_hashmap_reads_see_pre_batch_snapshot():
+    """Ops inside one apply() are concurrent: a READ linearizes at the
+    round snapshot and cannot observe a same-batch INSERT."""
+    h = oracle_map()
+    res = h.apply([KVOp(INSERT, 5, 100), KVOp(READ, 5)])
+    assert res[0].status == OK and res[1].status == NOT_FOUND
+    (r,) = h.apply([KVOp(READ, 5)])            # next batch sees it
+    assert r.value == 100
+
+
+def test_hashmap_scan_counts_live_keys():
+    h = oracle_map()
+    h.apply([KVOp(INSERT, k, k) for k in (2, 4, 6)])
+    (r,) = h.apply([KVOp(SCAN, 4)])
+    assert r.status == OK and r.value == 2     # keys >= 4: {4, 6}
+
+
+def test_torn_structure_detected():
+    """check_integrity flags a key word without its value word (a state
+    no MwCAS history can produce — the detector the crash sweeps rely
+    on)."""
+    kb = KernelBackend(n_words=8, use_kernel=False)
+    h = HashMap(kb, 4)
+    (res,) = kb.execute([MwCASOp([(h.key_addr(1), 0, 77)])])   # torn write
+    assert res.success
+    with pytest.raises(TornStructure):
+        h.check_integrity()
+
+
+def test_hashmap_on_real_pallas_kernel():
+    """One batch through the actual Pallas kernel path (interpret mode)."""
+    h = HashMap(KernelBackend(n_words=16, use_kernel=True), 8)
+    res = h.apply([KVOp(INSERT, 3, 30), KVOp(INSERT, 5, 50)])
+    assert all(r.status == OK for r in res)
+    assert h.check_integrity() == {3: 30, 5: 50}
+
+
+# ---------------------------------------------------------------------------
+# hash map: durability
+# ---------------------------------------------------------------------------
+
+def test_hashmap_durable_crash_recover_attach(tmp_path):
+    db = DurableBackend(tmp_path)
+    h = HashMap(db, 8)
+    assert all(h.apply([KVOp(INSERT, 5, 100), KVOp(INSERT, 7, 200)]))
+    assert all(h.apply([KVOp(UPDATE, 5, 111)]))
+    h2 = HashMap(db.crash(), 8)                # fresh map over recovery
+    assert h2.check_integrity() == {5: 111, 7: 200}
+
+
+def test_hashmap_durable_crash_at_every_persist(tmp_path):
+    """Acceptance: sweep the crash point across every persist of a whole
+    insert/update/delete workload — recovery never shows a torn bucket
+    pair or loses a committed effect."""
+    ops = [KVOp(INSERT, 5, 100), KVOp(INSERT, 7, 200), KVOp(UPDATE, 5, 111),
+           KVOp(DELETE, 7), KVOp(INSERT, 9, 300)]
+    n = check_durable_crash_sweep(ops, n_buckets=8, root=tmp_path)
+    assert n > 20                              # the sweep covered the protocol
+
+
+# ---------------------------------------------------------------------------
+# simulator shadow: crash sweep + verdict semantics
+# ---------------------------------------------------------------------------
+
+def test_sim_shadow_crash_sweep():
+    """Acceptance: structure rounds shadowed into the cycle-accurate
+    simulator survive micro-op-granularity crashes with per-op
+    atomicity (driven through SimSession.crash_at)."""
+    h = oracle_map(n_buckets=8)
+    snap = h.snapshot()
+    batch = [h.compile_op(KVOp(INSERT, k, 10 * k), snap)
+             for k in (3, 5, 9, 12)]
+    assert all(isinstance(op, MwCASOp) for op in batch)
+    checked = check_sim_crash_sweep(batch, n_steps=1200)
+    assert checked >= 10
+
+
+def test_verdict_semantics_helpers():
+    ops = [MwCASOp([(0, 0, 1), (1, 0, 1)]),    # wins
+           MwCASOp([(1, 0, 1), (2, 0, 1)]),    # blocked by winner 0
+           MwCASOp([(2, 0, 1), (3, 0, 1)])]    # chained: semantics split
+    cons = conservative_verdicts(ops)
+    wb = winner_blocking_verdicts(ops)
+    assert cons.tolist() == [True, False, False]
+    assert wb.tolist() == [True, False, True]
+
+
+# ---------------------------------------------------------------------------
+# the structure differential (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_struct_differential_workload(tmp_path):
+    """A conflict-bearing logical workload agrees across kernel and
+    durable backends, and every shadow-expressible round's verdicts
+    match the cycle-accurate simulator."""
+    ops = ([KVOp(INSERT, k, 10 * k) for k in (3, 7, 11, 15)]     # same chain
+           + [KVOp(INSERT, 3, 5), KVOp(INSERT, 21, 9)])
+    rep = run_struct_differential(ops, n_buckets=4,
+                                  durable_root=tmp_path)
+    assert rep.agree, rep.summary()
+    assert rep.sim_rounds_checked >= 1
+    assert rep.statuses["kernel"].count(OK) == 4
+    assert FULL in rep.statuses["kernel"]      # 5th distinct key can't fit
+
+
+def test_struct_differential_mixed_mutations(tmp_path):
+    ops = [KVOp(INSERT, 5, 100), KVOp(INSERT, 13, 200),
+           KVOp(UPDATE, 5, 111), KVOp(DELETE, 13), KVOp(INSERT, 5, 1)]
+    rep = run_struct_differential(ops, n_buckets=8,
+                                  durable_root=tmp_path)
+    assert rep.agree, rep.summary()
+    assert rep.items["kernel"] == rep.items["durable"]
+
+
+# ---------------------------------------------------------------------------
+# BzTree-style sorted node
+# ---------------------------------------------------------------------------
+
+def test_node_insert_and_sorted_view():
+    kb = KernelBackend(n_words=32, use_kernel=False)
+    node = SortedNode(kb, base=2, capacity=6)
+    for k in (42, 7, 19):
+        assert node.insert(k) == NODE_OK
+    assert node.raw_slots() == [42, 7, 19]     # arrival order on medium
+    assert node.keys() == [7, 19, 42]          # sorted on read
+    assert node.search(19) and not node.search(20)
+    assert node.insert(7) == "exists"
+
+
+def test_node_concurrent_inserts_serialize():
+    """All pending inserts target the same (meta, slot) pair each round:
+    exactly one winner per round, everyone lands eventually."""
+    kb = KernelBackend(n_words=32, use_kernel=False)
+    node = SortedNode(kb, base=0, capacity=6)
+    sts = node.insert_batch([5, 9, 3, 7])
+    assert sts == [NODE_OK] * 4
+    assert node.keys() == [3, 5, 7, 9]
+    assert node.count == 4
+
+
+def test_node_full_freeze_split():
+    kb = KernelBackend(n_words=64, use_kernel=False)
+    node = SortedNode(kb, base=0, capacity=4)
+    assert node.insert_batch([10, 30, 20, 40]) == [NODE_OK] * 4
+    assert node.insert(50) == NODE_FULL
+    left, right, sep = node.split(10, 20)      # fresh zeroed regions
+    assert node.frozen and node.insert(60) == NODE_FROZEN
+    assert left.keys() == [10, 20] and right.keys() == [30, 40]
+    assert sep == 30
+    assert not left.frozen and left.insert(15) == NODE_OK
+    # atomic pointer install: readers swing from old to new in one CAS
+    ptr = 50
+    assert swap_pointer(kb, ptr, 0, left.base)
+    assert read_pointer(kb, ptr) == left.base
+    assert not swap_pointer(kb, ptr, 0, right.base)   # stale expected
+
+
+def test_node_split_needs_zeroed_region():
+    kb = KernelBackend(n_words=64, use_kernel=False)
+    node = SortedNode(kb, base=0, capacity=4)
+    node.insert_batch([1, 2, 3, 4])
+    kb.execute([MwCASOp([(21, 0, 99)])])       # dirty word in right region
+    with pytest.raises(SplitError):
+        node.split(10, 20)
+
+
+def test_node_on_durable_backend(tmp_path):
+    db = DurableBackend(tmp_path)
+    node = SortedNode(db, base=0, capacity=4)
+    assert node.insert_batch([42, 7, 19, 23]) == [NODE_OK] * 4
+    left, right, sep = node.split(10, 20)
+    assert (left.keys(), right.keys(), sep) == ([7, 19], [23, 42], 23)
+    # the split (one wide MwCAS) survives a crash as a unit
+    db2 = db.crash()
+    l2 = SortedNode(db2, 10, 4)
+    r2 = SortedNode(db2, 20, 4)
+    assert l2.keys() == [7, 19] and r2.keys() == [23, 42]
+    assert SortedNode(db2, 0, 4).frozen        # original stays frozen
+
+
+# ---------------------------------------------------------------------------
+# free-list allocator
+# ---------------------------------------------------------------------------
+
+def test_freelist_alloc_free_roundtrip():
+    fl = FreeListAllocator(16, region_base=100, region_words=8)
+    grants = fl.alloc([2, 3, 0])
+    assert grants[2] == [] and len(grants[0]) == 2 and len(grants[1]) == 3
+    assert fl.n_free == 11
+    assert fl.region(grants[0][0]) == 100 + grants[0][0] * 8
+    fl.free(grants[1])
+    assert fl.n_free == 14
+    with pytest.raises(DoubleFree):
+        fl.free(grants[1])                     # already back on the list
+
+
+def test_freelist_scarcity_and_contention():
+    fl = FreeListAllocator(4)
+    grants = fl.alloc([3, 3])                  # supply for one, not both
+    served = [g for g in grants if g is not None]
+    assert len(served) == 1 and fl.n_free == 1
+    # raw contended reservations: lower batch index wins atomically
+    fl2 = FreeListAllocator(8)
+    ok = fl2.reserve([[0, 1], [1, 2], [3, 4]])
+    assert ok == [True, False, True]
+    assert fl2.n_free == 4                     # loser claimed nothing
+
+
+# ---------------------------------------------------------------------------
+# workload compiler
+# ---------------------------------------------------------------------------
+
+def test_workload_compile_deterministic_and_mixed():
+    spec = WorkloadSpec(n_ops=200, n_keys=32, read=0.4, update=0.3,
+                        insert=0.2, delete=0.1, seed=7)
+    ops1, ops2 = compile_workload(spec), compile_workload(spec)
+    assert ops1 == ops2                        # seeded determinism
+    kinds = {op.kind for op in ops1}
+    assert kinds == {READ, UPDATE, INSERT, DELETE}
+    assert all(1 <= op.key <= spec.n_keys for op in ops1)
+
+
+def test_workload_zipf_skew_concentrates_keys():
+    uniform = compile_workload(WorkloadSpec(n_ops=400, n_keys=64, seed=1))
+    skewed = compile_workload(WorkloadSpec(n_ops=400, n_keys=64, seed=1,
+                                           alpha=1.2))
+    def top_share(ops):
+        _, counts = np.unique([op.key for op in ops], return_counts=True)
+        return np.sort(counts)[-4:].sum() / len(ops)
+    assert top_share(skewed) > top_share(uniform) + 0.1
+
+
+def test_workload_invalid_mix_rejected():
+    with pytest.raises(ValueError):
+        WorkloadSpec(read=0.9, update=0.9, insert=0, delete=0, scan=0)
+
+
+def test_workload_end_to_end_with_stats():
+    spec = WorkloadSpec(n_ops=48, n_keys=16, seed=3, batch=8, alpha=0.9)
+    h = oracle_map(n_buckets=32)
+    h.apply(load_phase(spec))
+    stats = run_workload(h, spec)
+    assert stats.n_ops == 48
+    assert sum(stats.by_status.values()) == 48
+    assert stats.by_status.get(OK, 0) > 0
+    assert stats.mwcas_won <= stats.mwcas_submitted
+    h.check_integrity()
+
+
+def test_kernel_round_arrays_wire_form():
+    """The structure layer hands the Pallas kernel its native
+    int32[B,K]-with-(-1)-padding wire format."""
+    h = oracle_map(n_buckets=8)
+    ops = [KVOp(INSERT, 3, 30), KVOp(INSERT, 5, 50), KVOp(READ, 3)]
+    addr, exp, des, mwcas = kernel_round_arrays(h, ops)
+    assert addr.shape == (2, 2)                # the READ compiles to no CAS
+    assert addr.dtype == np.int32 and (addr >= 0).all()
+    assert (des[:, 1] == [30, 50]).all()       # value words carried
