@@ -13,8 +13,9 @@ import time
 
 from repro.pmwcas import (CNT_CAS, CNT_FLUSH, DurableBackend, KernelBackend,
                           OURS, SimBackend)
-from repro.structures import (FreeListAllocator, HashMap, NODE_OK, SortedNode,
-                              WorkloadSpec, YCSB_A, YCSB_B, compile_workload,
+from repro.structures import (BzTreeIndex, FreeListAllocator, HashMap,
+                              NODE_OK, SortedNode, WorkloadSpec, YCSB_A,
+                              YCSB_B, YCSB_C, YCSB_E, compile_workload,
                               load_phase, run_workload, shadow_batch)
 
 from .common import emit
@@ -120,5 +121,95 @@ def run(quick: bool = False):
          f"served={served}/{len(grants)};free={fl.n_free}")
 
 
+def _loaded_tree(backend_factory, spec: WorkloadSpec, *, leaf_cap: int,
+                 root_cap: int, n_regions: int) -> BzTreeIndex:
+    n_words = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)
+    tree = BzTreeIndex(backend_factory(n_words), leaf_cap=leaf_cap,
+                       root_cap=root_cap, n_regions=n_regions)
+    tree.apply(load_phase(spec))
+    return tree
+
+
+def _tree_cell(name: str, tree: BzTreeIndex, spec: WorkloadSpec, *,
+               shadow: bool = False):
+    ops = compile_workload(spec)
+    s0 = (tree.splits, tree.consolidations)
+    t0 = time.time()
+    stats = run_workload(tree, spec, ops=ops)
+    dt = time.time() - t0
+    tree.check_integrity()
+    derived = (f"ops_per_s={stats.n_ops / dt:.0f};"
+               f"ok={stats.by_status.get('ok', 0)};"
+               f"rounds={stats.rounds};"
+               f"retries_per_op={stats.retries_per_op:.3f};"
+               f"cas_ops_per_op={stats.cas_ops_per_op:.3f};"
+               f"splits={tree.splits - s0[0]};"
+               f"leaves={len(tree.leaf_bases())}")
+    if shadow:
+        cas, flush = _shadow_costs(tree)
+        derived += f";cas_per_op={cas:.2f};flush_per_op={flush:.2f}"
+    emit(f"{name},{dt / stats.n_ops * 1e6:.1f},{derived}")
+    return stats
+
+
+def run_tree(quick: bool = False):
+    """The multi-node section: YCSB A/B/C + the scan-heavy E mix on the
+    two-level BzTree (kernel + durable backends), plus a split-latency
+    micro-bench — ``BENCH_tree.json``."""
+    n_ops, n_keys = (32, 12) if quick else (160, 48)
+    leaf_cap = 4 if quick else 8
+    root_cap = max(4, 2 * n_keys // leaf_cap)
+    n_regions = root_cap + 2
+    shape = dict(leaf_cap=leaf_cap, root_cap=root_cap, n_regions=n_regions)
+    mixes = [("ycsb_a", YCSB_A), ("ycsb_b", YCSB_B), ("ycsb_c", YCSB_C),
+             ("ycsb_e_scan", YCSB_E)]
+    skews = (0.0,) if quick else (0.0, 0.99)
+
+    # -- tree on the kernel backend (jnp oracle; use_kernel on TPU) -----------
+    for mix_name, mix in mixes:
+        for alpha in skews:
+            spec = dataclasses.replace(mix, n_ops=n_ops, n_keys=n_keys,
+                                       batch=8, seed=11, alpha=alpha)
+            tree = _loaded_tree(
+                lambda n: KernelBackend(n_words=n, use_kernel=False),
+                spec, **shape)
+            _tree_cell(f"tree_{mix_name}_zipf{alpha:g}", tree, spec,
+                       shadow=(mix_name == "ycsb_a" and alpha == 0.0))
+
+    # -- tree on the durable committer (real persists, incl. split WALs) -----
+    d_spec = dataclasses.replace(YCSB_A, n_ops=min(n_ops, 48),
+                                 n_keys=n_keys, batch=8, seed=11)
+    holder = {}
+
+    def durable_factory(n_words):
+        holder["backend"] = DurableBackend()
+        return holder["backend"]
+
+    dtree = _loaded_tree(durable_factory, d_spec, **shape)
+    p0 = holder["backend"].pool.persist_count       # exclude load phase
+    stats = _tree_cell("tree_ycsb_a_durable", dtree, d_spec)
+    persists = holder["backend"].pool.persist_count - p0
+    pruned = holder["backend"].prune_completed()    # WAL hygiene pass
+    emit(f"tree_durable_persists,0.0,"
+         f"persists_per_commit={persists / max(1, stats.mwcas_won):.2f};"
+         f"wal_pruned={pruned}")
+
+    # -- split latency: fill one leaf past capacity, time the two rounds -----
+    cap = 8 if quick else 32
+    n_words = BzTreeIndex.words_needed(cap, 4, 4)
+    tree = BzTreeIndex(KernelBackend(n_words=n_words, use_kernel=False),
+                       leaf_cap=cap, root_cap=4, n_regions=4)
+    from repro.structures import INSERT, KVOp
+    tree.apply([KVOp(INSERT, k, k) for k in range(1, cap + 1)])
+    t0 = time.time()
+    tree.apply([KVOp(INSERT, cap + 1, 1)])          # triggers the split
+    dt = time.time() - t0
+    assert tree.splits == 1
+    emit(f"tree_split_cap{cap},{dt * 1e6:.1f},"
+         f"splits={tree.splits};leaves={len(tree.leaf_bases())};"
+         f"wide_k={2 * (1 + 2 * (cap // 2)) + 2}")
+
+
 if __name__ == "__main__":
     run()
+    run_tree()

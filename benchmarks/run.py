@@ -37,7 +37,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sweeps (CI)")
     ap.add_argument("--only", default=None,
-                    help="threads|words|skew|blocks|ckpt|kernels|diff|structs")
+                    help="threads|words|skew|blocks|ckpt|kernels|diff|"
+                         "structs|tree")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json (default: cwd)")
     ap.add_argument("--no-json", action="store_true",
@@ -56,6 +57,7 @@ def main() -> None:
         "kernels": bench_kernels.run,   # TPU-adaptation micro-benches
         "diff": bench_diff.run,         # cross-backend differential smoke
         "structs": bench_structs.run,   # lock-free structures on PMwCAS
+        "tree": bench_structs.run_tree,  # multi-node BzTree index (Sec. 7)
     }
     if args.only and args.only not in sections:
         ap.error(f"unknown section {args.only!r}; "

@@ -35,14 +35,24 @@ echo "=== 3. tier-1 tests ==="
 python -m pytest -x -q
 
 echo "=== 4. benchmark smoke (API regression tripwire) ==="
-python -m benchmarks.run --quick --only diff --no-json
-python -m benchmarks.run --quick --only ckpt --no-json
-python -m benchmarks.run --quick --only structs --no-json
+BENCH_DIR=".bench/current"
+rm -rf "$BENCH_DIR" && mkdir -p "$BENCH_DIR"
+python -m benchmarks.run --quick --only diff --json-dir "$BENCH_DIR"
+python -m benchmarks.run --quick --only ckpt --json-dir "$BENCH_DIR"
+python -m benchmarks.run --quick --only structs --json-dir "$BENCH_DIR"
+python -m benchmarks.run --quick --only tree --json-dir "$BENCH_DIR"
 
-echo "=== 5. cross-backend differential examples ==="
+echo "=== 5. perf trend (>20% ops/s regressions vs previous run) ==="
+# warn-only by default (first run has no baseline); PERF_STRICT=1 gates
+python scripts/perf_trend.py "$BENCH_DIR" .bench/baseline \
+    ${PERF_STRICT:+--strict}
+
+echo "=== 6. cross-backend differential examples ==="
 python examples/quickstart.py > /dev/null
 echo "quickstart OK"
 python examples/kv_store.py > /dev/null
 echo "kv_store OK"
+python examples/range_index.py > /dev/null
+echo "range_index OK"
 
 echo "CI PASSED"

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Perf-trend check over the machine-readable benchmark output.
+
+Compares every ``BENCH_<section>.json`` in CURRENT_DIR against the copy
+from the previous run in BASELINE_DIR and flags throughput regressions:
+a row regresses when its ops/s metric drops by more than --threshold
+(default 20%).  Rows are matched by their ``name`` field; the metric is
+``ops_per_s`` where present, else ``mops`` (the simulator sections).
+After the comparison the current JSONs are promoted to the baseline, so
+successive CI runs always compare against their predecessor.
+
+On the first run (no baseline) nothing is compared — warn-only by
+design.  Regressions print warnings and exit 0 unless --strict (CI can
+opt in via ``PERF_STRICT=1 bash scripts/ci.sh``): wall-clock benches on
+shared runners are noisy, so the trend is a tripwire, not a gate, until
+an operator decides otherwise.
+
+    python scripts/perf_trend.py CURRENT_DIR BASELINE_DIR [--threshold F]
+                                 [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+METRICS = ("ops_per_s", "mops")      # first present wins
+
+
+def _metric(row: dict):
+    for key in METRICS:
+        val = row.get(key)
+        if isinstance(val, (int, float)) and val > 0:
+            return key, float(val)
+    return None, None
+
+
+def _rows_by_name(path: pathlib.Path) -> dict:
+    data = json.loads(path.read_text())
+    return {r["name"]: r for r in data.get("rows", []) if "name" in r}
+
+
+def compare(current: pathlib.Path, baseline: pathlib.Path,
+            threshold: float) -> list:
+    """[(section, row name, metric, old, new, drop fraction), ...]"""
+    regressions = []
+    for cur_path in sorted(current.glob("BENCH_*.json")):
+        base_path = baseline / cur_path.name
+        section = cur_path.stem[len("BENCH_"):]
+        if not base_path.exists():
+            print(f"perf-trend: no baseline for {section}; recording only")
+            continue
+        base_rows = _rows_by_name(base_path)
+        for name, row in _rows_by_name(cur_path).items():
+            key, new = _metric(row)
+            if key is None or name not in base_rows:
+                continue
+            old_key, old = _metric(base_rows[name])
+            if old_key != key or not old:
+                continue
+            drop = (old - new) / old
+            if drop > threshold:
+                regressions.append((section, name, key, old, new, drop))
+    return regressions
+
+
+def promote(current: pathlib.Path, baseline: pathlib.Path) -> None:
+    baseline.mkdir(parents=True, exist_ok=True)
+    for cur_path in current.glob("BENCH_*.json"):
+        shutil.copy2(cur_path, baseline / cur_path.name)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", type=pathlib.Path,
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("baseline", type=pathlib.Path,
+                    help="directory holding the previous run's copies")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="flag drops larger than this fraction (0.20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when a regression is flagged")
+    args = ap.parse_args()
+
+    regressions = compare(args.current, args.baseline, args.threshold)
+    for section, name, key, old, new, drop in regressions:
+        print(f"perf-trend REGRESSION [{section}] {name}: "
+              f"{key} {old:.0f} -> {new:.0f} (-{drop:.0%})")
+    if not regressions:
+        print(f"perf-trend: no >{args.threshold:.0%} regressions")
+    failing = bool(regressions and args.strict)
+    if failing:
+        # keep the pre-regression baseline: promoting the regressed run
+        # would make an unchanged retry compare against itself and pass
+        print("perf-trend: strict failure — baseline NOT updated")
+    else:
+        promote(args.current, args.baseline)
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,9 +9,10 @@ Public surface (import from here or from :mod:`repro.pmwcas`):
   (``SimBackend``/``KernelBackend``/``DurableBackend``), the fluent
   ``SimSession`` builder and cross-backend ``run_differential``.
 - ``repro.structures`` — lock-free persistent data structures built on
-  the unified API (``HashMap``, ``SortedNode``, ``FreeListAllocator``),
-  plus the YCSB-style workload compiler, structure-level crash
-  checkers and ``run_struct_differential``.
+  the unified API (``HashMap``, ``SortedNode``, the multi-node
+  ``BzTreeIndex``, ``FreeListAllocator``), plus the YCSB-style workload
+  compiler, structure-level crash checkers and
+  ``run_struct_differential``.
 - checkpoint layer: ``Committer``, ``MarkerCommitter``,
   ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
   ``SimulatedCrash``.
@@ -31,10 +32,12 @@ _CHECKPOINT = ("Committer", "MarkerCommitter", "CheckpointManager",
                "AsyncCheckpointManager", "PMemPool", "SimulatedCrash",
                "data_rel")
 _STRUCTURES = ("HashMap", "KVOp", "StructResult", "SortedNode",
+               "BzTreeIndex", "LeafNode",
                "FreeListAllocator", "WorkloadSpec", "WorkloadStats",
                "compile_workload", "run_workload",
                "run_struct_differential", "StructDifferentialReport",
                "check_durable_crash_sweep", "check_sim_crash_sweep",
+               "check_tree_crash_sweep",
                "TornStructure", "CrashCheckError")
 _PMWCAS = (
     "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",

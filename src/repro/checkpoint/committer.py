@@ -135,6 +135,38 @@ class Committer:
                     pool.delete(data_rel(name, des))
         return success
 
+    # -- WAL hygiene --------------------------------------------------------------
+    def prune_completed(self) -> int:
+        """Remove spent descriptor records from ``wal/``; returns how
+        many were pruned.
+
+        Every structure op writes one descriptor, so without pruning the
+        WAL grows without bound (ROADMAP: recovery-time GC).  A record is
+        *spent* — and safe to drop durably — once no target slot still
+        references it: COMPLETED records (the common case, finalize done)
+        and FAILED/SUCCEEDED residue that recovery already rolled
+        forward/back.  Recovery only ever consults a descriptor through a
+        slot's ``desc`` reference, so an unreferenced record cannot
+        influence any future recover().
+        """
+        pool = self.pool
+        pruned = 0
+        for fn in pool.listdir("wal"):
+            rel = f"wal/{fn}"
+            desc = pool.read_record(rel)
+            if desc is not None:
+                referenced = False
+                for name, _exp, _des in desc["targets"]:
+                    rec = pool.read_record(_slot_rel(name))
+                    if rec is not None and rec.get("desc") == desc["id"]:
+                        referenced = True
+                        break
+                if referenced:
+                    continue                 # still in-flight: keep
+            pool.delete_persist(rel)         # torn/spent: durably drop
+            pruned += 1
+        return pruned
+
     # -- recovery -----------------------------------------------------------------
     def recover(self) -> Dict[str, int]:
         """Roll every slot forward/back from the persisted descriptors.

@@ -9,8 +9,8 @@ from __future__ import annotations
 import time
 from typing import Dict, Sequence, Tuple
 
-from .committer import (ST_COMPLETED, ST_FAILED, ST_SUCCEEDED, _desc_rel,
-                        _slot_rel, data_rel)
+from .committer import (Committer, ST_COMPLETED, ST_FAILED, ST_SUCCEEDED,
+                        _desc_rel, _slot_rel, data_rel)
 from .pmem import PMemPool
 
 
@@ -21,6 +21,10 @@ def _marker_rel(name: str) -> str:
 class MarkerCommitter:
     def __init__(self, pool: PMemPool):
         self.pool = pool
+
+    # WAL hygiene is committer-agnostic (it reads only descriptors and
+    # slot records, both shared vocabulary) — reuse the primary logic
+    prune_completed = Committer.prune_completed
 
     def slot_version(self, name: str) -> int:
         rec = self.pool.read_record(_slot_rel(name))

@@ -80,6 +80,19 @@ class PMemPool:
         if p.exists():
             p.unlink()
 
+    def delete_persist(self, rel: str):
+        """Durable unlink (the directory-fsync analogue): unlike
+        :meth:`delete`, the file does NOT come back after a crash.
+        Counts as one persist, so crash injection covers it too."""
+        p = self.root / rel
+        self.persist_count += 1
+        if self.crash_after is not None and \
+                self.persist_count > self.crash_after:
+            raise SimulatedCrash(f"crash before durably deleting {rel}")
+        if p.exists():
+            p.unlink()
+        self._unpersisted.pop(p, None)
+
     def listdir(self, rel: str):
         d = self.root / rel
         if not d.exists():

@@ -350,6 +350,14 @@ class DurableBackend:
     def recover(self) -> Dict[str, int]:
         return self.committer.recover()
 
+    def prune_completed(self) -> int:
+        """WAL hygiene: durably drop spent descriptor records (every op
+        writes one; without pruning ``wal/`` grows without bound).  Safe
+        at any point — recovery never consults an unreferenced record —
+        and the structure crash sweeps assert exactly that in their
+        teardown."""
+        return self.committer.prune_completed()
+
     def crash(self) -> "DurableBackend":
         """Simulate a crash: drop unpersisted writes, reopen, recover."""
         new = DurableBackend(pool=self.pool.crash(),

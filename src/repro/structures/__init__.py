@@ -12,24 +12,31 @@ kernel, and the durable descriptor-WAL committer:
 - :class:`SortedNode` — BzTree-style sorted-array node; insert is a
   2-word MwCAS (meta + slot), split freezes then materializes both
   halves with ONE wide MwCAS.
+- :class:`BzTreeIndex` — the multi-node payoff: a two-level BzTree of
+  :class:`LeafNode` KV leaves under a separator-routing root, leaf
+  splits = the one-wide-MwCAS split + a 2-word parent install
+  (DESIGN.md Sec. 7).
 - :class:`FreeListAllocator` — atomic K-slot reservation layered on
   ``reserve_slots`` (the serving-layer primitive).
-- workload compiler — YCSB-style mixes with Zipfian key popularity,
-  compiled to the hash map's logical-op vocabulary and batched into
-  the kernel's ``ops_to_arrays`` wire form.
+- workload compiler — YCSB-style mixes with Zipfian key popularity
+  (A/B/C plus the scan-heavy E for the range index), compiled to the
+  shared logical-op vocabulary and batched into the kernel's
+  ``ops_to_arrays`` wire form.
 - checkers + differential — structure-level crash-consistency sweeps
-  (durable crash-at-every-persist, simulator micro-op crash sweep) and
-  :func:`run_struct_differential`, the three-substrate agreement check
-  for whole logical workloads.
+  (durable crash-at-every-persist for map and tree, simulator micro-op
+  crash sweep) and :func:`run_struct_differential`, the three-substrate
+  agreement check for whole logical workloads.
 
 See DESIGN.md Sec. 6 for operation compilation, per-backend semantics
-and the crash invariants.
+and the crash invariants, and Sec. 7 for the multi-node tree.
 """
 from .bztree import (COUNT_MASK, FROZEN_BIT, NODE_EXHAUSTED, NODE_EXISTS,
                      NODE_FROZEN, NODE_FULL, NODE_OK, SortedNode, SplitError,
                      read_pointer, swap_pointer)
+from .bztree_index import BzTreeIndex, LEAF_DEAD, LeafNode
 from .checkers import (CrashCheckError, check_durable_crash_sweep,
-                       check_sim_crash_sweep, replay_effects)
+                       check_sim_crash_sweep, check_tree_crash_sweep,
+                       replay_effects)
 from .differential import (StructDifferentialReport, conservative_verdicts,
                            run_struct_differential, shadow_batch,
                            winner_blocking_verdicts)
@@ -38,8 +45,8 @@ from .hashmap import (DELETE, EMPTY, EXHAUSTED, EXISTS, FULL, HashMap,
                       INSERT, KVOp, NOT_FOUND, OK, READ, RoundTrace, SCAN,
                       StructResult, TOMBSTONE, TornStructure, UPDATE)
 from .workload import (LOAD, WorkloadSpec, WorkloadStats, YCSB_A, YCSB_B,
-                       YCSB_C, batches, compile_workload, kernel_round_arrays,
-                       load_phase, run_workload)
+                       YCSB_C, YCSB_E, batches, compile_workload,
+                       kernel_round_arrays, load_phase, run_workload)
 
 __all__ = [
     # hash map
@@ -51,14 +58,18 @@ __all__ = [
     "SortedNode", "SplitError", "swap_pointer", "read_pointer",
     "FROZEN_BIT", "COUNT_MASK",
     "NODE_OK", "NODE_FULL", "NODE_FROZEN", "NODE_EXISTS", "NODE_EXHAUSTED",
+    # multi-node tree
+    "BzTreeIndex", "LeafNode", "LEAF_DEAD",
     # allocator
     "FreeListAllocator", "DoubleFree",
     # workload
-    "WorkloadSpec", "WorkloadStats", "YCSB_A", "YCSB_B", "YCSB_C", "LOAD",
+    "WorkloadSpec", "WorkloadStats", "YCSB_A", "YCSB_B", "YCSB_C", "YCSB_E",
+    "LOAD",
     "compile_workload", "load_phase", "batches", "run_workload",
     "kernel_round_arrays",
     # checkers + differential
-    "check_durable_crash_sweep", "check_sim_crash_sweep", "replay_effects",
+    "check_durable_crash_sweep", "check_sim_crash_sweep",
+    "check_tree_crash_sweep", "replay_effects",
     "CrashCheckError",
     "run_struct_differential", "StructDifferentialReport",
     "conservative_verdicts", "winner_blocking_verdicts", "shadow_batch",

@@ -28,7 +28,7 @@ why pointer installation can be a separate, later CAS.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.pmwcas import Backend, MwCASOp
 
@@ -182,7 +182,8 @@ class SortedNode:
         targets += [(base + 1 + i, 0, k) for i, k in enumerate(keys)]
         return targets
 
-    def split(self, left_base: int, right_base: int
+    def split(self, left_base: int, right_base: int, *,
+              extra_targets: Sequence[Tuple[int, int, int]] = ()
               ) -> Tuple["SortedNode", "SortedNode", int]:
         """Freeze, then materialize both halves with ONE wide MwCAS.
 
@@ -191,6 +192,11 @@ class SortedNode:
         ``right`` is >= separator.  The single wide op is the crash
         argument: either both halves exist completely or neither does,
         and the frozen original stays valid throughout.
+
+        ``extra_targets`` are folded into the same wide MwCAS — the
+        multi-node tree uses this to pre-publish its parent entry
+        (separator + right-child words at an invisible append position)
+        atomically with the half images (DESIGN.md Sec. 7).
         """
         self.freeze()
         ks = self.keys()
@@ -199,13 +205,14 @@ class SortedNode:
         mid = len(ks) // 2
         left_keys, right_keys = ks[:mid], ks[mid:]
         targets = (self._node_image(left_base, left_keys)
-                   + self._node_image(right_base, right_keys))
+                   + self._node_image(right_base, right_keys)
+                   + [tuple(t) for t in extra_targets])
         (res,) = self.backend.execute([MwCASOp(targets)])
         if not res.success:
             raise SplitError(
                 "split target region was not zeroed or is contended")
-        return (SortedNode(self.backend, left_base, self.capacity),
-                SortedNode(self.backend, right_base, self.capacity),
+        return (type(self)(self.backend, left_base, self.capacity),
+                type(self)(self.backend, right_base, self.capacity),
                 right_keys[0])
 
 

@@ -1,0 +1,595 @@
+r"""Two-level BzTree index on the unified PMwCAS API (DESIGN.md Sec. 7).
+
+The first true multi-node structure in the repo: a root inner node
+routing by separator keys over a row of KV leaves, every building block
+taken from the existing structures layer —
+
+- leaves are :class:`LeafNode`, a :class:`~repro.structures.SortedNode`
+  with a parallel value array (insert is one 3-word MwCAS, update/delete
+  one 2-word meta-guarded MwCAS);
+- the root is itself SortedNode-shaped: separator/child entries are
+  appended in arrival order and sorted on read, so publishing an entry
+  is a count bump — the same visibility switch the leaf insert uses;
+- node regions are carved out of :class:`FreeListAllocator`;
+- a leaf split is the existing one-wide-MwCAS ``SortedNode.split``
+  followed by a 2-word parent install.
+
+Word layout (all state lives in the backend, as with every structure)::
+
+    root:  base          meta  = entry count (separators installed)
+           base + 1      ptr0  = leftmost child (keys < every separator)
+           base + 2 + 2i sep[i]   \  appended in arrival order,
+           base + 3 + 2i child[i] /  sorted by separator on read
+    leaf:  L             meta  = arrival count | FROZEN_BIT
+           L + 1 + i     key slot i
+           L + 1 + C + i value slot i   (LEAF_DEAD = deleted)
+
+**Split = exactly two MwCAS rounds** (the DESIGN Sec. 7 argument):
+
+1. freeze the leaf (1-word), then ONE wide MwCAS materializes both
+   half images AND pre-publishes the parent entry — separator and
+   right-child words at the *append position* ``n`` (``extra_targets``
+   of ``SortedNode.split``).  The entry is invisible (root count still
+   ``n``), so readers and the crash checker see the pre-split tree.
+2. ONE 2-word MwCAS installs the split: the routing pointer of the old
+   leaf swings to the left half and the root count bumps ``n -> n+1``,
+   making the (separator, right child) entry visible.  This is the
+   linearization point of the split.
+
+A crash between the rounds leaves a frozen leaf whose routing is
+unchanged — the pre-split tree, fully readable.  The next mutation that
+lands on the frozen leaf *completes* the pending split from the
+persisted pre-entry alone (the left half base is derivable: halves are
+materialized adjacently inside one allocator pair region), which is why
+no split ever needs a third round or an auxiliary log.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.pmwcas import Backend, MwCASOp
+
+from .bztree import COUNT_MASK, FROZEN_BIT, SortedNode, SplitError
+from .freelist import FreeListAllocator
+from .hashmap import (EXHAUSTED, EXISTS, FULL, INSERT, KVOp, NOT_FOUND, OK,
+                      READ, RoundTrace, SCAN, StructResult, TornStructure,
+                      UPDATE)
+
+LEAF_DEAD = (1 << 32) - 1        # value word of a deleted key (uint32 max)
+MAX_KEY = FROZEN_BIT             # keys live in (0, 2^31), as in SortedNode
+
+
+class LeafNode(SortedNode):
+    """A SortedNode plus a parallel value array — the KV leaf.
+
+    The meta/key protocol (count-as-visibility-switch, FROZEN_BIT,
+    append order, sorted reads) is inherited unchanged; values ride in
+    the slots ``base + 1 + capacity + i``.  Deletion never shrinks the
+    append area: it CASes the value word to :data:`LEAF_DEAD`, and the
+    next split compacts dead entries away (``keys()`` is live-only, so
+    the inherited one-wide-MwCAS split is also the consolidation).
+    """
+
+    # -- layout ----------------------------------------------------------------
+    def value_addr(self, i: int) -> int:
+        return self.base + 1 + self.capacity + i
+
+    @property
+    def n_words(self) -> int:
+        return 1 + 2 * self.capacity
+
+    # -- reads -----------------------------------------------------------------
+    def raw_values(self) -> List[int]:
+        return [int(self.backend.read(self.value_addr(i)))
+                for i in range(self.count)]
+
+    def items(self) -> Dict[int, int]:
+        """Live (key, value) pairs (dead entries filtered)."""
+        return {k: v for k, v in zip(self.raw_slots(), self.raw_values())
+                if v != LEAF_DEAD}
+
+    def keys(self) -> List[int]:
+        """Sorted LIVE keys — what the inherited split materializes."""
+        return sorted(self.items())
+
+    def search(self, key: int) -> bool:
+        return key in self.items()
+
+    # -- mutations -------------------------------------------------------------
+    def compile_insert(self, key, meta=None, slots=None):
+        raise NotImplementedError(
+            "LeafNode inserts carry values; compile through BzTreeIndex")
+
+    def _node_image(self, base: int, keys: List[int]) -> List:
+        """Meta + keys (the SortedNode image) + their values: the half
+        image the inherited ``split`` writes with its one wide MwCAS."""
+        kv = self.items()
+        return super()._node_image(base, keys) + \
+            [(base + 1 + self.capacity + i, 0, kv[k])
+             for i, k in enumerate(keys)]
+
+
+@dataclasses.dataclass(frozen=True)
+class _NeedsSplit:
+    """Compile verdict: this op cannot proceed until its leaf splits
+    (full) or a pending split completes (frozen)."""
+    leaf_base: int
+
+
+class BzTreeIndex:
+    """Two-level (root + leaves) BzTree over any PMwCAS backend.
+
+    Holds no authoritative state: the word table IS the tree, so a
+    crash/recover cycle on the durable backend is transparent —
+    construct a fresh index over the recovered backend and it attaches
+    to the existing root (rebuilding only the in-memory allocator mask
+    from the words it can see).
+
+    The client surface mirrors :class:`~repro.structures.HashMap`:
+    ``apply(ops)`` executes a batch of :class:`KVOp` in snapshot-
+    compiled rounds (losers recompile next round), recording each round
+    as a :class:`RoundTrace` for the simulator shadow differential, and
+    ``check_integrity`` asserts the multi-node invariants (no torn node
+    image, no half-written root entry, every live key routed to the
+    leaf that holds it).
+    """
+
+    def __init__(self, backend: Backend, *, leaf_cap: int = 4,
+                 root_cap: int = 8, n_regions: int = 8, base: int = 0):
+        if leaf_cap < 2:
+            raise ValueError("leaf_cap must be >= 2 (split needs halves)")
+        if root_cap < 1 or n_regions < 1:
+            raise ValueError("root_cap and n_regions must be positive")
+        self.backend = backend
+        self.leaf_cap = leaf_cap
+        self.root_cap = root_cap
+        self.base = base
+        self.leaf_words = 1 + 2 * leaf_cap
+        self.pair_words = 2 * self.leaf_words       # one split = one pair
+        self.root_words = 2 + 2 * root_cap
+        self.region_base = base + self.root_words
+        self.n_regions = n_regions
+        self.allocator = FreeListAllocator(
+            n_regions, region_base=self.region_base,
+            region_words=self.pair_words)
+        self.n_words = self.root_words + n_regions * self.pair_words
+        self.last_history: List[RoundTrace] = []
+        # cumulative instrumentation (HashMap vocabulary + split counters)
+        self.rounds_run = 0
+        self.mwcas_submitted = 0
+        self.mwcas_won = 0
+        self.splits = 0
+        self.consolidations = 0
+        self._attach_or_bootstrap()
+
+    @staticmethod
+    def words_needed(leaf_cap: int = 4, root_cap: int = 8,
+                     n_regions: int = 8, base: int = 0) -> int:
+        """Word-table size a backend must provide for these parameters."""
+        return base + 2 + 2 * root_cap + n_regions * 2 * (1 + 2 * leaf_cap)
+
+    # -- layout ----------------------------------------------------------------
+    @property
+    def meta_addr(self) -> int:
+        return self.base
+
+    @property
+    def ptr0_addr(self) -> int:
+        return self.base + 1
+
+    def sep_addr(self, i: int) -> int:
+        return self.base + 2 + 2 * i
+
+    def child_addr(self, i: int) -> int:
+        return self.base + 3 + 2 * i
+
+    def _slot_of(self, node_base: int) -> int:
+        return (node_base - self.region_base) // self.pair_words
+
+    # -- reads -----------------------------------------------------------------
+    def _read(self, addr: int) -> int:
+        return int(self.backend.read(addr))
+
+    def snapshot(self) -> np.ndarray:
+        """One consistent-enough read of the whole tree region."""
+        values = getattr(self.backend, "values", None)
+        if callable(values):
+            table = np.asarray(values(), np.int64)
+            return table[self.base:self.base + self.n_words]
+        return np.asarray([self._read(self.base + i)
+                           for i in range(self.n_words)], np.int64)
+
+    def _w(self, snap: Optional[np.ndarray], addr: int) -> int:
+        return self._read(addr) if snap is None else int(snap[addr - self.base])
+
+    def root_count(self, snap: Optional[np.ndarray] = None) -> int:
+        return self._w(snap, self.meta_addr) & COUNT_MASK
+
+    def _entries(self, snap: Optional[np.ndarray] = None
+                 ) -> List[Tuple[int, int, int]]:
+        """Visible (separator, child base, child word addr), sorted by
+        separator — the root's sorted-on-read view."""
+        out = [(self._w(snap, self.sep_addr(i)),
+                self._w(snap, self.child_addr(i)), self.child_addr(i))
+               for i in range(self.root_count(snap))]
+        out.sort()
+        return out
+
+    def _route(self, key: int, snap: Optional[np.ndarray] = None
+               ) -> Tuple[int, int]:
+        """(routing pointer word address, leaf base) for ``key``."""
+        addr, node = self.ptr0_addr, self._w(snap, self.ptr0_addr)
+        for sep, child, caddr in self._entries(snap):
+            if key >= sep:
+                addr, node = caddr, child
+        return addr, node
+
+    def leaf_bases(self, snap: Optional[np.ndarray] = None) -> List[int]:
+        """Reachable leaf bases in key order (ptr0 first)."""
+        return [self._w(snap, self.ptr0_addr)] + \
+            [child for _sep, child, _a in self._entries(snap)]
+
+    def leaves(self) -> List[LeafNode]:
+        return [LeafNode(self.backend, b, self.leaf_cap)
+                for b in self.leaf_bases()]
+
+    def lookup(self, key: int) -> Optional[int]:
+        _, base = self._route(key)
+        return LeafNode(self.backend, base, self.leaf_cap).items().get(key)
+
+    def items(self, snap: Optional[np.ndarray] = None) -> Dict[int, int]:
+        """All live (key, value) pairs across the reachable leaves."""
+        snap = self.snapshot() if snap is None else snap
+        out: Dict[int, int] = {}
+        for lb in self.leaf_bases(snap):
+            cnt = self._w(snap, lb) & COUNT_MASK
+            for i in range(cnt):
+                k = self._w(snap, lb + 1 + i)
+                v = self._w(snap, lb + 1 + self.leaf_cap + i)
+                if v != LEAF_DEAD:
+                    out[k] = v
+        return out
+
+    # -- bootstrap / attach ----------------------------------------------------
+    def _attach_or_bootstrap(self) -> None:
+        snap = self.snapshot()
+        if int(snap[self.ptr0_addr - self.base]) == 0:
+            # empty pool: an empty unfrozen leaf is all-zero words, so
+            # bootstrap is nothing but the ptr0 install (one CAS)
+            (grant,) = self.allocator.alloc([1])
+            if grant is None:
+                raise RuntimeError("no region for the bootstrap leaf")
+            leaf_base = self.allocator.region(grant[0])
+            (res,) = self.backend.execute(
+                [MwCASOp([(self.ptr0_addr, 0, leaf_base)])])
+            if not res.success:
+                raise RuntimeError("bootstrap ptr0 install lost its CAS")
+            return
+        # attach to an existing tree: rebuild the allocator mask from
+        # what the words show — reachable nodes plus any non-zero region
+        # (frozen originals and crash-orphaned halves stay claimed)
+        used = set()
+        for b in self.leaf_bases(snap):
+            used.add(self._slot_of(b))
+        for slot in range(self.n_regions):
+            lo = self.allocator.region(slot) - self.base
+            if snap[lo:lo + self.pair_words].any():
+                used.add(slot)
+        if used:
+            granted = self.allocator.reserve([[s] for s in sorted(used)])
+            if not all(granted):
+                raise RuntimeError("attach could not reclaim region slots")
+
+    # -- operation compilation -------------------------------------------------
+    def compile_op(self, op: KVOp, snap: np.ndarray
+                   ) -> Union[MwCASOp, StructResult, _NeedsSplit]:
+        """One logical op -> one MwCASOp (or an immediate result, or a
+        split request).  Expected values come from ``snap``, so condition
+        (a) of the batch semantics passes by construction — the
+        HashMap.compile_op contract, lifted to routing."""
+        if not 0 < op.key < MAX_KEY:
+            raise ValueError(f"key {op.key} outside (0, 2^31)")
+        if op.kind == SCAN:
+            total = 0
+            for lb in self.leaf_bases(snap):
+                cnt = self._w(snap, lb) & COUNT_MASK
+                for i in range(cnt):
+                    if (self._w(snap, lb + 1 + self.leaf_cap + i) != LEAF_DEAD
+                            and self._w(snap, lb + 1 + i) >= op.key):
+                        total += 1
+            return StructResult(op, OK, value=total)
+        _, leaf = self._route(op.key, snap)
+        cap = self.leaf_cap
+        meta = self._w(snap, leaf)
+        cnt = meta & COUNT_MASK
+        keys = [self._w(snap, leaf + 1 + i) for i in range(cnt)]
+        vals = [self._w(snap, leaf + 1 + cap + i) for i in range(cnt)]
+        live = {k: (i, v) for i, (k, v) in enumerate(zip(keys, vals))
+                if v != LEAF_DEAD}
+        if op.kind == READ:
+            if op.key in live:
+                return StructResult(op, OK, value=live[op.key][1])
+            return StructResult(op, NOT_FOUND)
+        frozen = bool(meta & FROZEN_BIT)
+        if op.kind == INSERT:
+            if op.key in live:
+                return StructResult(op, EXISTS, value=live[op.key][1])
+            if frozen:                       # pending split must complete
+                return _NeedsSplit(leaf)
+            for i, (k, v) in enumerate(zip(keys, vals)):
+                if k == op.key and v == LEAF_DEAD:
+                    # revive the dead slot in place (meta guard pins the
+                    # leaf against a concurrent freeze/split)
+                    return MwCASOp([(leaf, meta, meta),
+                                    (leaf + 1 + cap + i, LEAF_DEAD,
+                                     op.value)])
+            if cnt >= cap:
+                return _NeedsSplit(leaf)
+            return MwCASOp([(leaf, meta, meta + 1),
+                            (leaf + 1 + cnt, 0, op.key),
+                            (leaf + 1 + cap + cnt, 0, op.value)])
+        # UPDATE / DELETE
+        if op.key not in live:
+            return StructResult(op, NOT_FOUND)
+        if frozen:
+            return _NeedsSplit(leaf)
+        idx, cur = live[op.key]
+        desired = op.value if op.kind == UPDATE else LEAF_DEAD
+        return MwCASOp([(leaf, meta, meta),
+                        (leaf + 1 + cap + idx, cur, desired)])
+
+    # -- the split protocol (DESIGN Sec. 7) ------------------------------------
+    def _install(self, n: int, sep: int, right_base: int) -> bool:
+        """Round 2: ONE 2-word MwCAS — swing the old leaf's routing
+        pointer to the left half and bump the root count, making the
+        pre-published (separator, right child) entry visible.  The
+        linearization point of the whole split."""
+        left_base = right_base - self.leaf_words
+        ptr_addr, old_base = self._route(sep)
+        if old_base in (left_base, right_base):
+            return True                      # already installed (helper)
+        m = self._read(self.meta_addr)
+        if (m & COUNT_MASK) != n:
+            return self.root_count() > n
+        (res,) = self.backend.execute(
+            [MwCASOp([(self.meta_addr, m, m + 1),
+                      (ptr_addr, old_base, left_base)])])
+        self.mwcas_submitted += 1
+        if res.success:
+            self.mwcas_won += 1
+            self.splits += 1
+            return True
+        return self.root_count() > n         # a helper completed it
+
+    def _split_leaf(self, leaf_base: int) -> bool:
+        """Split (or complete the pending split of) one leaf.
+
+        Returns False only when the tree cannot grow: the root entry
+        array is full or no free region remains.  Idempotent under
+        crash/retry — each stage either finds its work already done or
+        redoes it from persisted state alone.
+        """
+        leaf = LeafNode(self.backend, leaf_base, self.leaf_cap)
+        n = self.root_count()
+        if n < self.root_cap:
+            sep_w = self._read(self.sep_addr(n))
+            child_w = self._read(self.child_addr(n))
+            if sep_w and child_w:
+                # round 1 already committed (this leaf's split or another
+                # pending one): complete its install, then let the caller
+                # recompile and retry
+                return self._install(n, sep_w, child_w)
+        if n >= self.root_cap and len(leaf.keys()) >= 2:
+            return False            # cannot grow — don't freeze the leaf
+        # claim the target region BEFORE freezing: a leaf frozen with no
+        # region to split into would be wedged forever (update/delete on
+        # its live keys could never complete)
+        (grant,) = self.allocator.alloc([1])
+        if grant is None:
+            return False
+        leaf.freeze()
+        ks = leaf.keys()
+        if len(ks) < 2:
+            return self._consolidate(leaf, grant)
+        if n >= self.root_cap:
+            self.allocator.free(grant)
+            return False
+        pair = self.allocator.region(grant[0])
+        left_base, right_base = pair, pair + self.leaf_words
+        sep = ks[len(ks) // 2]
+        try:
+            # round 1: the existing one-wide-MwCAS split, with the parent
+            # pre-entry folded into the same atomic op (invisible until
+            # round 2 bumps the count)
+            leaf.split(left_base, right_base,
+                       extra_targets=[(self.sep_addr(n), 0, sep),
+                                      (self.child_addr(n), 0, right_base)])
+        except SplitError:
+            self.allocator.free(grant)       # nothing was written (atomic)
+            return False
+        self.mwcas_submitted += 2            # freeze + wide materialize
+        self.mwcas_won += 2
+        return self._install(n, sep, right_base)
+
+    def _consolidate(self, leaf: LeafNode,
+                     grant: Optional[List[int]] = None) -> bool:
+        """A full leaf with < 2 live keys cannot split; materialize one
+        compacted node (same one-wide-MwCAS image) and swing the routing
+        pointer to it (1-word install, no root entry needed)."""
+        if grant is None:
+            (grant,) = self.allocator.alloc([1])
+            if grant is None:
+                return False
+        new_base = self.allocator.region(grant[0])
+        ks = leaf.keys()
+        (res,) = self.backend.execute(
+            [MwCASOp(leaf._node_image(new_base, ks))])
+        self.mwcas_submitted += 1
+        if not res.success:
+            self.allocator.free(grant)
+            return False
+        self.mwcas_won += 1
+        ptr_addr, old = self._ptr_word_of(leaf.base)
+        (res2,) = self.backend.execute(
+            [MwCASOp([(ptr_addr, old, new_base)])])
+        self.mwcas_submitted += 1
+        if res2.success:
+            self.mwcas_won += 1
+            self.consolidations += 1
+        return bool(res2.success)
+
+    def _ptr_word_of(self, node_base: int) -> Tuple[int, int]:
+        """The routing word currently holding ``node_base``."""
+        if self._read(self.ptr0_addr) == node_base:
+            return self.ptr0_addr, node_base
+        for i in range(self.root_count()):
+            if self._read(self.child_addr(i)) == node_base:
+                return self.child_addr(i), node_base
+        raise TornStructure(f"node@{node_base} is not routed by the root")
+
+    # -- round-based execution -------------------------------------------------
+    def apply(self, ops: Sequence[KVOp],
+              max_rounds: Optional[int] = None) -> List[StructResult]:
+        """Execute one batch of logical ops; losers retry next round.
+
+        Ops that hit a full (or frozen mid-split) leaf trigger the split
+        protocol between rounds and recompile against the grown tree.
+        """
+        max_rounds = 2 * len(ops) + 4 if max_rounds is None else max_rounds
+        results: List[Optional[StructResult]] = [None] * len(ops)
+        pending = list(range(len(ops)))
+        self.last_history = []
+        rounds = 0
+        split_budget = 2 * self.n_regions + 4
+        while pending and rounds < max_rounds:
+            snap = self.snapshot()
+            batch_ops: List[MwCASOp] = []
+            owners: List[int] = []
+            needs: Dict[int, List[int]] = {}
+            for idx in pending:
+                compiled = self.compile_op(ops[idx], snap)
+                if isinstance(compiled, StructResult):
+                    compiled.rounds = rounds
+                    results[idx] = compiled
+                elif isinstance(compiled, _NeedsSplit):
+                    needs.setdefault(compiled.leaf_base, []).append(idx)
+                else:
+                    batch_ops.append(compiled)
+                    owners.append(idx)
+            if needs:
+                # grow first, then recompile EVERYone against the new
+                # tree shape (ops compiled above would mostly lose their
+                # round anyway: the split freezes their leaf's meta)
+                for leaf_base, idxs in needs.items():
+                    grew = split_budget > 0 and self._split_leaf(leaf_base)
+                    if grew:
+                        split_budget -= 1
+                    else:
+                        for idx in idxs:
+                            results[idx] = StructResult(ops[idx], FULL,
+                                                        rounds=rounds)
+                pending = [i for i in pending if results[i] is None]
+                continue
+            if not batch_ops:
+                pending = []
+                break
+            rounds += 1
+            self.rounds_run += 1
+            verdicts = self.backend.execute(batch_ops)
+            success = np.asarray([r.success for r in verdicts])
+            self.last_history.append(
+                RoundTrace(ops=batch_ops, owners=owners, success=success))
+            self.mwcas_submitted += len(batch_ops)
+            self.mwcas_won += int(success.sum())
+            still: List[int] = []
+            for pos, idx in enumerate(owners):
+                if success[pos]:
+                    results[idx] = StructResult(ops[idx], OK, rounds=rounds)
+                else:
+                    still.append(idx)
+            pending = still
+        for idx in pending:
+            results[idx] = StructResult(ops[idx], EXHAUSTED, rounds=rounds)
+        assert all(r is not None for r in results)
+        return results               # type: ignore[return-value]
+
+    # -- integrity -------------------------------------------------------------
+    def check_integrity(self, snap: Optional[np.ndarray] = None
+                        ) -> Dict[int, int]:
+        """Assert the multi-node invariants; return the live items.
+
+        Checked (each is an atomicity consequence of the protocol —
+        violating any means a torn MwCAS, which must never happen):
+
+        - no half-written root entry: entries below the count are fully
+          populated, the append position is all-zero or a complete
+          pre-entry, and nothing exists beyond it;
+        - no torn leaf image: key and value words below the arrival
+          count are populated together, words beyond it are zero;
+        - routing: every live key sits in the exact leaf the separators
+          route it to, and no key is live in two leaves.
+        """
+        snap = self.snapshot() if snap is None else snap
+        m = int(snap[self.meta_addr - self.base])
+        n = m & COUNT_MASK
+        if m & FROZEN_BIT:
+            raise TornStructure("root meta has FROZEN_BIT set")
+        if n > self.root_cap:
+            raise TornStructure(f"root count {n} > capacity {self.root_cap}")
+        if int(snap[self.ptr0_addr - self.base]) == 0:
+            if n:
+                raise TornStructure("root entries without a leftmost child")
+            return {}                        # pre-bootstrap empty tree
+        for i in range(n):
+            if not self._w(snap, self.sep_addr(i)) or \
+                    not self._w(snap, self.child_addr(i)):
+                raise TornStructure(f"root entry {i} below count is torn")
+        for i in range(n, self.root_cap):
+            s = self._w(snap, self.sep_addr(i))
+            c = self._w(snap, self.child_addr(i))
+            if i == n:
+                if bool(s) != bool(c):
+                    raise TornStructure(
+                        f"half-written pre-entry at append position {n}: "
+                        f"sep={s} child={c}")
+            elif s or c:
+                raise TornStructure(
+                    f"root entry {i} beyond append position {n} is claimed")
+        entries = self._entries(snap)
+        seps = [sep for sep, _c, _a in entries]
+        if len(set(seps)) != len(seps):
+            raise TornStructure(f"duplicate separators {seps}")
+        bases = [int(snap[self.ptr0_addr - self.base])] + \
+            [child for _s, child, _a in entries]
+        lows = [None] + seps
+        highs = seps + [None]
+        items: Dict[int, int] = {}
+        for lb, lo, hi in zip(bases, lows, highs):
+            lm = self._w(snap, lb)
+            cnt = lm & COUNT_MASK
+            if cnt > self.leaf_cap:
+                raise TornStructure(f"leaf@{lb} count {cnt} > capacity")
+            for i in range(self.leaf_cap):
+                k = self._w(snap, lb + 1 + i)
+                v = self._w(snap, lb + 1 + self.leaf_cap + i)
+                if i < cnt:
+                    if k == 0 or v == 0:
+                        raise TornStructure(
+                            f"leaf@{lb} slot {i}: torn pair key={k} val={v}")
+                    if v != LEAF_DEAD:
+                        if k in items:
+                            raise TornStructure(
+                                f"key {k} live in two leaves")
+                        if (lo is not None and k < lo) or \
+                                (hi is not None and k >= hi):
+                            raise TornStructure(
+                                f"leaf@{lb} holds misrouted key {k} "
+                                f"(range [{lo}, {hi}))")
+                        items[k] = v
+                elif k or v:
+                    raise TornStructure(
+                        f"leaf@{lb} ghost words beyond count {cnt}")
+        return items

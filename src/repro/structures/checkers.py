@@ -17,6 +17,16 @@ no lost committed effect*:
   paper's recovery invariant; on top we assert the *structure* reading —
   all words of one op move together (no torn 2-word insert at the
   micro-op granularity either).
+- **Tree sweep** (:func:`check_tree_crash_sweep`): the durable sweep
+  lifted to the multi-node :class:`repro.structures.BzTreeIndex` —
+  crashing at every persist point *through a leaf split* must leave
+  either the pre-split or the fully-linked post-split tree (DESIGN.md
+  Sec. 7), never a torn node image or a half-installed parent entry.
+
+Both durable sweeps also exercise WAL hygiene in their teardown: after
+each recovery check the COMPLETED descriptor records are pruned
+(:meth:`DurableBackend.prune_completed`) and a second crash/recover
+cycle must reproduce the identical structure state.
 """
 from __future__ import annotations
 
@@ -50,6 +60,60 @@ def replay_effects(ops_with_status: Iterable[Tuple[KVOp, str]]
     return model
 
 
+def _durable_crash_sweep(kvops: Sequence[KVOp], root, attach, *,
+                         committer: str, max_crash_points: int,
+                         what: str) -> int:
+    """The shared sweep engine: ``attach(backend)`` builds/attaches the
+    structure under test (it may itself persist — a crashing bootstrap
+    is part of the sweep) and must expose ``apply`` +
+    ``check_integrity``."""
+    import pathlib
+    root = pathlib.Path(root)
+    for crash_at in range(max_crash_points + 1):
+        pool = PMemPool(root / f"crash{crash_at}",
+                        crash_after_persists=crash_at)
+        backend = DurableBackend(pool=pool, committer=committer)
+        committed: List[Tuple[KVOp, str]] = []
+        inflight: Optional[KVOp] = None
+        crashed = False
+        struct = None
+        try:
+            struct = attach(backend)
+        except SimulatedCrash:
+            crashed = True
+        if struct is not None:
+            for op in kvops:
+                try:
+                    (res,) = struct.apply([op])
+                except SimulatedCrash:
+                    inflight = op
+                    crashed = True
+                    break
+                committed.append((op, res.status))
+        # crash (drop unpersisted writes), reopen, recover, re-attach
+        recovered = backend.crash()
+        items = attach(recovered).check_integrity()   # nothing torn
+        base = replay_effects(committed)
+        acceptable = [base]
+        if inflight is not None:
+            acceptable.append(replay_effects(committed + [(inflight, OK)]))
+        if items not in acceptable:
+            raise CrashCheckError(
+                f"crash_at={crash_at}: recovered {what} {items}, expected "
+                f"one of {acceptable} (committed={len(committed)} ops, "
+                f"inflight={inflight})")
+        # teardown WAL hygiene: pruning spent descriptors must not
+        # change what a further crash/recover cycle reconstructs
+        recovered.prune_completed()
+        if attach(recovered.crash()).check_integrity() != items:
+            raise CrashCheckError(
+                f"crash_at={crash_at}: prune_completed changed recovery")
+        if not crashed:
+            return crash_at
+    raise CrashCheckError(
+        f"{what} sweep never completed within {max_crash_points} persists")
+
+
 def check_durable_crash_sweep(kvops: Sequence[KVOp], n_buckets: int,
                               root, *, committer: str = "wal",
                               max_crash_points: int = 400) -> int:
@@ -59,41 +123,36 @@ def check_durable_crash_sweep(kvops: Sequence[KVOp], n_buckets: int,
     run).  Raises :class:`CrashCheckError` (or
     :class:`repro.structures.TornStructure`) on any torn or lost state.
     """
-    import pathlib
-    root = pathlib.Path(root)
-    for crash_at in range(max_crash_points + 1):
-        pool = PMemPool(root / f"crash{crash_at}",
-                        crash_after_persists=crash_at)
-        backend = DurableBackend(pool=pool, committer=committer)
-        hmap = HashMap(backend, n_buckets)
-        committed: List[Tuple[KVOp, str]] = []
-        inflight: Optional[KVOp] = None
-        crashed = False
-        for op in kvops:
-            try:
-                (res,) = hmap.apply([op])
-            except SimulatedCrash:
-                inflight = op
-                crashed = True
-                break
-            committed.append((op, res.status))
-        # crash (drop unpersisted writes), reopen, recover, re-attach
-        recovered = backend.crash()
-        hmap2 = HashMap(recovered, n_buckets)
-        items = hmap2.check_integrity()          # no torn bucket pair
-        base = replay_effects(committed)
-        acceptable = [base]
-        if inflight is not None:
-            acceptable.append(replay_effects(committed + [(inflight, OK)]))
-        if items not in acceptable:
-            raise CrashCheckError(
-                f"crash_at={crash_at}: recovered {items}, expected one of "
-                f"{acceptable} (committed={len(committed)} ops, "
-                f"inflight={inflight})")
-        if not crashed:
-            return crash_at
-    raise CrashCheckError(
-        f"sweep never completed within {max_crash_points} persists")
+    return _durable_crash_sweep(
+        kvops, root, lambda backend: HashMap(backend, n_buckets),
+        committer=committer, max_crash_points=max_crash_points,
+        what="map")
+
+
+def check_tree_crash_sweep(kvops: Sequence[KVOp], root, *,
+                           leaf_cap: int = 2, root_cap: int = 4,
+                           n_regions: int = 4, committer: str = "wal",
+                           max_crash_points: int = 1200) -> int:
+    """Crash-at-every-persist sweep over a multi-node tree workload.
+
+    The workload is expected to drive :class:`BzTreeIndex` through at
+    least one leaf split (size it so a leaf overflows), so the sweep
+    crosses every persist of freeze, the wide half-materialization and
+    the 2-word parent install.  After every crash + recovery the
+    re-attached tree must pass :meth:`BzTreeIndex.check_integrity` (no
+    torn node, no half-installed parent entry — i.e. the tree is the
+    pre-split or the fully-linked post-split one) and hold exactly the
+    effects the client saw commit, plus at most the one in-flight op.
+    Returns the number of crash points swept.
+    """
+    from .bztree_index import BzTreeIndex
+    return _durable_crash_sweep(
+        kvops, root,
+        lambda backend: BzTreeIndex(backend, leaf_cap=leaf_cap,
+                                    root_cap=root_cap,
+                                    n_regions=n_regions),
+        committer=committer, max_crash_points=max_crash_points,
+        what="tree")
 
 
 def check_sim_crash_sweep(ops: Sequence[MwCASOp], *,

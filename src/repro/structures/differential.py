@@ -61,13 +61,25 @@ def winner_blocking_verdicts(ops: Sequence[MwCASOp]) -> np.ndarray:
 def shadow_batch(ops: Sequence[MwCASOp]) -> tuple:
     """Map a round onto the simulator's vocabulary: compress the round's
     addresses to 0..n-1 and turn every op into an increment (0 -> 1)
-    over its compressed address set.  Returns (n_shadow_words, ops)."""
+    over its compressed address set.  Returns (n_shadow_words, ops).
+
+    Mixed-width rounds (the tree batches 3-word inserts next to 2-word
+    updates) are padded to one uniform width with FRESH private words —
+    the simulator requires a uniform k per batch, and a private word is
+    invisible to the conflict graph, so verdicts are unchanged.  Padding
+    words are appended above the compressed range, preserving each op's
+    canonical sorted address order."""
     addrs = sorted({a for op in ops for a in op.addrs})
     index = {a: i for i, a in enumerate(addrs)}
-    shadow = [MwCASOp.increment(sorted(index[a] for a in op.addrs),
-                                [0] * op.k)
-              for op in ops]
-    return len(addrs), shadow
+    k_max = max(op.k for op in ops)
+    shadow = []
+    next_pad = len(addrs)
+    for op in ops:
+        compressed = sorted(index[a] for a in op.addrs)
+        pad = list(range(next_pad, next_pad + k_max - op.k))
+        next_pad += len(pad)
+        shadow.append(MwCASOp.increment(compressed + pad, [0] * k_max))
+    return next_pad, shadow
 
 
 @dataclasses.dataclass
@@ -114,22 +126,45 @@ def _replay_rounds_on_sim(history: List[RoundTrace],
     return checked, skipped, matched
 
 
-def run_struct_differential(kvops: Sequence[KVOp], n_buckets: int, *,
+def run_struct_differential(kvops: Sequence[KVOp], n_buckets: int = 0, *,
+                            structure: str = "hashmap",
                             algorithm: Union[str, Algorithm] = OURS,
                             durable_root=None, use_kernel: bool = False,
                             interpret: bool = True,
-                            max_rounds: Optional[int] = None
+                            max_rounds: Optional[int] = None,
+                            leaf_cap: int = 4, root_cap: int = 8,
+                            n_regions: int = 8
                             ) -> StructDifferentialReport:
     """One logical workload on kernel + durable backends, with every
     kernel round shadow-verified on the simulator.  Agreement means:
     identical per-op statuses, identical final live items, identical
-    round counts, and every shadow-checked round's verdicts match."""
+    round counts, and every shadow-checked round's verdicts match.
+
+    ``structure`` selects the structure under test: ``"hashmap"`` (size
+    by ``n_buckets``) or ``"bztree"`` (the multi-node tree, sized by
+    ``leaf_cap`` / ``root_cap`` / ``n_regions``)."""
     kvops = list(kvops)
-    kernel = KernelBackend(n_words=2 * n_buckets, use_kernel=use_kernel,
+    if structure == "hashmap":
+        if n_buckets < 1:
+            raise ValueError("hashmap differential needs n_buckets >= 1")
+        n_words = 2 * n_buckets
+
+        def make(backend):
+            return HashMap(backend, n_buckets)
+    elif structure == "bztree":
+        from .bztree_index import BzTreeIndex
+        n_words = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)
+
+        def make(backend):
+            return BzTreeIndex(backend, leaf_cap=leaf_cap,
+                               root_cap=root_cap, n_regions=n_regions)
+    else:
+        raise ValueError(f"unknown structure {structure!r}; "
+                         "expected 'hashmap' or 'bztree'")
+    kernel = KernelBackend(n_words=n_words, use_kernel=use_kernel,
                            interpret=interpret)
     durable = DurableBackend(durable_root)
-    maps = {"kernel": HashMap(kernel, n_buckets),
-            "durable": HashMap(durable, n_buckets)}
+    maps = {"kernel": make(kernel), "durable": make(durable)}
 
     statuses: Dict[str, List[str]] = {}
     items: Dict[str, Dict[int, int]] = {}

@@ -7,9 +7,15 @@ Zipfian-popularity machinery the simulator benchmark uses
 (``generate_ops`` / paper Eq. 1), applied to keys instead of raw words.
 
 Standard mixes are provided as :data:`YCSB_A` (50/50 read/update),
-:data:`YCSB_B` (95/5), :data:`YCSB_C` (read-only) and an insert-heavy
-:data:`LOAD` phase, each a :class:`WorkloadSpec` template to fork with
-``dataclasses.replace``.
+:data:`YCSB_B` (95/5), :data:`YCSB_C` (read-only), :data:`YCSB_E`
+(scan-heavy — the range-index workload the multi-node tree exists for)
+and an insert-heavy :data:`LOAD` phase, each a :class:`WorkloadSpec`
+template to fork with ``dataclasses.replace``.
+
+The compiled stream is structure-agnostic: the same :class:`KVOp` list
+drives :class:`repro.structures.HashMap` and
+:class:`repro.structures.BzTreeIndex` (``run_workload`` accepts either —
+anything with the ``apply``/counter surface).
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ import numpy as np
 
 from repro.pmwcas import MwCASOp, ops_to_arrays, zipf_probs
 
-from .hashmap import DELETE, HashMap, INSERT, KVOp, READ, SCAN, UPDATE
+from .hashmap import DELETE, INSERT, KVOp, READ, SCAN, UPDATE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +56,8 @@ class WorkloadSpec:
 YCSB_A = WorkloadSpec(read=0.5, update=0.5, insert=0.0, delete=0.0)
 YCSB_B = WorkloadSpec(read=0.95, update=0.05, insert=0.0, delete=0.0)
 YCSB_C = WorkloadSpec(read=1.0, update=0.0, insert=0.0, delete=0.0)
+YCSB_E = WorkloadSpec(read=0.0, update=0.0, insert=0.05, delete=0.0,
+                      scan=0.95)
 LOAD = WorkloadSpec(read=0.0, update=0.0, insert=1.0, delete=0.0)
 
 
@@ -102,32 +110,37 @@ class WorkloadStats:
         return self.mwcas_submitted / self.n_ops if self.n_ops else 0.0
 
 
-def run_workload(hmap: HashMap, spec: WorkloadSpec,
+def run_workload(struct, spec: WorkloadSpec,
                  ops: Optional[Sequence[KVOp]] = None) -> WorkloadStats:
-    """Drive a compiled workload through ``hmap`` in ``spec.batch``-sized
-    rounds of the lock-free retry loop."""
+    """Drive a compiled workload through a structure in ``spec.batch``-
+    sized rounds of the lock-free retry loop.  ``struct`` is any
+    structure with the HashMap execution surface (``apply`` +
+    ``rounds_run``/``mwcas_*`` counters) — :class:`HashMap` or
+    :class:`BzTreeIndex`."""
     ops = compile_workload(spec) if ops is None else list(ops)
     stats = WorkloadStats(n_ops=len(ops))
-    r0, s0, w0 = hmap.rounds_run, hmap.mwcas_submitted, hmap.mwcas_won
+    r0, s0, w0 = struct.rounds_run, struct.mwcas_submitted, struct.mwcas_won
     for chunk in batches(ops, spec.batch):
-        for res in hmap.apply(chunk):
+        for res in struct.apply(chunk):
             stats.by_status[res.status] = \
                 stats.by_status.get(res.status, 0) + 1
-    stats.rounds = hmap.rounds_run - r0
-    stats.mwcas_submitted = hmap.mwcas_submitted - s0
-    stats.mwcas_won = hmap.mwcas_won - w0
+    stats.rounds = struct.rounds_run - r0
+    stats.mwcas_submitted = struct.mwcas_submitted - s0
+    stats.mwcas_won = struct.mwcas_won - w0
     return stats
 
 
-def kernel_round_arrays(hmap: HashMap, ops: Sequence[KVOp]
+def kernel_round_arrays(struct, ops: Sequence[KVOp]
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                    List[MwCASOp]]:
     """Compile one round against the current snapshot and return its
     Pallas wire form ``(addr int32[B,K] with -1 padding, exp, des)`` —
     the hand-off point between the structure layer and the batched
-    kernel."""
-    snap = hmap.snapshot()
-    compiled = [hmap.compile_op(op, snap) for op in ops]
+    kernel.  Works for any snapshot-compiling structure (``HashMap``,
+    ``BzTreeIndex``); immediate results and split requests compile to no
+    CAS and are dropped from the wire form."""
+    snap = struct.snapshot()
+    compiled = [struct.compile_op(op, snap) for op in ops]
     mwcas = [c for c in compiled if isinstance(c, MwCASOp)]
     if not mwcas:
         raise ValueError("round compiles to no CAS work (all reads?)")

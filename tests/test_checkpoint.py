@@ -134,6 +134,43 @@ def test_crash_at_every_persist_recovers(tmp_path, committer_cls):
     assert total_persists is not None, "sweep never reached completion"
 
 
+@pytest.mark.parametrize("committer_cls", [Committer, MarkerCommitter])
+def test_prune_completed_removes_spent_wal_records(tmp_path, committer_cls):
+    """WAL hygiene: every commit leaves a descriptor under wal/;
+    prune_completed durably removes the spent ones, and recovery over
+    the pruned pool is unaffected (the regression this guards)."""
+    pool = PMemPool(tmp_path)
+    c = committer_cls(pool)
+    for i, name in enumerate(["a", "b", "cc"]):
+        assert c.commit(f"c{i}", [(name, 0, 1)], {name: b"v1"})
+    assert len(pool.listdir("wal")) == 3
+    assert c.prune_completed() == 3
+    assert pool.listdir("wal") == []
+    # a reopened pool (crash analogue: only durable state) recovers the
+    # identical versions — prune's deletes are durable, slots suffice
+    c2 = committer_cls(PMemPool(tmp_path))
+    assert c2.recover() == {"a": 1, "b": 1, "cc": 1}
+
+
+def test_prune_completed_keeps_inflight_descriptors(tmp_path):
+    """A descriptor still referenced by a slot (mid-commit crash shape)
+    must survive pruning — recovery needs it to roll the slot forward."""
+    pool = PMemPool(tmp_path)
+    c = Committer(pool)
+    assert c.commit("c1", [("a", 0, 1)], {"a": b"v1"})
+    # hand-build an in-flight commit: descriptor persisted, slot reserved
+    pool.write_record("wal/c2.json", {"id": "c2", "state": "SUCCEEDED",
+                                      "targets": [["a", 1, 2]], "ts": 0.0})
+    pool.write_record("slots/a.json", {"desc": "c2", "expected": 1})
+    assert c.prune_completed() == 1            # only the spent c1 record
+    assert pool.listdir("wal") == ["c2.json"]
+    assert c.slot_version("a") == 2            # resolution still works
+    c.recover()                                # finalizes the slot
+    assert c.prune_completed() == 1            # now c2 is spent too
+    assert pool.listdir("wal") == []
+    assert c.slot_version("a") == 2
+
+
 def test_wal_committer_fewer_persists_than_markers(tmp_path):
     """The paper's claim transferred: dropping per-slot markers saves
     2 persists per slot."""

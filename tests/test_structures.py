@@ -2,25 +2,38 @@
 on the public ``repro.pmwcas`` surface, exercised on the kernel and
 durable backends, shadow-verified on the simulator, and crash-swept on
 both persistent substrates."""
+import dataclasses
+
 import numpy as np
 import pytest
 
-from repro.pmwcas import DurableBackend, KernelBackend, MwCASOp
-from repro.structures import (DELETE, EXISTS, FULL, FreeListAllocator,
-                              DoubleFree, HashMap, INSERT, KVOp, NODE_FROZEN,
+from repro.pmwcas import (DurableBackend, KernelBackend, MwCASOp,
+                          ops_from_arrays, zipf_probs)
+from repro.structures import (BzTreeIndex, DELETE, EXISTS, FULL,
+                              FreeListAllocator, DoubleFree, HashMap, INSERT,
+                              KVOp, LEAF_DEAD, LeafNode, NODE_FROZEN,
                               NODE_FULL, NODE_OK, NOT_FOUND, OK, READ, SCAN,
                               SortedNode, SplitError, TOMBSTONE, TornStructure,
-                              UPDATE, WorkloadSpec, check_durable_crash_sweep,
-                              check_sim_crash_sweep, compile_workload,
-                              conservative_verdicts, kernel_round_arrays,
-                              load_phase, read_pointer, run_struct_differential,
-                              run_workload, swap_pointer,
+                              UPDATE, WorkloadSpec, YCSB_A, YCSB_B, YCSB_C,
+                              YCSB_E, check_durable_crash_sweep,
+                              check_sim_crash_sweep, check_tree_crash_sweep,
+                              compile_workload, conservative_verdicts,
+                              kernel_round_arrays, load_phase, read_pointer,
+                              run_struct_differential, run_workload,
+                              shadow_batch, swap_pointer,
                               winner_blocking_verdicts)
 
 
 def oracle_map(n_buckets=16, n_words=None, **kw):
     return HashMap(KernelBackend(n_words=n_words or 2 * n_buckets,
                                  use_kernel=False, **kw), n_buckets)
+
+
+def oracle_tree(leaf_cap=4, root_cap=4, n_regions=6, **kw):
+    n = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)
+    return BzTreeIndex(KernelBackend(n_words=n, use_kernel=False, **kw),
+                       leaf_cap=leaf_cap, root_cap=root_cap,
+                       n_regions=n_regions)
 
 
 # ---------------------------------------------------------------------------
@@ -399,3 +412,294 @@ def test_kernel_round_arrays_wire_form():
     assert addr.shape == (2, 2)                # the READ compiles to no CAS
     assert addr.dtype == np.int32 and (addr >= 0).all()
     assert (des[:, 1] == [30, 50]).all()       # value words carried
+
+
+# ---------------------------------------------------------------------------
+# workload compiler: edge cases
+# ---------------------------------------------------------------------------
+
+def test_zipf_alpha_zero_is_uniform():
+    p = zipf_probs(16, 0.0)
+    assert p.shape == (16,)
+    assert np.allclose(p, 1 / 16) and np.isclose(p.sum(), 1.0)
+
+
+def test_zipf_single_key_universe():
+    assert np.allclose(zipf_probs(1, 0.0), [1.0])
+    assert np.allclose(zipf_probs(1, 1.2), [1.0])
+
+
+def test_workload_single_key_universe_runs():
+    """n_keys=1 degenerates every rank to the same key; the compiler and
+    the retry loop must both survive it (alpha irrelevant)."""
+    spec = WorkloadSpec(n_ops=12, n_keys=1, read=0.25, update=0.25,
+                        insert=0.25, delete=0.25, seed=3, batch=4)
+    ops = compile_workload(spec)
+    assert {op.key for op in ops} == {1}
+    h = oracle_map(n_buckets=2)
+    stats = run_workload(h, spec, ops=ops)
+    assert sum(stats.by_status.values()) == 12
+    h.check_integrity()
+
+
+def test_scan_heavy_mix_round_trips_kernel_arrays():
+    """A YCSB-E (scan-heavy) round still produces a faithful kernel wire
+    form: scans compile to no CAS, the inserts round-trip exactly
+    through ops_to_arrays/ops_from_arrays."""
+    spec = dataclasses.replace(YCSB_E, n_ops=32, n_keys=8, seed=5)
+    ops = compile_workload(spec)
+    kinds = {op.kind for op in ops}
+    assert SCAN in kinds and INSERT in kinds
+    tree = oracle_tree()
+    addr, exp, des, mwcas = kernel_round_arrays(tree, ops)
+    assert addr.shape[0] == len(mwcas) < len(ops)   # scans dropped
+    assert all(op.k == 3 for op in mwcas)           # tree inserts: 3-word
+    assert [op.targets for op in ops_from_arrays(addr, exp, des)] == \
+        [op.targets for op in mwcas]
+
+
+def test_shadow_batch_pads_mixed_widths():
+    """Tree rounds mix 2- and 3-word ops; the shadow pads every op to
+    one uniform width with private fresh words, leaving the conflict
+    graph (and hence the verdicts) unchanged."""
+    ops = [MwCASOp([(10, 0, 1), (11, 0, 2), (12, 0, 3)]),   # 3-word
+           MwCASOp([(10, 0, 0), (13, 5, 6)]),               # shares 10
+           MwCASOp([(14, 1, 2)])]                           # independent
+    n, shadow = shadow_batch(ops)
+    assert {op.k for op in shadow} == {3}                   # uniform now
+    assert all(op.is_increment() for op in shadow)
+    assert all(list(op.addrs) == sorted(op.addrs) for op in shadow)
+    assert n == 5 + 3                                       # 5 real + 3 pad
+    cons = conservative_verdicts(shadow)
+    assert cons.tolist() == conservative_verdicts(ops).tolist()
+    assert winner_blocking_verdicts(shadow).tolist() == \
+        winner_blocking_verdicts(ops).tolist()
+
+
+# ---------------------------------------------------------------------------
+# multi-node BzTree index (the tentpole)
+# ---------------------------------------------------------------------------
+
+def test_tree_insert_read_update_delete():
+    t = oracle_tree()
+    assert all(t.apply([KVOp(INSERT, 5, 100), KVOp(INSERT, 7, 200)]))
+    (r,) = t.apply([KVOp(READ, 5)])
+    assert r.status == OK and r.value == 100
+    assert t.apply([KVOp(INSERT, 5, 1)])[0].status == EXISTS
+    (r,) = t.apply([KVOp(UPDATE, 5, 111)])
+    assert r.status == OK and t.lookup(5) == 111
+    (r,) = t.apply([KVOp(DELETE, 7)])
+    assert r.status == OK
+    assert t.apply([KVOp(READ, 7)])[0].status == NOT_FOUND
+    assert t.apply([KVOp(UPDATE, 7, 1)])[0].status == NOT_FOUND
+    assert t.check_integrity() == {5: 111}
+
+
+def test_tree_insert_is_three_words_update_two():
+    """The leaf op shapes: insert = (meta bump, key slot, value slot) in
+    ONE 3-word MwCAS; update/delete = (meta guard, value word)."""
+    t = oracle_tree()
+    snap = t.snapshot()
+    ins = t.compile_op(KVOp(INSERT, 5, 100), snap)
+    assert isinstance(ins, MwCASOp) and ins.k == 3
+    assert ins.targets[0].desired == ins.targets[0].expected + 1
+    t.apply([KVOp(INSERT, 5, 100)])
+    snap = t.snapshot()
+    upd = t.compile_op(KVOp(UPDATE, 5, 7), snap)
+    dele = t.compile_op(KVOp(DELETE, 5), snap)
+    assert upd.k == 2 and upd.targets[0].expected == upd.targets[0].desired
+    assert dele.k == 2 and dele.targets[1].desired == LEAF_DEAD
+
+
+def test_tree_split_preserves_items_and_routing():
+    t = oracle_tree(leaf_cap=4, root_cap=4, n_regions=6)
+    keys = (50, 20, 80, 10, 60, 30, 70, 40, 90)
+    res = t.apply([KVOp(INSERT, k, k) for k in keys])
+    assert all(r.status == OK for r in res)
+    assert t.splits >= 1 and t.root_count() >= 1
+    assert t.check_integrity() == {k: k for k in keys}
+    assert len(t.leaf_bases()) == t.root_count() + 1
+    # every key routes to the leaf that holds it, and reads agree
+    for k in keys:
+        assert t.lookup(k) == k
+    (r,) = t.apply([KVOp(SCAN, 50)])
+    assert r.value == len([k for k in keys if k >= 50])
+
+
+def test_tree_split_is_exactly_two_mwcas_rounds():
+    """Split propagation = the wide materialize+pre-entry op, then the
+    2-word install — with only the 1-word freeze in front (DESIGN §7)."""
+    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=4)
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
+    executed = []
+    real_execute = t.backend.execute
+    t.backend.execute = lambda ops: (executed.append(list(ops)),
+                                     real_execute(ops))[1]
+    (r,) = t.apply([KVOp(INSERT, 9, 90)])      # forces the split
+    assert r.status == OK and t.splits == 1
+    widths = [[op.k for op in batch] for batch in executed]
+    # freeze (1-word), round 1 (ONE wide op: both 1-key half images of
+    # meta+key+value plus the 2-word pre-entry), round 2 (one 2-word
+    # install), then the retried insert (3-word)
+    assert widths == [[1], [2 * 3 + 2], [2], [3]]
+
+
+def test_tree_pre_entry_invisible_until_install():
+    """Round 1 pre-publishes the parent entry beyond the count: readers
+    (and the integrity checker) still see the pre-split tree; the 2-word
+    install is the linearization point."""
+    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=4)
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
+    leaf = LeafNode(t.backend, t.leaf_bases()[0], 2)
+    (grant,) = t.allocator.alloc([1])
+    pair = t.allocator.region(grant[0])
+    n = t.root_count()
+    sep = leaf.keys()[1]
+    leaf.split(pair, pair + t.leaf_words,
+               extra_targets=[(t.sep_addr(n), 0, sep),
+                              (t.child_addr(n), 0, pair + t.leaf_words)])
+    assert t.root_count() == 0                 # entry not visible
+    assert t.check_integrity() == {3: 30, 5: 50}   # pre-split tree intact
+    assert t._install(n, sep, pair + t.leaf_words)
+    assert t.root_count() == 1                 # now fully linked
+    assert t.check_integrity() == {3: 30, 5: 50}
+    assert t.leaf_bases() == [pair, pair + t.leaf_words]
+
+
+def test_tree_completes_pending_split_after_crash(tmp_path):
+    """Crash between round 1 and the install leaves a frozen leaf and an
+    invisible pre-entry; the next mutation completes the split from
+    persisted state alone (left half derived from the pair region)."""
+    db = DurableBackend(tmp_path)
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    t = BzTreeIndex(db, **kw)
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
+    leaf = LeafNode(db, t.leaf_bases()[0], 2)
+    (grant,) = t.allocator.alloc([1])
+    pair = t.allocator.region(grant[0])
+    sep = leaf.keys()[1]
+    leaf.split(pair, pair + t.leaf_words,
+               extra_targets=[(t.sep_addr(0), 0, sep),
+                              (t.child_addr(0), 0, pair + t.leaf_words)])
+    t2 = BzTreeIndex(db.crash(), **kw)         # attach over recovery
+    assert t2.check_integrity() == {3: 30, 5: 50}
+    (r,) = t2.apply([KVOp(INSERT, 9, 90)])     # lands on the frozen leaf
+    assert r.status == OK
+    assert t2.root_count() == 1
+    assert t2.check_integrity() == {3: 30, 5: 50, 9: 90}
+
+
+def test_tree_delete_revive_and_consolidation():
+    t = oracle_tree(leaf_cap=2, root_cap=2, n_regions=5)
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
+    t.apply([KVOp(DELETE, 5)])
+    # re-insert of a dead key revives the slot in place (no count bump)
+    (r,) = t.apply([KVOp(INSERT, 5, 55)])
+    assert r.status == OK and t.check_integrity() == {3: 30, 5: 55}
+    assert len(t.leaf_bases()) == 1            # no split happened
+    # a full leaf with < 2 live keys consolidates instead of splitting
+    t.apply([KVOp(DELETE, 5), KVOp(DELETE, 3)])
+    (r,) = t.apply([KVOp(INSERT, 7, 70)])
+    assert r.status == OK
+    assert t.consolidations == 1 and t.splits == 0
+    assert t.check_integrity() == {7: 70}
+
+
+def test_tree_region_exhaustion_does_not_wedge_leaf():
+    """Regression: a failed split for lack of regions must not leave the
+    leaf frozen — updates/deletes of its live keys keep working."""
+    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=1)   # bootstrap
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])    # eats region 0
+    (r,) = t.apply([KVOp(INSERT, 9, 90)])
+    assert r.status == FULL                    # nowhere to split into
+    (r,) = t.apply([KVOp(UPDATE, 5, 55)])      # live keys stay mutable
+    assert r.status == OK and t.lookup(5) == 55
+    (r,) = t.apply([KVOp(DELETE, 3)])
+    assert r.status == OK
+    assert t.check_integrity() == {5: 55}
+
+
+def test_tree_root_full_reports_full():
+    t = oracle_tree(leaf_cap=2, root_cap=1, n_regions=8)
+    res = t.apply([KVOp(INSERT, k, k) for k in (10, 20, 30, 40, 50)])
+    assert [r.status for r in res].count(OK) >= 3
+    assert FULL in {r.status for r in res}     # the tree can't grow more
+    items = t.check_integrity()
+    assert all(v == k for k, v in items.items())
+
+
+def test_tree_on_real_pallas_kernel():
+    """One splitting workload through the actual Pallas kernel path."""
+    n = BzTreeIndex.words_needed(2, 4, 4)
+    t = BzTreeIndex(KernelBackend(n_words=n, use_kernel=True),
+                    leaf_cap=2, root_cap=4, n_regions=4)
+    res = t.apply([KVOp(INSERT, k, 10 * k) for k in (5, 3, 9)])
+    assert all(r.status == OK for r in res) and t.splits == 1
+    assert t.check_integrity() == {5: 50, 3: 30, 9: 90}
+
+
+def test_tree_durable_crash_recover_attach(tmp_path):
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    db = DurableBackend(tmp_path)
+    t = BzTreeIndex(db, **kw)
+    assert all(t.apply([KVOp(INSERT, k, k) for k in (5, 3, 9, 7)]))
+    assert t.splits >= 1
+    before = t.check_integrity()
+    t2 = BzTreeIndex(db.crash(), **kw)
+    assert t2.check_integrity() == before == {3: 3, 5: 5, 7: 7, 9: 9}
+
+
+def test_tree_crash_sweep_through_split(tmp_path):
+    """Acceptance: crash at EVERY persist point of a workload that
+    drives a leaf split — recovery always shows the pre-split or the
+    fully-linked post-split tree, never a torn one."""
+    ops = [KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30), KVOp(INSERT, 9, 90),
+           KVOp(UPDATE, 5, 55), KVOp(DELETE, 3)]
+    n = check_tree_crash_sweep(ops, tmp_path, leaf_cap=2, root_cap=4,
+                               n_regions=4)
+    assert n > 40                              # the sweep crossed the split
+
+
+def test_tree_sim_shadow_crash_sweep():
+    """A compiled tree round (mixed widths) shadows into the
+    cycle-accurate simulator crash sweep via the padded shadow batch."""
+    t = oracle_tree(leaf_cap=4, root_cap=4, n_regions=6)
+    t.apply([KVOp(INSERT, k, k) for k in (10, 20, 30)])
+    snap = t.snapshot()
+    batch = [t.compile_op(op, snap)
+             for op in [KVOp(INSERT, 40, 4), KVOp(UPDATE, 10, 1),
+                        KVOp(DELETE, 20)]]
+    assert {op.k for op in batch} == {2, 3}    # genuinely mixed widths
+    _, shadow = shadow_batch(batch)
+    checked = check_sim_crash_sweep(shadow, n_steps=1500)
+    assert checked >= 10
+
+
+@pytest.mark.parametrize("mix", [YCSB_A, YCSB_B, YCSB_C, YCSB_E])
+def test_tree_ycsb_differential(tmp_path, mix):
+    """Acceptance: YCSB A/B/C plus the scan mix run against BzTreeIndex
+    on kernel AND durable backends in lockstep, every client round
+    shadow-verified on the simulator."""
+    spec = dataclasses.replace(mix, n_ops=20, n_keys=10, seed=13, batch=4)
+    ops = load_phase(spec) + compile_workload(spec)
+    rep = run_struct_differential(ops, structure="bztree", leaf_cap=2,
+                                  root_cap=8, n_regions=10,
+                                  durable_root=tmp_path)
+    assert rep.agree, rep.summary()
+    assert rep.sim_rounds_checked >= 1
+    assert rep.items["kernel"] == rep.items["durable"]
+
+
+def test_tree_ycsb_workload_stats():
+    """The generalized run_workload drives the tree end to end and the
+    split counters surface in the stats vocabulary."""
+    spec = WorkloadSpec(n_ops=48, n_keys=24, read=0.3, update=0.3,
+                        insert=0.3, delete=0.05, scan=0.05, seed=7,
+                        batch=8, alpha=0.9)
+    t = oracle_tree(leaf_cap=4, root_cap=8, n_regions=10)
+    t.apply(load_phase(spec))
+    stats = run_workload(t, spec)
+    assert stats.n_ops == 48 == sum(stats.by_status.values())
+    assert stats.by_status.get(OK, 0) > 0
+    assert t.splits >= 1
+    t.check_integrity()
