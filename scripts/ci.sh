@@ -41,6 +41,8 @@ python -m benchmarks.run --quick --only diff --json-dir "$BENCH_DIR"
 python -m benchmarks.run --quick --only ckpt --json-dir "$BENCH_DIR"
 python -m benchmarks.run --quick --only structs --json-dir "$BENCH_DIR"
 python -m benchmarks.run --quick --only tree --json-dir "$BENCH_DIR"
+# the service section asserts S=4 strictly beats S=1 on round throughput
+python -m benchmarks.run --quick --only service --json-dir "$BENCH_DIR"
 
 echo "=== 5. perf trend (>20% ops/s regressions vs previous run) ==="
 # warn-only by default (first run has no baseline); PERF_STRICT=1 gates
@@ -54,5 +56,7 @@ python examples/kv_store.py > /dev/null
 echo "kv_store OK"
 python examples/range_index.py > /dev/null
 echo "range_index OK"
+python examples/kv_service.py > /dev/null
+echo "kv_service OK"
 
 echo "CI PASSED"

@@ -13,6 +13,9 @@ Public surface (import from here or from :mod:`repro.pmwcas`):
   ``BzTreeIndex``, ``FreeListAllocator``), plus the YCSB-style workload
   compiler, structure-level crash checkers and
   ``run_struct_differential``.
+- ``repro.service`` — sharded, batched execution for many-client
+  workloads (``KVService``, ``BatchScheduler``, ``ShardRouter``, the
+  stacked kernel dispatch, cross-shard journal and ``ServiceStats``).
 - checkpoint layer: ``Committer``, ``MarkerCommitter``,
   ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
   ``SimulatedCrash``.
@@ -32,13 +35,18 @@ _CHECKPOINT = ("Committer", "MarkerCommitter", "CheckpointManager",
                "AsyncCheckpointManager", "PMemPool", "SimulatedCrash",
                "data_rel")
 _STRUCTURES = ("HashMap", "KVOp", "StructResult", "SortedNode",
-               "BzTreeIndex", "LeafNode",
-               "FreeListAllocator", "WorkloadSpec", "WorkloadStats",
-               "compile_workload", "run_workload",
+               "BzTreeIndex", "LeafNode", "NeedsSplit",
+               "FreeListAllocator", "OutOfRegions",
+               "WorkloadSpec", "WorkloadStats",
+               "compile_workload", "run_workload", "client_streams",
+               "interleave", "partition_ops",
                "run_struct_differential", "StructDifferentialReport",
                "check_durable_crash_sweep", "check_sim_crash_sweep",
                "check_tree_crash_sweep",
                "TornStructure", "CrashCheckError")
+_SERVICE = ("KVService", "KVFuture", "BatchScheduler", "OpFuture",
+            "ShardRouter", "CROSS_SHARD", "ServiceStats", "ServiceError",
+            "CrossShardJournal", "StackedKernelExecutor")
 _PMWCAS = (
     "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",
     "batch_width", "ops_to_arrays", "ops_from_arrays", "results_from_mask",
@@ -46,6 +54,7 @@ _PMWCAS = (
     "resolve", "ALGORITHMS",
     "Backend", "SimBackend", "KernelBackend", "DurableBackend",
     "UnsupportedBatch",
+    "make_backend", "register_backend", "BACKEND_FACTORIES",
     "SimSession", "SimConfig", "SimResult", "CostModel",
     "run_sim", "run_until", "generate_ops", "generate_schedule",
     "zipf_probs",
@@ -62,12 +71,13 @@ _PMWCAS = (
 _LAZY = {name: "repro.pmwcas" for name in _PMWCAS}
 _LAZY.update({name: "repro.checkpoint" for name in _CHECKPOINT})
 _LAZY.update({name: "repro.structures" for name in _STRUCTURES})
+_LAZY.update({name: "repro.service" for name in _SERVICE})
 
-__all__ = sorted(_LAZY) + ["pmwcas", "structures"]
+__all__ = sorted(_LAZY) + ["pmwcas", "service", "structures"]
 
 
 def __getattr__(name: str) -> Any:
-    if name in ("pmwcas", "structures"):
+    if name in ("pmwcas", "structures", "service"):
         return importlib.import_module(f"repro.{name}")
     try:
         module = _LAZY[name]

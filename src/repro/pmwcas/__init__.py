@@ -32,8 +32,9 @@ from repro.core.model import (ALGORITHMS, CNT_CAS, CNT_CYCLES, CNT_FAILS,
 
 from .algorithms import (Algorithm, ORIGINAL, OURS, OURS_DF, PCAS,
                          STRATEGIES, resolve)
-from .backends import (Backend, DurableBackend, KernelBackend, SimBackend,
-                       UnsupportedBatch)
+from .backends import (BACKEND_FACTORIES, Backend, DurableBackend,
+                       KernelBackend, SimBackend, UnsupportedBatch,
+                       make_backend, register_backend)
 from .descriptor import (Addr, Descriptor, MwCASOp, OpResult, Target,
                          batch_width, ops_from_arrays, ops_to_arrays,
                          results_from_mask)
@@ -92,6 +93,7 @@ __all__ = [
     # backends
     "Backend", "SimBackend", "KernelBackend", "DurableBackend",
     "UnsupportedBatch",
+    "make_backend", "register_backend", "BACKEND_FACTORIES",
     # session + sim surface
     "SimSession", "SimConfig", "SimResult", "CostModel",
     "run_sim", "run_until", "generate_ops", "generate_schedule",

@@ -32,8 +32,8 @@ from __future__ import annotations
 import functools
 import pathlib
 import tempfile
-from typing import (Dict, List, Mapping, Optional, Protocol, Sequence, Union,
-                    runtime_checkable)
+from typing import (Callable, Dict, List, Mapping, Optional, Protocol,
+                    Sequence, Union, runtime_checkable)
 
 import numpy as np
 
@@ -120,6 +120,28 @@ class KernelBackend:
 
     def values(self) -> np.ndarray:
         return np.asarray(self._words)
+
+    # -- sharded-service surface ----------------------------------------------
+    @property
+    def n_words(self) -> int:
+        return int(self._words.shape[0])
+
+    def word_table(self):
+        """The live device word table (jnp uint32[W]).  The sharded
+        service's stacked dispatch reads the tables of several kernel
+        shards, stacks them into one [S, W] array and runs ONE vmapped
+        ``pmwcas_apply`` over all shard rounds."""
+        return self._words
+
+    def set_word_table(self, new) -> None:
+        """Install an updated table (the write-back half of the stacked
+        dispatch).  Must have the same shape/dtype as :meth:`word_table`."""
+        import jax.numpy as jnp
+        new = jnp.asarray(new)
+        if new.shape != self._words.shape:
+            raise ValueError(f"word table shape {new.shape} != "
+                             f"{self._words.shape}")
+        self._words = new
 
 
 # ===========================================================================
@@ -364,3 +386,74 @@ class DurableBackend:
                              committer=self._committer_cls)
         new.recover()
         return new
+
+
+# ===========================================================================
+# Backend factory hooks (the sharded service builds per-shard backends
+# through this registry, so deployments can plug in their own substrate)
+# ===========================================================================
+
+def _make_sim(n_words: Optional[int] = None, **kw) -> SimBackend:
+    if n_words is None:
+        raise ValueError("sim backend needs n_words")
+    return SimBackend(n_words, **kw)
+
+
+def _make_kernel(n_words: Optional[int] = None, **kw) -> KernelBackend:
+    return KernelBackend(n_words=n_words, **kw)
+
+
+def _make_durable(n_words: Optional[int] = None, **kw) -> DurableBackend:
+    # the durable word space is the (unbounded) slot-name namespace, so
+    # n_words is accepted-and-ignored for factory-signature uniformity
+    return DurableBackend(**kw)
+
+
+BACKEND_FACTORIES: Dict[str, Callable[..., Backend]] = {
+    "sim": _make_sim,
+    "kernel": _make_kernel,
+    "durable": _make_durable,
+}
+
+
+def register_backend(name: str, factory: Callable[..., Backend],
+                     replace: bool = False) -> None:
+    """Register a custom backend factory under ``name`` (usable anywhere
+    a backend kind string is accepted, e.g. ``KVService(backend=name)``).
+    The factory must accept ``n_words`` as a keyword (ignore it if the
+    substrate is not array-shaped)."""
+    if name in BACKEND_FACTORIES and not replace:
+        raise ValueError(f"backend kind {name!r} already registered")
+    BACKEND_FACTORIES[name] = factory
+
+
+def make_backend(spec: Union[str, Callable[..., Backend], Backend],
+                 **kw) -> Backend:
+    """Resolve a backend spec into an instance.
+
+    ``spec`` may be a registered kind name (``"sim"`` / ``"kernel"`` /
+    ``"durable"`` / anything added via :func:`register_backend`), a
+    callable factory (called with the keyword arguments), or an existing
+    :class:`Backend` instance (returned as-is; passing construction
+    kwargs alongside an instance is an error).
+    """
+    if isinstance(spec, str):
+        try:
+            factory = BACKEND_FACTORIES[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend kind {spec!r}; registered: "
+                f"{sorted(BACKEND_FACTORIES)}") from None
+        return factory(**kw)
+    # classes pass the runtime Protocol check (their *attributes* exist on
+    # the class object), so treat any type as a factory first
+    if not isinstance(spec, type) and isinstance(spec, Backend):
+        if kw:
+            raise ValueError(
+                f"cannot apply kwargs {sorted(kw)} to an existing "
+                "backend instance")
+        return spec
+    if callable(spec):
+        return spec(**kw)
+    raise TypeError(f"backend spec {spec!r} is not a kind name, factory "
+                    "or Backend")

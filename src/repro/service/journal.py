@@ -1,0 +1,103 @@
+"""Durable decision log for cross-shard MwCAS ops.
+
+A cross-shard op cannot be one backend commit: its targets live in
+different shards' pools.  The service therefore serializes cross-shard
+ops into a global round and makes each one atomic the same way the paper
+makes everything atomic — a persisted descriptor as its own write-ahead
+log, here one level up:
+
+1. validate every target against its shard (reads only, nothing moves);
+2. persist the decision record ``{state: SUCCEEDED, targets}`` — THE
+   durability linearization point of the whole cross-shard op;
+3. apply each shard's sub-op through that shard's own backend (each
+   application is per-shard atomic; a durable shard writes its own WAL
+   record as usual);
+4. mark the record COMPLETED (lazy persist — redo is idempotent).
+
+A crash anywhere leaves either (i) no decision record → nothing moved
+(validation reads don't write), or (ii) a SUCCEEDED record → recovery
+REDOES the op: any shard whose words still hold the expected values gets
+its sub-op re-applied, shards already holding the desired values are
+skipped.  Because the global round is serialized (no other op touches
+those words until the record is COMPLETED), a word can only hold the
+expected or the desired value at redo time — anything else is a torn
+state and raises.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+ST_SUCCEEDED = "SUCCEEDED"
+ST_COMPLETED = "COMPLETED"
+
+# (shard, local addr-or-slot, expected, desired)
+CrossTarget = Tuple[int, object, int, int]
+
+
+def _rel(op_id: str) -> str:
+    return f"xwal/{op_id}.json"
+
+
+class CrossShardJournal:
+    """Decision log over one :class:`repro.PMemPool`.
+
+    The pool should be its own directory (or a dedicated subtree of a
+    shard's pool) — the journal never collides with committer layouts
+    because every record lives under ``xwal/``.
+    """
+
+    def __init__(self, pool):
+        self.pool = pool
+
+    # -- the 2 persists of the protocol ---------------------------------------
+    def decide(self, op_id: str, targets: Sequence[CrossTarget]) -> None:
+        """Persist the SUCCEEDED decision record (linearization point)."""
+        self.pool.write_record(_rel(op_id), {
+            "id": op_id, "state": ST_SUCCEEDED,
+            "targets": [list(t) for t in targets]})
+
+    def complete(self, op_id: str) -> None:
+        """Mark the record spent.  Lazy persist (no durability barrier):
+        losing this write to a crash only means one idempotent redo."""
+        rec = self.pool.read_record(_rel(op_id))
+        if rec is None:
+            return
+        rec["state"] = ST_COMPLETED
+        self.pool.write_record(_rel(op_id), rec, persist=False)
+
+    # -- recovery --------------------------------------------------------------
+    def pending(self) -> List[Dict]:
+        """Decision records whose application may be incomplete."""
+        out = []
+        for fn in self.pool.listdir("xwal"):
+            rec = self.pool.read_record(f"xwal/{fn}")
+            if rec is None:
+                # torn record: the decision never became durable, so the
+                # op never happened — drop the residue
+                self.pool.delete(f"xwal/{fn}")
+                continue
+            if rec.get("state") == ST_SUCCEEDED:
+                out.append(rec)
+        return out
+
+    def prune(self) -> int:
+        """Durably drop COMPLETED records (journal hygiene, the
+        ``prune_completed`` analogue).  Returns how many were pruned."""
+        pruned = 0
+        for fn in self.pool.listdir("xwal"):
+            rec = self.pool.read_record(f"xwal/{fn}")
+            if rec is not None and rec.get("state") != ST_COMPLETED:
+                continue
+            self.pool.delete_persist(f"xwal/{fn}")
+            pruned += 1
+        return pruned
+
+    @staticmethod
+    def targets_of(rec: Dict) -> List[CrossTarget]:
+        return [tuple(t) for t in rec["targets"]]
+
+    def __len__(self) -> int:
+        return len(self.pool.listdir("xwal"))
+
+    def __repr__(self) -> str:
+        return f"CrossShardJournal({len(self)} records)"

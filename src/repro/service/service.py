@@ -1,0 +1,354 @@
+"""KVService: many logical clients on sharded persistent structures.
+
+The service front for the structures layer: S shards, each owning its
+own backend instance (built through the ``repro.pmwcas`` factory hooks)
+and its own structure partition (:class:`repro.structures.HashMap` or
+:class:`repro.structures.BzTreeIndex`).  Keys are routed by
+multiplicative hash, so every logical op is shard-local by construction
+— cross-shard atomicity only arises at the raw-op layer
+(:class:`repro.service.BatchScheduler`), never for single-key KV ops.
+
+Execution is the structures' snapshot-compile/round-execute loop lifted
+across shards: each ``step`` compiles every shard's pending ops against
+that shard's snapshot, forms ONE conflict-free round per shard (the
+conflict-defer rule: duplicate-target ops wait a round instead of
+executing to certain failure), and runs all shard rounds in a single
+wave — kernel shards through the stacked vmapped dispatch, so S rounds
+cost one device call.  CAS losers recompile against the next snapshot;
+tree shards run the split protocol between waves, exactly like
+``BzTreeIndex.apply`` does between rounds.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.pmwcas import Backend, MwCASOp, make_backend
+from repro.structures import (BzTreeIndex, EXHAUSTED, FULL, HashMap, KVOp,
+                              NeedsSplit, OK, OutOfRegions, SCAN,
+                              StructResult)
+
+from .executor import execute_wave, schedule_wave, select_executor
+from .router import ShardRouter
+from .stats import ServiceStats, fresh_stats
+
+
+class KVFuture:
+    """Client handle for one submitted logical op."""
+
+    __slots__ = ("op", "client", "shard", "seq", "submit_step", "done",
+                 "result")
+
+    def __init__(self, op: KVOp, client, shard: int, seq: int,
+                 submit_step: int):
+        self.op = op
+        self.client = client
+        self.shard = shard
+        self.seq = seq
+        self.submit_step = submit_step
+        self.done = False
+        self.result: Optional[StructResult] = None
+
+    @property
+    def status(self) -> Optional[str]:
+        return self.result.status if self.done else None
+
+    def __repr__(self) -> str:
+        state = f"done {self.result.status}" if self.done else "pending"
+        return f"KVFuture(client={self.client}, shard={self.shard}, {state})"
+
+
+class _PendingKV:
+    """Queue entry: future + the op compiled for the CURRENT wave.
+
+    ``attempts`` counts EXECUTED-and-lost CAS rounds plus split retries —
+    not waves spent queued behind the round cap.  Queue delay is latency,
+    not failure; only genuine retry churn can exhaust an op.
+    """
+
+    __slots__ = ("future", "local", "attempts")
+
+    def __init__(self, future: KVFuture):
+        self.future = future
+        self.local: Optional[MwCASOp] = None      # set per wave
+        self.attempts = 0
+
+
+class KVService:
+    """Sharded, batched KV execution service (see module docstring).
+
+    ``backend`` is a registered backend kind (``"kernel"``/``"durable"``/
+    custom), a factory callable, or a list of pre-built per-shard
+    backends.  ``structure`` selects the per-shard partition type:
+    ``"hashmap"`` (sized by ``n_buckets`` per shard) or ``"bztree"``
+    (sized by ``leaf_cap``/``root_cap``/``n_regions`` per shard).
+    """
+
+    def __init__(self, n_shards: int, *,
+                 structure: str = "hashmap",
+                 backend: Union[str, Callable[..., Backend],
+                                Sequence[Backend]] = "kernel",
+                 n_buckets: int = 64,
+                 leaf_cap: int = 4, root_cap: int = 8, n_regions: int = 8,
+                 round_cap: int = 16, max_op_rounds: Optional[int] = None,
+                 durable_root: Union[str, pathlib.Path, None] = None,
+                 use_kernel: bool = False, interpret: bool = True,
+                 executor=None):
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        if structure not in ("hashmap", "bztree"):
+            raise ValueError(f"unknown structure {structure!r}")
+        self.structure = structure
+        self.n_buckets = n_buckets
+        self.tree_shape = dict(leaf_cap=leaf_cap, root_cap=root_cap,
+                               n_regions=n_regions)
+        if structure == "hashmap":
+            words = 2 * n_buckets
+        else:
+            words = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)
+        self.words_per_shard = words
+        self.router = ShardRouter(n_shards, words_per_shard=words,
+                                  policy="range")
+        self.backends = self._build_backends(
+            backend, n_shards, words, durable_root, use_kernel, interpret)
+        self.structs = [self._attach(b) for b in self.backends]
+        self.round_cap = round_cap
+        self.max_op_rounds = (2 * round_cap + 8 if max_op_rounds is None
+                              else max_op_rounds)
+        self.executor = executor or select_executor(self.backends,
+                                                    round_cap=round_cap)
+        self.stats: ServiceStats = fresh_stats(n_shards, round_cap)
+        self._queues: List[List[_PendingKV]] = [[] for _ in range(n_shards)]
+        self._seq = 0
+
+    # -- construction ----------------------------------------------------------
+    @staticmethod
+    def _build_backends(spec, n_shards, words, durable_root, use_kernel,
+                        interpret) -> List[Backend]:
+        if isinstance(spec, (list, tuple)):
+            if len(spec) != n_shards:
+                raise ValueError(f"{len(spec)} backends for {n_shards} "
+                                 "shards")
+            return list(spec)
+        out = []
+        for s in range(n_shards):
+            if spec == "kernel":
+                kw = dict(n_words=words, use_kernel=use_kernel,
+                          interpret=interpret)
+            elif spec == "durable":
+                root = (None if durable_root is None
+                        else pathlib.Path(durable_root) / f"shard{s}")
+                kw = dict(root=root)
+            else:                       # sim / custom kind / factory
+                kw = dict(n_words=words)
+            out.append(make_backend(spec, **kw))
+        return out
+
+    def _attach(self, backend: Backend):
+        if self.structure == "hashmap":
+            return HashMap(backend, self.n_buckets)
+        return BzTreeIndex(backend, **self.tree_shape)
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, op: KVOp, client=0) -> KVFuture:
+        shard = self.router.shard_of_key(op.key)
+        fut = KVFuture(op, client, shard, self._seq, self.stats.steps)
+        self._seq += 1
+        self.stats.submitted += 1
+        self._queues[shard].append(_PendingKV(fut))
+        return fut
+
+    def submit_many(self, ops: Sequence[KVOp], client=0) -> List[KVFuture]:
+        return [self.submit(op, client) for op in ops]
+
+    @property
+    def pending_count(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    # -- execution -------------------------------------------------------------
+    def step(self) -> int:
+        """One service wave: compile, form rounds, execute, complete.
+        Returns the number of futures completed this wave."""
+        if not self.pending_count:
+            return 0
+        self.stats.steps += 1
+        completed = 0
+        compiled_queues: Dict[int, List[_PendingKV]] = {}
+        for s in range(len(self.structs)):
+            if not self._queues[s]:
+                continue
+            ready, done = self._compile_shard(s)
+            completed += done
+            if ready:
+                compiled_queues[s] = ready
+        if not compiled_queues:
+            return completed
+        rounds, leftovers = schedule_wave(compiled_queues, self.round_cap,
+                                          self.stats)
+        # deferred ops recompile next wave (their snapshot is stale by
+        # construction once this wave's round commits)
+        for s, later in leftovers.items():
+            self._requeue(s, later)
+        wave = execute_wave(self.executor, self.backends, rounds,
+                            self.stats)
+        for s, pairs in wave.items():
+            losers = []
+            for pending, ok in pairs:
+                if ok:
+                    self._complete(pending.future, OK)
+                    completed += 1
+                else:
+                    pending.attempts += 1
+                    losers.append(pending)       # recompile next wave
+            self._requeue(s, losers)
+        return completed
+
+    def drain(self, max_steps: Optional[int] = None) -> int:
+        """Step until no op is pending.  Per-op round budgets
+        (``max_op_rounds`` -> EXHAUSTED) bound the loop."""
+        limit = ((self.pending_count + 4) * (self.max_op_rounds + 2)
+                 if max_steps is None else max_steps)
+        done = 0
+        for _ in range(limit):
+            if not self.pending_count:
+                break
+            done += self.step()
+        if self.pending_count:
+            raise RuntimeError(
+                f"service drain did not converge in {limit} steps")
+        return done
+
+    def apply(self, ops: Sequence[KVOp], client=0) -> List[StructResult]:
+        """Synchronous convenience: submit a batch, drain, return results
+        in submission order (the ``HashMap.apply`` signature, served)."""
+        futs = self.submit_many(ops, client)
+        self.drain()
+        return [f.result for f in futs]
+
+    # -- wave internals --------------------------------------------------------
+    def _compile_shard(self, s: int):
+        """Compile shard ``s``'s queue against one snapshot.  Immediate
+        results complete; split requests run the tree's grow protocol
+        (ops recompile next wave); CAS-compiled ops return for round
+        formation."""
+        struct = self.structs[s]
+        snap = struct.snapshot()
+        ready: List[_PendingKV] = []
+        later: List[_PendingKV] = []
+        done = 0
+        splits: Dict[int, List[_PendingKV]] = {}
+        for pending in self._queues[s]:
+            fut = pending.future
+            if pending.attempts > self.max_op_rounds:
+                self._complete(fut, EXHAUSTED)
+                done += 1
+                continue
+            compiled = struct.compile_op(fut.op, snap)
+            if isinstance(compiled, StructResult):
+                if fut.op.kind == SCAN and compiled.status == OK:
+                    # scans cover the whole keyspace: sum the count over
+                    # every shard partition (each against its own wave
+                    # snapshot — disjoint key sets, so a plain sum)
+                    value = (compiled.value or 0) + sum(
+                        (other.compile_op(fut.op, other.snapshot()).value
+                         or 0)
+                        for s2, other in enumerate(self.structs)
+                        if s2 != s)
+                    self._complete(fut, OK, value)
+                else:
+                    self._complete(fut, compiled.status, compiled.value)
+                done += 1
+            elif isinstance(compiled, NeedsSplit):
+                splits.setdefault(compiled.leaf_base, []).append(pending)
+            else:
+                pending.local = compiled
+                ready.append(pending)
+        self._queues[s] = []
+        if splits:
+            # grow first; this wave's compiled ops would mostly lose
+            # (the split freezes their leaf's meta), so everything on
+            # this shard recompiles next wave — BzTreeIndex.apply's rule
+            for leaf_base, waiters in sorted(splits.items()):
+                try:
+                    grew = self.structs[s].ensure_room(leaf_base)
+                except OutOfRegions:
+                    grew = False
+                    self.stats.shards[s].out_of_regions += 1
+                if grew:
+                    for pending in waiters:
+                        pending.attempts += 1
+                    later.extend(waiters)
+                else:
+                    for pending in waiters:
+                        self._complete(pending.future, FULL)
+                        done += 1
+            self._requeue(s, ready + later)
+            return [], done
+        self._requeue(s, later)
+        return ready, done
+
+    def _requeue(self, s: int, entries: List[_PendingKV]) -> None:
+        """Merge entries back into the shard queue in submission order
+        (FIFO fairness across defers, losses and recompiles)."""
+        if entries:
+            self._queues[s].extend(entries)
+            self._queues[s].sort(key=lambda p: p.future.seq)
+
+    def _complete(self, fut: KVFuture, status: str, value=None) -> None:
+        fut.done = True
+        latency = max(1, self.stats.steps - fut.submit_step)
+        fut.result = StructResult(fut.op, status, value=value,
+                                  rounds=latency)
+        self.stats.record_completion(latency, status)
+
+    # -- reads / integrity -----------------------------------------------------
+    def lookup(self, key: int) -> Optional[int]:
+        return self.structs[self.router.shard_of_key(key)].lookup(key)
+
+    def items(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for struct in self.structs:
+            out.update(struct.items())
+        return out
+
+    def check_integrity(self) -> Dict[int, int]:
+        """Per-shard structure invariants + the routing invariant (no
+        key lives on a shard it doesn't hash to)."""
+        out: Dict[int, int] = {}
+        for s, struct in enumerate(self.structs):
+            items = struct.check_integrity()
+            for k, v in items.items():
+                if self.router.shard_of_key(k) != s:
+                    raise RuntimeError(
+                        f"key {k} lives on shard {s} but routes to "
+                        f"{self.router.shard_of_key(k)}")
+                if k in out:
+                    raise RuntimeError(f"key {k} live on two shards")
+                out[k] = v
+        return out
+
+    def gc_regions(self) -> int:
+        """Region GC across every tree shard (no-op for hash maps)."""
+        return sum(getattr(s, "gc_regions", lambda: 0)()
+                   for s in self.structs)
+
+    def reset_stats(self) -> None:
+        """Start a fresh measurement window (e.g. after a load phase)."""
+        self.stats = fresh_stats(len(self.backends), self.round_cap)
+
+    # -- durability ------------------------------------------------------------
+    def crash(self) -> "KVService":
+        """Durable services only: crash every shard (drop unpersisted
+        writes), recover each from its own WAL, and re-attach the
+        structure partitions.  Returns the recovered service."""
+        recovered = []
+        for b in self.backends:
+            crash = getattr(b, "crash", None)
+            if crash is None:
+                raise TypeError(f"backend {b.name} cannot crash/recover")
+            recovered.append(crash())
+        return KVService(len(recovered), structure=self.structure,
+                         backend=recovered, n_buckets=self.n_buckets,
+                         round_cap=self.round_cap,
+                         max_op_rounds=self.max_op_rounds,
+                         **self.tree_shape)

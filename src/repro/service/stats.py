@@ -1,0 +1,154 @@
+"""Service instrumentation: per-shard round accounting + op latency.
+
+The vocabulary mirrors the paper's evaluation axes — how many CAS rounds
+the substrate actually ran, how full each batch was, and how often ops
+were deferred (the service's replacement for a lost CAS) or lost a real
+conflict — plus client-visible latency measured in ROUNDS, the
+substrate-independent unit (a round is one backend batch; wall time per
+round is a property of the backend, not of the service)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardStats:
+    """One shard's round accounting."""
+    shard: int
+    rounds: int = 0              # backend batches executed
+    ops_executed: int = 0        # CAS ops submitted across those batches
+    ops_won: int = 0             # CAS ops that committed
+    defers: int = 0              # conflict-deferred (duplicate target in round)
+    overflows: int = 0           # deferred because the round hit round_cap
+    out_of_regions: int = 0      # allocator-exhausted FULL verdicts (trees)
+
+    @property
+    def conflict_losses(self) -> int:
+        return self.ops_executed - self.ops_won
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Aggregate service instrumentation (scheduler and KV front)."""
+    round_cap: int
+    shards: List[ShardStats]
+    steps: int = 0               # round waves driven (shards run in parallel)
+    submitted: int = 0           # client submissions accepted
+    completed: int = 0           # futures completed (any status)
+    cross_rounds: int = 0        # serialized global rounds
+    cross_ops: int = 0           # cross-shard ops executed in them
+    latencies: List[int] = dataclasses.field(default_factory=list)
+    by_status: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    # percentile window: a long-running service would otherwise grow the
+    # sample list without bound; the percentiles describe recent traffic
+    MAX_LATENCY_SAMPLES = 4096
+
+    # -- recorders -------------------------------------------------------------
+    def record_completion(self, latency_rounds: int, status: str) -> None:
+        self.completed += 1
+        self.latencies.append(int(latency_rounds))
+        if len(self.latencies) > self.MAX_LATENCY_SAMPLES:
+            del self.latencies[:len(self.latencies)
+                               - self.MAX_LATENCY_SAMPLES]
+        self.by_status[status] = self.by_status.get(status, 0) + 1
+
+    # -- aggregates ------------------------------------------------------------
+    @property
+    def rounds(self) -> int:
+        return sum(s.rounds for s in self.shards) + self.cross_rounds
+
+    @property
+    def ops_executed(self) -> int:
+        return sum(s.ops_executed for s in self.shards) + self.cross_ops
+
+    @property
+    def defers(self) -> int:
+        return sum(s.defers for s in self.shards)
+
+    @property
+    def defer_rate(self) -> float:
+        """Conflict-defers per scheduling decision (deferred ops come up
+        for scheduling again, so the denominator counts attempts)."""
+        attempts = self.ops_executed + self.defers \
+            + sum(s.overflows for s in self.shards)
+        return self.defers / attempts if attempts else 0.0
+
+    @property
+    def conflict_rate(self) -> float:
+        """Executed CAS ops that lost their round."""
+        if not self.ops_executed:
+            return 0.0
+        return sum(s.conflict_losses for s in self.shards) \
+            / self.ops_executed
+
+    @property
+    def occupancy(self) -> float:
+        """Mean batch fill across every executed shard round."""
+        rounds = sum(s.rounds for s in self.shards)
+        if not rounds or not self.round_cap:
+            return 0.0
+        return sum(s.ops_executed for s in self.shards) \
+            / (rounds * self.round_cap)
+
+    @property
+    def ops_per_step(self) -> float:
+        """Aggregate round throughput: completions per round wave —
+        the quantity that must scale with shard count."""
+        return self.completed / self.steps if self.steps else 0.0
+
+    def latency_rounds(self, q: float) -> float:
+        """Client-visible latency percentile, in rounds-to-completion,
+        over the most recent ``MAX_LATENCY_SAMPLES`` completions."""
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    @property
+    def p50_latency_rounds(self) -> float:
+        return self.latency_rounds(50.0)
+
+    @property
+    def p99_latency_rounds(self) -> float:
+        return self.latency_rounds(99.0)
+
+    # -- reporting -------------------------------------------------------------
+    def as_row(self) -> Dict[str, float]:
+        """Flat record for the benchmark JSON."""
+        return {
+            "steps": self.steps, "rounds": self.rounds,
+            "completed": self.completed,
+            "ops_per_step": round(self.ops_per_step, 3),
+            "occupancy": round(self.occupancy, 3),
+            "defer_rate": round(self.defer_rate, 3),
+            "conflict_rate": round(self.conflict_rate, 3),
+            "cross_rounds": self.cross_rounds,
+            "p50_latency_rounds": self.p50_latency_rounds,
+            "p99_latency_rounds": self.p99_latency_rounds,
+        }
+
+    def summary(self) -> str:
+        lines = [f"service: {self.completed}/{self.submitted} ops in "
+                 f"{self.steps} steps ({self.ops_per_step:.1f} ops/step), "
+                 f"{self.rounds} rounds "
+                 f"(occupancy {self.occupancy:.2f}, defer rate "
+                 f"{self.defer_rate:.3f}, conflict rate "
+                 f"{self.conflict_rate:.3f})",
+                 f"  latency p50={self.p50_latency_rounds:.0f} "
+                 f"p99={self.p99_latency_rounds:.0f} rounds; "
+                 f"cross-shard: {self.cross_ops} ops in "
+                 f"{self.cross_rounds} serialized rounds"]
+        for s in self.shards:
+            lines.append(
+                f"  shard {s.shard}: rounds={s.rounds} "
+                f"cas={s.ops_executed} won={s.ops_won} "
+                f"defers={s.defers} overflows={s.overflows}")
+        return "\n".join(lines)
+
+
+def fresh_stats(n_shards: int, round_cap: int) -> ServiceStats:
+    return ServiceStats(round_cap=round_cap,
+                        shards=[ShardStats(i) for i in range(n_shards)])

@@ -33,20 +33,21 @@ and the crash invariants, and Sec. 7 for the multi-node tree.
 from .bztree import (COUNT_MASK, FROZEN_BIT, NODE_EXHAUSTED, NODE_EXISTS,
                      NODE_FROZEN, NODE_FULL, NODE_OK, SortedNode, SplitError,
                      read_pointer, swap_pointer)
-from .bztree_index import BzTreeIndex, LEAF_DEAD, LeafNode
+from .bztree_index import BzTreeIndex, LEAF_DEAD, LeafNode, NeedsSplit
 from .checkers import (CrashCheckError, check_durable_crash_sweep,
                        check_sim_crash_sweep, check_tree_crash_sweep,
                        replay_effects)
 from .differential import (StructDifferentialReport, conservative_verdicts,
                            run_struct_differential, shadow_batch,
                            winner_blocking_verdicts)
-from .freelist import DoubleFree, FreeListAllocator
+from .freelist import DoubleFree, FreeListAllocator, OutOfRegions
 from .hashmap import (DELETE, EMPTY, EXHAUSTED, EXISTS, FULL, HashMap,
                       INSERT, KVOp, NOT_FOUND, OK, READ, RoundTrace, SCAN,
                       StructResult, TOMBSTONE, TornStructure, UPDATE)
 from .workload import (LOAD, WorkloadSpec, WorkloadStats, YCSB_A, YCSB_B,
-                       YCSB_C, YCSB_E, batches, compile_workload,
-                       kernel_round_arrays, load_phase, run_workload)
+                       YCSB_C, YCSB_E, batches, client_streams,
+                       compile_workload, interleave, kernel_round_arrays,
+                       key_shard, load_phase, partition_ops, run_workload)
 
 __all__ = [
     # hash map
@@ -59,14 +60,15 @@ __all__ = [
     "FROZEN_BIT", "COUNT_MASK",
     "NODE_OK", "NODE_FULL", "NODE_FROZEN", "NODE_EXISTS", "NODE_EXHAUSTED",
     # multi-node tree
-    "BzTreeIndex", "LeafNode", "LEAF_DEAD",
+    "BzTreeIndex", "LeafNode", "LEAF_DEAD", "NeedsSplit",
     # allocator
-    "FreeListAllocator", "DoubleFree",
+    "FreeListAllocator", "DoubleFree", "OutOfRegions",
     # workload
     "WorkloadSpec", "WorkloadStats", "YCSB_A", "YCSB_B", "YCSB_C", "YCSB_E",
     "LOAD",
     "compile_workload", "load_phase", "batches", "run_workload",
-    "kernel_round_arrays",
+    "kernel_round_arrays", "client_streams", "interleave", "key_shard",
+    "partition_ops",
     # checkers + differential
     "check_durable_crash_sweep", "check_sim_crash_sweep",
     "check_tree_crash_sweep", "replay_effects",

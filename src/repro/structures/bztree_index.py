@@ -53,7 +53,7 @@ import numpy as np
 from repro.pmwcas import Backend, MwCASOp
 
 from .bztree import COUNT_MASK, FROZEN_BIT, SortedNode, SplitError
-from .freelist import FreeListAllocator
+from .freelist import FreeListAllocator, OutOfRegions
 from .hashmap import (EXHAUSTED, EXISTS, FULL, INSERT, KVOp, NOT_FOUND, OK,
                       READ, RoundTrace, SCAN, StructResult, TornStructure,
                       UPDATE)
@@ -113,10 +113,16 @@ class LeafNode(SortedNode):
 
 
 @dataclasses.dataclass(frozen=True)
-class _NeedsSplit:
+class NeedsSplit:
     """Compile verdict: this op cannot proceed until its leaf splits
-    (full) or a pending split completes (frozen)."""
+    (full) or a pending split completes (frozen).  The sharded service
+    layer dispatches on this type (`repro.service`), so it is public:
+    a round compiler that receives one should call
+    :meth:`BzTreeIndex.ensure_room` and recompile."""
     leaf_base: int
+
+
+_NeedsSplit = NeedsSplit         # original (private) spelling
 
 
 class BzTreeIndex:
@@ -364,6 +370,17 @@ class BzTreeIndex:
             return True
         return self.root_count() > n         # a helper completed it
 
+    def ensure_room(self, leaf_base: int) -> bool:
+        """Public split entry point for external round compilers (the
+        sharded service layer): split — or complete the pending split
+        of — the leaf a :class:`NeedsSplit` verdict named.  Returns
+        False when the root is full; raises
+        :class:`~repro.structures.OutOfRegions` when the allocator is
+        exhausted — the typed FULL-vs-conflict distinction the service
+        records.  Either way the caller should report FULL for the
+        blocked ops."""
+        return self._split_leaf(leaf_base)
+
     def _split_leaf(self, leaf_base: int) -> bool:
         """Split (or complete the pending split of) one leaf.
 
@@ -386,7 +403,8 @@ class BzTreeIndex:
             return False            # cannot grow — don't freeze the leaf
         # claim the target region BEFORE freezing: a leaf frozen with no
         # region to split into would be wedged forever (update/delete on
-        # its live keys could never complete)
+        # its live keys could never complete).  OutOfRegions propagates:
+        # the leaf is untouched, and apply()/the service map it to FULL
         (grant,) = self.allocator.alloc([1])
         if grant is None:
             return False
@@ -414,15 +432,11 @@ class BzTreeIndex:
         self.mwcas_won += 2
         return self._install(n, sep, right_base)
 
-    def _consolidate(self, leaf: LeafNode,
-                     grant: Optional[List[int]] = None) -> bool:
+    def _consolidate(self, leaf: LeafNode, grant: List[int]) -> bool:
         """A full leaf with < 2 live keys cannot split; materialize one
         compacted node (same one-wide-MwCAS image) and swing the routing
-        pointer to it (1-word install, no root entry needed)."""
-        if grant is None:
-            (grant,) = self.allocator.alloc([1])
-            if grant is None:
-                return False
+        pointer to it (1-word install, no root entry needed).  ``grant``
+        is the region the caller (``_split_leaf``) already claimed."""
         new_base = self.allocator.region(grant[0])
         ks = leaf.keys()
         (res,) = self.backend.execute(
@@ -484,7 +498,11 @@ class BzTreeIndex:
                 # tree shape (ops compiled above would mostly lose their
                 # round anyway: the split freezes their leaf's meta)
                 for leaf_base, idxs in needs.items():
-                    grew = split_budget > 0 and self._split_leaf(leaf_base)
+                    try:
+                        grew = split_budget > 0 and \
+                            self._split_leaf(leaf_base)
+                    except OutOfRegions:
+                        grew = False         # region-exhausted == FULL here
                     if grew:
                         split_budget -= 1
                     else:
@@ -515,6 +533,54 @@ class BzTreeIndex:
             results[idx] = StructResult(ops[idx], EXHAUSTED, rounds=rounds)
         assert all(r is not None for r in results)
         return results               # type: ignore[return-value]
+
+    # -- region GC (ROADMAP: frozen split originals stay claimed) --------------
+    def gc_regions(self) -> int:
+        """Recovery-time region GC: free pair regions that no routing
+        word references — the frozen originals of completed splits,
+        consolidated-away leaves and crash-abandoned halves.  Without
+        this, a long-running service workload leaks one region per
+        split/consolidation until the allocator reports
+        :class:`OutOfRegions` (the WAL side is pruned by
+        ``prune_completed``; this is the word side).
+
+        A region is live iff one of its two node bases is referenced by
+        ``ptr0``, a visible child entry, or the *invisible pre-entry* at
+        the root's append position (a pending split's right half — its
+        left sibling shares the pair, so the pair stays claimed until
+        the install completes).  Everything else holding non-zero words
+        is residue: it is zeroed with ONE wide MwCAS (atomic — a crash
+        mid-GC leaves the region whole and still unreferenced, so the
+        next pass retakes it) and returned to the free list.  Returns
+        the number of regions freed.
+        """
+        snap = self.snapshot()
+        referenced = set(self.leaf_bases(snap))
+        n = self.root_count(snap)
+        if n < self.root_cap:
+            pre_child = self._w(snap, self.child_addr(n))
+            if pre_child:
+                # pending split: protect the half-materialized pair
+                referenced.add(pre_child)
+                referenced.add(pre_child - self.leaf_words)
+        live_slots = {self._slot_of(b) for b in referenced}
+        freed = 0
+        for slot in range(self.n_regions):
+            lo = self.allocator.region(slot) - self.base
+            words = snap[lo:lo + self.pair_words]
+            if slot in live_slots or not words.any():
+                continue
+            base_addr = self.base + lo
+            targets = [(base_addr + j, int(w), 0)
+                       for j, w in enumerate(words) if w]
+            (res,) = self.backend.execute([MwCASOp(targets)])
+            self.mwcas_submitted += 1
+            if not res.success:
+                continue                 # raced: next GC pass retakes it
+            self.mwcas_won += 1
+            self.allocator.free([slot])
+            freed += 1
+        return freed
 
     # -- integrity -------------------------------------------------------------
     def check_integrity(self, snap: Optional[np.ndarray] = None

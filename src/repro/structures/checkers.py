@@ -105,9 +105,24 @@ def _durable_crash_sweep(kvops: Sequence[KVOp], root, attach, *,
         # teardown WAL hygiene: pruning spent descriptors must not
         # change what a further crash/recover cycle reconstructs
         recovered.prune_completed()
-        if attach(recovered.crash()).check_integrity() != items:
+        re2 = recovered.crash()
+        struct2 = attach(re2)
+        if struct2.check_integrity() != items:
             raise CrashCheckError(
                 f"crash_at={crash_at}: prune_completed changed recovery")
+        # teardown region hygiene (the word-side analogue): GC-ing
+        # unreferenced pair regions must not change the live items,
+        # at any crash point — including mid-split residue
+        gc = getattr(struct2, "gc_regions", None)
+        if gc is not None:
+            gc()
+            if struct2.check_integrity() != items:
+                raise CrashCheckError(
+                    f"crash_at={crash_at}: region GC changed live items")
+            if attach(re2.crash()).check_integrity() != items:
+                raise CrashCheckError(
+                    f"crash_at={crash_at}: region GC does not survive a "
+                    "further crash/recover cycle")
         if not crashed:
             return crash_at
     raise CrashCheckError(

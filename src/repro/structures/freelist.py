@@ -26,6 +26,26 @@ class DoubleFree(ValueError):
     """A freed slot was already free — allocator misuse."""
 
 
+class OutOfRegions(RuntimeError):
+    """Allocation failed because the free list is EXHAUSTED — there are
+    fewer free slots than the request needs — as opposed to a transient
+    contention loss (which retries, or surfaces as a ``None`` grant).
+
+    The sharded service layer relies on this distinction: an exhausted
+    shard is FULL (reject / grow / re-route), a contended shard just
+    retries next round.  ``requests`` holds the indices of the
+    unservable requests; ``grants`` holds whatever the same ``alloc``
+    call already claimed for other requests — the caller owns those
+    slots and must ``free`` them if it no longer wants them.
+    """
+
+    def __init__(self, msg: str, requests: Sequence[int] = (),
+                 grants: Optional[List[Optional[List[int]]]] = None):
+        super().__init__(msg)
+        self.requests = tuple(requests)
+        self.grants = grants
+
+
 class FreeListAllocator:
     def __init__(self, n_slots: int, *, region_base: int = 0,
                  region_words: int = 0, use_kernel: bool = False,
@@ -72,15 +92,26 @@ class FreeListAllocator:
         self._mask = new_mask
         return [bool(g) for g in np.asarray(granted)]
 
-    def alloc(self, counts: Sequence[int],
-              max_rounds: int = 4) -> List[Optional[List[int]]]:
-        """Grant ``counts[i]`` slots to request i (None if unservable).
+    def alloc(self, counts: Sequence[int], max_rounds: int = 4, *,
+              on_exhausted: str = "raise") -> List[Optional[List[int]]]:
+        """Grant ``counts[i]`` slots to request i.
 
         Each round partitions the currently-free slots into disjoint
         candidate sets (so a round with enough supply grants everything
         at once); a request denied by contention retries with fresh
         candidates next round.
+
+        Requests that cannot be served because the free list is
+        *exhausted* (``count > n_free`` once every servable request got
+        its grant) raise :class:`OutOfRegions` — the typed FULL signal
+        the service layer distinguishes from conflict.  Pass
+        ``on_exhausted="none"`` for the legacy behavior (a ``None``
+        grant); a ``None`` under the default mode means the request was
+        still losing reservation races after ``max_rounds`` (possible
+        only with a concurrent caller mutating the bitmap).
         """
+        if on_exhausted not in ("raise", "none"):
+            raise ValueError(f"on_exhausted={on_exhausted!r}")
         grants: List[Optional[List[int]]] = [None] * len(counts)
         pending = [i for i, c in enumerate(counts) if c > 0]
         for i, c in enumerate(counts):
@@ -108,6 +139,13 @@ class FreeListAllocator:
                 else:
                     still.append(owner)
             pending = sorted(still)
+        exhausted = [i for i in pending if counts[i] > self.n_free]
+        if exhausted and on_exhausted == "raise":
+            raise OutOfRegions(
+                f"free list exhausted: requests {exhausted} need "
+                f"{[counts[i] for i in exhausted]} slots but only "
+                f"{self.n_free} remain free", requests=exhausted,
+                grants=grants)
         return grants
 
     def free(self, slots: Sequence[int]) -> None:

@@ -91,6 +91,52 @@ def batches(ops: Sequence[KVOp], batch: int) -> Iterator[List[KVOp]]:
         yield list(ops[i:i + batch])
 
 
+def client_streams(spec: WorkloadSpec, n_clients: int) -> List[List[KVOp]]:
+    """Split one workload spec into ``n_clients`` deterministic per-client
+    op streams (client i draws from the same mix/skew with seed
+    ``spec.seed + i`` and ``n_ops // n_clients`` ops) — the many-client
+    arrival shape the sharded service layer multiplexes.  All clients
+    share one key universe, so Zipf-hot keys contend across clients."""
+    if n_clients < 1:
+        raise ValueError("need at least one client")
+    per = max(1, spec.n_ops // n_clients)
+    return [compile_workload(dataclasses.replace(spec, n_ops=per,
+                                                 seed=spec.seed + i))
+            for i in range(n_clients)]
+
+
+def interleave(streams: Sequence[Sequence[KVOp]]) -> List[KVOp]:
+    """Round-robin merge of per-client streams into one arrival order."""
+    out: List[KVOp] = []
+    for i in range(max((len(s) for s in streams), default=0)):
+        for s in streams:
+            if i < len(s):
+                out.append(s[i])
+    return out
+
+
+def key_shard(key: int, n_parts: int) -> int:
+    """Multiplicative-hash (Knuth) key partition — the ONE definition
+    shared by :func:`partition_ops` and the service's
+    ``ShardRouter.shard_of_key``, so a partitioned workload provably
+    lands on the shards the service would route it to."""
+    return (key * 2654435761 % (1 << 32)) % n_parts
+
+
+def partition_ops(ops: Sequence[KVOp], n_parts: int,
+                  part_of=None) -> List[List[KVOp]]:
+    """Partition a logical op stream (order-preserving within a part).
+    ``part_of(op) -> int`` defaults to :func:`key_shard`, the service
+    router's key hash."""
+    if part_of is None:
+        def part_of(op):
+            return key_shard(op.key, n_parts)
+    parts: List[List[KVOp]] = [[] for _ in range(n_parts)]
+    for op in ops:
+        parts[part_of(op)].append(op)
+    return parts
+
+
 @dataclasses.dataclass
 class WorkloadStats:
     """Aggregate outcome of a workload run against one HashMap."""

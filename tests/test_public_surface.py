@@ -66,6 +66,19 @@ def test_structures_built_only_on_public_surface(path):
         f"surface, found {bad}")
 
 
+@pytest.mark.parametrize("path", files_under("src/repro/service"),
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_service_built_only_on_public_surface(path):
+    """The sharded service composes the layers below it ONLY through
+    their public surfaces (the structures rule, one level up)."""
+    allowed = {"repro", "repro.pmwcas", "repro.structures"}
+    bad = [(mod, line) for mod, line in repro_imports(path)
+           if mod not in allowed]
+    assert not bad, (
+        f"{path.relative_to(REPO)} must build only on repro / "
+        f"repro.pmwcas / repro.structures, found {bad}")
+
+
 def test_public_surface_covers_the_migration_table():
     """Names the DESIGN.md Sec. 4 table routes through the public
     surface actually resolve there (the cycle can end safely)."""
@@ -73,8 +86,11 @@ def test_public_surface_covers_the_migration_table():
     for name in ("SimSession", "SimConfig", "run_sim", "CNT_CAS",
                  "TAG_DIRTY", "pmwcas_apply", "reserve_slots",
                  "Committer", "PMemPool", "data_rel", "HashMap",
-                 "SortedNode", "FreeListAllocator", "zipf_probs"):
+                 "SortedNode", "FreeListAllocator", "zipf_probs",
+                 "OutOfRegions", "KVService", "BatchScheduler",
+                 "ShardRouter", "make_backend"):
         assert hasattr(repro, name), name
     import repro.pmwcas as pm
-    for name in ("MwCASOp", "Backend", "run_differential", "zipf_probs"):
+    for name in ("MwCASOp", "Backend", "run_differential", "zipf_probs",
+                 "make_backend", "register_backend"):
         assert hasattr(pm, name), name

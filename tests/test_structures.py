@@ -12,7 +12,8 @@ from repro.pmwcas import (DurableBackend, KernelBackend, MwCASOp,
 from repro.structures import (BzTreeIndex, DELETE, EXISTS, FULL,
                               FreeListAllocator, DoubleFree, HashMap, INSERT,
                               KVOp, LEAF_DEAD, LeafNode, NODE_FROZEN,
-                              NODE_FULL, NODE_OK, NOT_FOUND, OK, READ, SCAN,
+                              NODE_FULL, NODE_OK, NOT_FOUND, OK,
+                              OutOfRegions, READ, SCAN,
                               SortedNode, SplitError, TOMBSTONE, TornStructure,
                               UPDATE, WorkloadSpec, YCSB_A, YCSB_B, YCSB_C,
                               YCSB_E, check_durable_crash_sweep,
@@ -350,16 +351,24 @@ def test_freelist_alloc_free_roundtrip():
         fl.free(grants[1])                     # already back on the list
 
 
-def test_freelist_scarcity_and_contention():
+def test_freelist_exhaustion_is_typed():
     fl = FreeListAllocator(4)
-    grants = fl.alloc([3, 3])                  # supply for one, not both
-    served = [g for g in grants if g is not None]
-    assert len(served) == 1 and fl.n_free == 1
+    with pytest.raises(OutOfRegions) as exc:   # supply for one, not both
+        fl.alloc([3, 3])
+    # the exception names the starved request and keeps the grants the
+    # same call already claimed (the caller owns them)
+    assert exc.value.requests == (1,)
+    served = [g for g in exc.value.grants if g is not None]
+    assert len(served) == 1 and len(served[0]) == 3 and fl.n_free == 1
+    # legacy mode: a None grant instead of the typed error
+    fl2 = FreeListAllocator(4)
+    grants = fl2.alloc([3, 3], on_exhausted="none")
+    assert grants[0] is not None and grants[1] is None
     # raw contended reservations: lower batch index wins atomically
-    fl2 = FreeListAllocator(8)
-    ok = fl2.reserve([[0, 1], [1, 2], [3, 4]])
+    fl3 = FreeListAllocator(8)
+    ok = fl3.reserve([[0, 1], [1, 2], [3, 4]])
     assert ok == [True, False, True]
-    assert fl2.n_free == 4                     # loser claimed nothing
+    assert fl3.n_free == 4                     # loser claimed nothing
 
 
 # ---------------------------------------------------------------------------
@@ -617,6 +626,78 @@ def test_tree_region_exhaustion_does_not_wedge_leaf():
     (r,) = t.apply([KVOp(DELETE, 3)])
     assert r.status == OK
     assert t.check_integrity() == {5: 55}
+
+
+def test_tree_region_gc_reclaims_frozen_originals():
+    """ROADMAP satellite: split originals keep their pair regions
+    claimed forever without GC; ``gc_regions`` frees every region no
+    routing word references and the tree can grow again."""
+    t = oracle_tree(leaf_cap=2, root_cap=8, n_regions=3)
+    # region 0: bootstrap leaf; splitting eats region 1, freezing the
+    # original in region 0; the next split eats region 2, and so on
+    res = t.apply([KVOp(INSERT, k, k) for k in (10, 20, 30, 40)])
+    assert all(r.status == OK for r in res) and t.splits >= 1
+    before = t.check_integrity()
+    (r,) = t.apply([KVOp(INSERT, 50, 50)])     # no region left -> FULL
+    assert r.status == FULL
+    freed = t.gc_regions()
+    assert freed >= 1 and t.allocator.n_free >= freed
+    assert t.check_integrity() == before       # GC never touches live state
+    (r,) = t.apply([KVOp(INSERT, 50, 50)])     # the reclaimed region serves
+    assert r.status == OK
+    assert t.check_integrity() == {**before, 50: 50}
+    assert t.gc_regions() >= 0                 # idempotent / re-runnable
+
+
+def test_tree_region_gc_protects_pending_split(tmp_path):
+    """A crash between split rounds leaves a half-materialized pair
+    referenced only by the INVISIBLE pre-entry; GC must keep it (the
+    next mutation completes the split from exactly that state)."""
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    from repro import PMemPool, SimulatedCrash
+    # find a crash point that lands between round 1 and the install:
+    # frozen routed leaf + non-empty pre-entry at the append position
+    for crash_at in range(6, 200):
+        pool = PMemPool(tmp_path / f"c{crash_at}",
+                        crash_after_persists=crash_at)
+        t = BzTreeIndex(DurableBackend(pool=pool), **kw)
+        try:
+            t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30),
+                     KVOp(INSERT, 9, 90)])
+        except SimulatedCrash:
+            t2 = BzTreeIndex(DurableBackend(pool=pool.crash()), **kw)
+            if t2.root_count() == 0 and \
+                    int(t2.backend.read(t2.child_addr(0))):
+                break
+    else:
+        pytest.skip("no crash point hit the inter-round window")
+    pre_pair = t2.backend.read(t2.child_addr(0))
+    t2.gc_regions()
+    # the pre-published pair survived GC and the split still completes
+    assert t2.backend.read(t2.child_addr(0)) == pre_pair
+    res = t2.apply([KVOp(INSERT, 7, 70)])
+    assert res[0].status == OK
+    items = t2.check_integrity()
+    assert items[7] == 70 and t2.root_count() == 1
+
+
+def test_tree_gc_on_durable_crash_recover(tmp_path):
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    db = DurableBackend(tmp_path)
+    t = BzTreeIndex(db, **kw)
+    t.apply([KVOp(INSERT, k, k) for k in (5, 3, 9, 7)])
+    assert t.splits >= 1
+    before = t.check_integrity()
+    db2 = db.crash()
+    t2 = BzTreeIndex(db2, **kw)                # attach reclaims residue
+    freed = t2.gc_regions()
+    assert freed >= 1
+    assert t2.check_integrity() == before
+    # GC is durable: another crash/recover sees the same tree and the
+    # same free regions
+    t3 = BzTreeIndex(db2.crash(), **kw)
+    assert t3.check_integrity() == before
+    assert t3.allocator.n_free >= freed
 
 
 def test_tree_root_full_reports_full():
