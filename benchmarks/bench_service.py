@@ -54,6 +54,11 @@ def _run_service(svc: KVService, streams, load) -> dict:
 
 
 def _emit_kv(name: str, row: dict):
+    extra = ""
+    if "traces" in row:          # stacked dispatch ran: trace-cache row
+        extra = (f";traces={row['traces']};"
+                 f"dispatch_hits={row['dispatch_hits']};"
+                 f"serial_rounds={row['serial_rounds']}")
     emit(f"{name},{row['dt'] / row['n_ops'] * 1e6:.1f},"
          f"ops_per_s={row['n_ops'] / row['dt']:.0f};"
          f"ops_per_round={row['ops_per_step']:.2f};"
@@ -62,7 +67,7 @@ def _emit_kv(name: str, row: dict):
          f"defer_rate={row['defer_rate']:.3f};"
          f"conflict_rate={row['conflict_rate']:.3f};"
          f"p50_rounds={row['p50_latency_rounds']:.0f};"
-         f"p99_rounds={row['p99_latency_rounds']:.0f}")
+         f"p99_rounds={row['p99_latency_rounds']:.0f}" + extra)
 
 
 def run(quick: bool = False):
@@ -77,26 +82,42 @@ def run(quick: bool = False):
     # -- KV service: throughput vs shard count (Zipf-skewed, 8 clients) ------
     shard_counts = (1, 4) if quick else (1, 2, 4)
     ops_per_round = {}
+    us_per_call = {}
+    traces = {}
     for s_count in shard_counts:
         svc = KVService(s_count, structure="hashmap",
                         n_buckets=-(-2 * spec.n_keys // s_count),
                         round_cap=round_cap)
         row = _run_service(svc, streams, load)
         ops_per_round[s_count] = row["ops_per_step"]
+        us_per_call[s_count] = row["dt"] / row["n_ops"] * 1e6
+        traces[s_count] = row.get("traces")
         _emit_kv(f"service_kv_S{s_count}_c{n_clients}_zipf{spec.alpha:g}",
                  row)
 
-    # -- the acceptance row: aggregate round throughput must scale -----------
+    # -- the acceptance rows: round throughput must scale AND the stacked
+    # dispatch must be retrace-free in steady state (wall-clock ops/s
+    # therefore scales too, instead of inverting under recompiles) -----------
     s_lo, s_hi = min(shard_counts), max(shard_counts)
     speedup = ops_per_round[s_hi] / max(ops_per_round[s_lo], 1e-9)
     emit(f"service_scaling,0.0,"
          f"ops_per_round_s{s_lo}={ops_per_round[s_lo]:.2f};"
          f"ops_per_round_s{s_hi}={ops_per_round[s_hi]:.2f};"
-         f"speedup={speedup:.2f}")
+         f"speedup={speedup:.2f};"
+         f"us_ratio_s{s_hi}_vs_s{s_lo}="
+         f"{us_per_call[s_hi] / us_per_call[s_lo]:.2f};"
+         f"traces_s{s_hi}={traces[s_hi]:.0f}")
     assert ops_per_round[s_hi] > ops_per_round[s_lo], (
         f"sharding must scale round throughput: S={s_hi} gave "
         f"{ops_per_round[s_hi]:.2f} ops/round vs S={s_lo} "
         f"{ops_per_round[s_lo]:.2f}")
+    assert traces[s_hi] == 0, (
+        f"stacked dispatch retraced {traces[s_hi]} times in the "
+        "measurement window; shape bucketing has regressed")
+    assert us_per_call[s_hi] <= 1.5 * us_per_call[s_lo], (
+        f"S={s_hi} wall clock per call ({us_per_call[s_hi]:.0f}us) must "
+        f"stay within 1.5x of S={s_lo} ({us_per_call[s_lo]:.0f}us) — "
+        "the stacked dispatch is supposed to be cached, not recompiled")
 
     # -- client-count sensitivity at fixed S ---------------------------------
     for c in ((2,) if quick else (2, 16)):
@@ -134,10 +155,12 @@ def run(quick: bool = False):
     recover_ms = (time.time() - t0) * 1e3
     assert rec.check_integrity() == dsvc.check_integrity()
     _emit_kv("service_kv_S2_durable", row)
+    dstats = dsvc.durability_stats()
     emit(f"service_durable_recover,{recover_ms * 1e3:.0f},"
          f"persists_total={persists};"
          f"persists_per_commit="
-         f"{persists / max(1, sum(s.ops_won for s in dsvc.stats.shards)):.2f}")
+         f"{persists / max(1, sum(s.ops_won for s in dsvc.stats.shards)):.2f};"
+         f"flushes_saved={dstats.flushes_saved};fences={dstats.fences}")
 
     # -- raw scheduler: cross-shard serialization cost -----------------------
     n_shards, words = 4, 32

@@ -42,7 +42,11 @@ python -m benchmarks.run --quick --only ckpt --json-dir "$BENCH_DIR"
 python -m benchmarks.run --quick --only structs --json-dir "$BENCH_DIR"
 python -m benchmarks.run --quick --only tree --json-dir "$BENCH_DIR"
 # the service section asserts S=4 strictly beats S=1 on round throughput
+# AND zero steady-state retraces of the stacked dispatch
 python -m benchmarks.run --quick --only service --json-dir "$BENCH_DIR"
+# the durable section asserts group commit beats per-op commit on ops/s
+# and flush count (and seeds the .bench/baseline entry below)
+python -m benchmarks.run --quick --only durable --json-dir "$BENCH_DIR"
 
 echo "=== 5. perf trend (>20% ops/s regressions vs previous run) ==="
 # warn-only by default (first run has no baseline); PERF_STRICT=1 gates

@@ -38,8 +38,13 @@ def _metric(row: dict):
 
 
 def _rows_by_name(path: pathlib.Path) -> dict:
+    """Measured rows keyed by name.  Synthetic summary rows (e.g.
+    ``service_scaling``, ``service_tree_gc``) carry ``us_per_call ==
+    0.0`` — they are derived ratios/counts, not measurements, and must
+    not pollute trend comparisons."""
     data = json.loads(path.read_text())
-    return {r["name"]: r for r in data.get("rows", []) if "name" in r}
+    return {r["name"]: r for r in data.get("rows", [])
+            if "name" in r and r.get("us_per_call") != 0.0}
 
 
 def compare(current: pathlib.Path, baseline: pathlib.Path,

@@ -46,18 +46,19 @@ _STRUCTURES = ("HashMap", "KVOp", "StructResult", "SortedNode",
                "TornStructure", "CrashCheckError")
 _SERVICE = ("KVService", "KVFuture", "BatchScheduler", "OpFuture",
             "ShardRouter", "CROSS_SHARD", "ServiceStats", "ServiceError",
-            "CrossShardJournal", "StackedKernelExecutor")
+            "CrossShardJournal", "StackedKernelExecutor", "DispatchStats",
+            "collect_durability")
 _PMWCAS = (
     "Addr", "Target", "MwCASOp", "Descriptor", "OpResult",
     "batch_width", "ops_to_arrays", "ops_from_arrays", "results_from_mask",
     "Algorithm", "OURS", "OURS_DF", "ORIGINAL", "PCAS", "STRATEGIES",
     "resolve", "ALGORITHMS",
     "Backend", "SimBackend", "KernelBackend", "DurableBackend",
-    "UnsupportedBatch",
+    "UnsupportedBatch", "DurabilityStats",
     "make_backend", "register_backend", "BACKEND_FACTORIES",
     "SimSession", "SimConfig", "SimResult", "CostModel",
     "run_sim", "run_until", "generate_ops", "generate_schedule",
-    "zipf_probs",
+    "zipf_probs", "pmwcas_apply_stacked",
     "recover", "committed_histogram", "check_crash_consistency",
     "RecoveryError",
     "run_differential", "increment_batch", "DifferentialReport",

@@ -1,8 +1,8 @@
-from .committer import Committer, data_rel
+from .committer import Committer, DurabilityStats, data_rel
 from .manager import AsyncCheckpointManager, CheckpointManager
 from .marker_committer import MarkerCommitter
 from .pmem import PMemPool, SimulatedCrash
 
-__all__ = ["Committer", "MarkerCommitter", "CheckpointManager",
-           "AsyncCheckpointManager", "PMemPool", "SimulatedCrash",
-           "data_rel"]
+__all__ = ["Committer", "DurabilityStats", "MarkerCommitter",
+           "CheckpointManager", "AsyncCheckpointManager", "PMemPool",
+           "SimulatedCrash", "data_rel"]

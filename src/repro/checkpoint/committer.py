@@ -15,15 +15,28 @@ protocol is Fig. 4 minus lines 20-22:
 There are NO per-slot commit markers (the dirty-flag analogue; the
 baseline committer in marker_committer.py has them for the benchmark).
 Recovery reads only descriptors + slot pointers and rolls forward/back.
+
+Round-level group commit (DESIGN.md Sec. 9): :meth:`Committer.commit_round`
+coalesces a whole conflict-free batch round into ONE WAL record — the
+record embeds every op's targets AND payloads, so its single persist is
+the round's only durability fence.  Data files and slot pointers are
+written visibly but flushed lazily; recovery replays round records (in
+commit order) exactly like per-op descriptors, rebuilding anything the
+crash dropped from the record itself.  Descriptors-as-WAL is unchanged —
+only flush *placement* moves, from per-op to per-round.
 """
 from __future__ import annotations
 
+import base64
+import dataclasses
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .pmem import PMemPool
 
 ST_COMPLETED, ST_FAILED, ST_SUCCEEDED = "COMPLETED", "FAILED", "SUCCEEDED"
+
+_ROUND_PREFIX = "round-"
 
 
 def _slot_rel(name: str) -> str:
@@ -42,11 +55,59 @@ class CommitError(Exception):
     pass
 
 
+@dataclasses.dataclass
+class DurabilityStats:
+    """Flush accounting for the commit paths (the paper's fewer-flushes
+    lever, measured): how many persists were actually issued, how many
+    the per-op protocol would have issued for the same commits, and how
+    many commit fences (round-record persists) were paid."""
+    flushes_issued: int = 0    # persists actually issued by commit paths
+    flushes_saved: int = 0     # per-op-protocol persists coalesced away
+    fences: int = 0            # round-record commit fences
+    round_commits: int = 0     # commit_round calls that committed >= 1 op
+    op_commits: int = 0        # per-op commit() calls
+    ops_committed: int = 0     # ops that reached their linearization point
+
+    def merge(self, other: "DurabilityStats") -> "DurabilityStats":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def as_row(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @property
+    def flushes_per_commit(self) -> float:
+        return (self.flushes_issued / self.ops_committed
+                if self.ops_committed else 0.0)
+
+
+def _b64(data: bytes) -> str:
+    return base64.b64encode(data).decode("ascii")
+
+
+def _unb64(text: str) -> bytes:
+    return base64.b64decode(text.encode("ascii"))
+
+
+def _per_op_flush_cost(targets: Sequence[Tuple[str, int, int]]) -> int:
+    """Persists the per-op protocol pays for one committed op: k data
+    prepares + 1 WAL + k reserves + 1 SUCCEEDED + k finalizes."""
+    return 3 * len(targets) + 2
+
+
 class Committer:
     """The paper's algorithm (no dirty flags)."""
 
+    # round-level group commit is a protocol property of THIS committer;
+    # the marker baseline keeps its per-slot dirty flags and opts out
+    supports_rounds = True
+
     def __init__(self, pool: PMemPool):
         self.pool = pool
+        self.stats = DurabilityStats()
+        self._round_seq: Optional[int] = None   # lazily scanned from wal/
 
     # -- reads -----------------------------------------------------------------
     def slot_version(self, name: str) -> int:
@@ -70,6 +131,19 @@ class Committer:
 
         payloads: desired data per slot (written out-of-place first).
         """
+        pool = self.pool
+        p0 = pool.persist_count
+        try:
+            ok = self._commit(cid, targets, payloads)
+        finally:
+            self.stats.op_commits += 1
+            self.stats.flushes_issued += pool.persist_count - p0
+        if ok:
+            self.stats.ops_committed += 1
+        return ok
+
+    def _commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
+                payloads: Dict[str, bytes]) -> bool:
         pool = self.pool
         # 0. versions must advance.  An exp == des "no-op move" would pass
         # every check and then GC its own live data file in step 6
@@ -135,6 +209,107 @@ class Committer:
                     pool.delete(data_rel(name, des))
         return success
 
+    # -- round-level group commit --------------------------------------------------
+    def _next_round_id(self) -> str:
+        """Monotonic round ids; ``wal/`` filename order == commit order
+        (recovery replays rounds in that order).  The sequence resumes
+        past any surviving round records after a crash."""
+        if self._round_seq is None:
+            top = 0
+            for fn in self.pool.listdir("wal"):
+                if fn.startswith(_ROUND_PREFIX) and fn.endswith(".json"):
+                    try:
+                        top = max(top, 1 + int(
+                            fn[len(_ROUND_PREFIX):-len(".json")]))
+                    except ValueError:
+                        pass
+            self._round_seq = top
+        rid = f"{_ROUND_PREFIX}{self._round_seq:010d}"
+        self._round_seq += 1
+        return rid
+
+    def commit_round(self, entries: Sequence[Tuple[str, Sequence[
+            Tuple[str, int, int]]]], payloads: Dict[str, bytes]
+            ) -> List[bool]:
+        """Commit a conflict-free round of ops under ONE durability fence.
+
+        ``entries`` is ``[(op_id, [(slot, expected, desired), ...]), ...]``
+        — ops of one batch round; an op whose slots collide with an
+        earlier entry, whose expected versions are stale, or whose
+        versions do not advance fails individually (per-entry verdicts
+        are returned, mirroring per-op :meth:`commit`).
+
+        Protocol (DESIGN.md Sec. 9) — flush placement, not WAL shape,
+        is what changes versus per-op commit:
+
+        1. validate every entry against the live slot versions;
+        2. write every winner's desired data files (visible, NOT yet
+           flushed);
+        3. persist ONE coalesced round record ``{id, kind: round,
+           state: SUCCEEDED, ops: [{id, targets, payloads}]}`` — the
+           single commit fence and durability linearization point of
+           every op in the round;
+        4. finalize every slot pointer and GC old data files LAZILY —
+           the record (which embeds the payloads) is the durable truth
+           until :meth:`prune_completed` flushes the final state and
+           drops it.
+
+        A crash before (3) leaves no durable record: the round never
+        happened.  A crash after (3) is redone by :meth:`recover`
+        (rounds replay in commit order; a slot already at its desired
+        version is skipped, a slot superseded by a later durable commit
+        is left alone).
+        """
+        pool = self.pool
+        p0 = pool.persist_count
+        verdicts: List[bool] = []
+        winners: List[Tuple[str, List[Tuple[str, int, int]]]] = []
+        claimed: Set[str] = set()
+        for op_id, targets in entries:
+            targets = [tuple(t) for t in targets]
+            ok = (all(des != exp for _n, exp, des in targets) and
+                  not any(name in claimed for name, _e, _d in targets) and
+                  all(self.slot_version(name) == exp
+                      for name, exp, _d in targets))
+            if ok:
+                claimed.update(name for name, _e, _d in targets)
+                winners.append((op_id, targets))
+            verdicts.append(ok)
+        if not winners:
+            return verdicts
+        # 2. desired data, visible but unflushed (redo rebuilds it from
+        # the record, so no per-file fence is needed)
+        for _op_id, targets in winners:
+            for name, _exp, des in targets:
+                pool.write(data_rel(name, des), payloads[name])
+        # 3. the ONE fence: a coalesced WAL record for the whole round
+        rid = self._next_round_id()
+        rec = {"id": rid, "kind": "round", "state": ST_SUCCEEDED,
+               "ops": [{"id": op_id,
+                        "targets": [list(t) for t in targets],
+                        "payloads": {name: _b64(payloads[name])
+                                     for name, _e, _d in targets}}
+                       for op_id, targets in winners],
+               "ts": time.time()}
+        pool.write_record(_desc_rel(rid), rec)
+        # 4. lazy finalize + lazy GC (recovery replays the record)
+        for _op_id, targets in winners:
+            for name, exp, des in targets:
+                pool.write_record(_slot_rel(name), {"version": des},
+                                  persist=False)
+                if exp:
+                    pool.delete(data_rel(name, exp))
+        rec["state"] = ST_COMPLETED
+        pool.write_record(_desc_rel(rid), rec, persist=False)
+        issued = pool.persist_count - p0
+        self.stats.flushes_issued += issued
+        self.stats.flushes_saved += sum(
+            _per_op_flush_cost(t) for _id, t in winners) - issued
+        self.stats.fences += 1
+        self.stats.round_commits += 1
+        self.stats.ops_committed += len(winners)
+        return verdicts
+
     # -- WAL hygiene --------------------------------------------------------------
     def prune_completed(self) -> int:
         """Remove spent descriptor records from ``wal/``; returns how
@@ -148,12 +323,48 @@ class Committer:
         forward/back.  Recovery only ever consults a descriptor through a
         slot's ``desc`` reference, so an unreferenced record cannot
         influence any future recover().
+
+        Round records (group commit) are the ONLY durable copy of their
+        round's effects until pruned, so dropping one first flushes the
+        final state it guards — each slot pointer and live data file
+        exactly once (dedup across rounds touching the same file).
+        This is the deferred half of the group-commit bargain: the
+        flushes leave the commit hot path and are amortized here.
         """
         pool = self.pool
         pruned = 0
+        flushed: Set[str] = set()        # dedup: one persist per file
+
+        def _flush_once(rel: str) -> None:
+            if rel not in flushed and pool.exists(rel):
+                pool.persist(rel)
+                flushed.add(rel)
+
         for fn in pool.listdir("wal"):
             rel = f"wal/{fn}"
             desc = pool.read_record(rel)
+            if desc is not None and desc.get("kind") == "round":
+                # REDO the round first (idempotent, exactly what
+                # recover() does): prune may legally run on a reopened
+                # pool before any recover, when the visible slot state
+                # still predates the round — flushing that stale state
+                # and dropping the record would lose the committed ops.
+                p0 = pool.persist_count
+                self._replay_round(desc)
+                for op in desc["ops"]:
+                    for name, _exp, des in op["targets"]:
+                        _flush_once(_slot_rel(name))
+                        _flush_once(data_rel(name, des))
+                pool.delete_persist(rel)
+                issued = pool.persist_count - p0
+                # honest ledger: the per-op protocol would pay one
+                # delete_persist per op record here (its commit-time
+                # flushes were already credited saved in commit_round,
+                # so every persist THIS pass issues claws savings back)
+                self.stats.flushes_issued += issued
+                self.stats.flushes_saved += len(desc["ops"]) - issued
+                pruned += 1
+                continue
             if desc is not None:
                 referenced = False
                 for name, _exp, _des in desc["targets"]:
@@ -164,18 +375,51 @@ class Committer:
                 if referenced:
                     continue                 # still in-flight: keep
             pool.delete_persist(rel)         # torn/spent: durably drop
+            self.stats.flushes_issued += 1   # same cost per-op pays
             pruned += 1
         return pruned
+
+    def _replay_round(self, desc: Dict) -> None:
+        """Idempotent redo of one durable round record (shared by
+        :meth:`recover` and :meth:`prune_completed`): a slot still at
+        its expected version rolls forward durably (data file rebuilt
+        from the embedded payload), a slot already at the desired
+        version only has its data file ensured, and a slot superseded
+        by a later durable commit is left alone."""
+        pool = self.pool
+        for op in desc["ops"]:
+            for name, exp, des in (tuple(t) for t in op["targets"]):
+                cur = self.slot_version(name)
+                if cur == exp:
+                    pool.write_persist(data_rel(name, des),
+                                       _unb64(op["payloads"][name]))
+                    pool.write_record(_slot_rel(name), {"version": des})
+                elif cur == des and not pool.exists(data_rel(name, des)):
+                    pool.write_persist(data_rel(name, des),
+                                       _unb64(op["payloads"][name]))
 
     # -- recovery -----------------------------------------------------------------
     def recover(self) -> Dict[str, int]:
         """Roll every slot forward/back from the persisted descriptors.
-        Idempotent; returns the recovered slot->version map."""
+        Idempotent; returns the recovered slot->version map.
+
+        Per-op descriptors act through slot references (reserve made the
+        pointer durable) and are order-independent; round records carry
+        no slot references — a durable round record means DECIDED, and
+        its ops replay in commit order (the id embeds the sequence):
+        a slot still at the expected version is rolled forward (data
+        file rebuilt from the record's embedded payload), a slot already
+        at the desired version only has its data file ensured, and a
+        slot superseded by a later durable commit is left alone."""
         pool = self.pool
+        rounds: List[Dict] = []
         for fn in pool.listdir("wal"):
             desc = pool.read_record(f"wal/{fn}")
             if desc is None:
                 pool.delete(f"wal/{fn}")   # torn/unpersisted WAL record
+                continue
+            if desc.get("kind") == "round":
+                rounds.append(desc)
                 continue
             t = {s: (e, d) for s, e, d in desc["targets"]}
             for name, (exp, des) in t.items():
@@ -183,9 +427,8 @@ class Committer:
                 if rec is not None and rec.get("desc") == desc["id"]:
                     ver = des if desc["state"] == ST_SUCCEEDED else exp
                     pool.write_record(_slot_rel(name), {"version": ver})
-            if desc["state"] != ST_COMPLETED:
-                desc["state"] = ST_COMPLETED if \
-                    desc["state"] == ST_SUCCEEDED else desc["state"]
+        for desc in sorted(rounds, key=lambda d: d["id"]):
+            self._replay_round(desc)
         # drop data files no slot references (uncommitted desired versions)
         live = set()
         for fn in pool.listdir("slots"):

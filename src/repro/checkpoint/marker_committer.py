@@ -9,8 +9,8 @@ from __future__ import annotations
 import time
 from typing import Dict, Sequence, Tuple
 
-from .committer import (Committer, ST_COMPLETED, ST_FAILED, ST_SUCCEEDED,
-                        _desc_rel, _slot_rel, data_rel)
+from .committer import (Committer, DurabilityStats, ST_COMPLETED, ST_FAILED,
+                        ST_SUCCEEDED, _desc_rel, _slot_rel, data_rel)
 from .pmem import PMemPool
 
 
@@ -19,8 +19,12 @@ def _marker_rel(name: str) -> str:
 
 
 class MarkerCommitter:
+    # dirty-flag markers are inherently per-slot; no round-level protocol
+    supports_rounds = False
+
     def __init__(self, pool: PMemPool):
         self.pool = pool
+        self.stats = DurabilityStats()
 
     # WAL hygiene is committer-agnostic (it reads only descriptors and
     # slot records, both shared vocabulary) — reuse the primary logic
@@ -41,6 +45,19 @@ class MarkerCommitter:
 
     def commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
                payloads: Dict[str, bytes]) -> bool:
+        pool = self.pool
+        p0 = pool.persist_count
+        try:
+            ok = self._commit(cid, targets, payloads)
+        finally:
+            self.stats.op_commits += 1
+            self.stats.flushes_issued += pool.persist_count - p0
+        if ok:
+            self.stats.ops_committed += 1
+        return ok
+
+    def _commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
+                payloads: Dict[str, bytes]) -> bool:
         pool = self.pool
         # versions must advance + never clobber a live version's data
         # (see Committer.commit steps 0/1)

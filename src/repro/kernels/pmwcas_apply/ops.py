@@ -34,6 +34,31 @@ def pmwcas_apply(words, addr, exp, des, *, use_kernel: bool = True,
     return new[:-1], success
 
 
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"),
+                   donate_argnums=(0,))
+def pmwcas_apply_stacked(words, addr, exp, des, *, use_kernel: bool = True,
+                         interpret: bool = True):
+    """S shard rounds in ONE dispatch: vmap of :func:`pmwcas_apply`.
+
+    words: uint32[S, W] stacked shard word tables; addr int32[S, B, K]
+    (<0 pad); exp/des uint32[S, B, K].  Returns
+    ``(new_words[S, W], success[S, B])``.
+
+    ``words`` is DONATED: callers pass a freshly stacked temporary (the
+    per-shard tables are untouched) and XLA reuses its buffer for the
+    output — the stacked service dispatch would otherwise hold two full
+    copies of every shard table per wave.  Like every jitted entry
+    point this retraces per shape; the service keeps the shapes it
+    feeds BUCKETED (``[S, B_cap, K_pow2]``) so steady-state waves hit
+    the trace cache instead of recompiling.
+    """
+    def one_shard(w, a, e, d):
+        return pmwcas_apply(w, a, e, d, use_kernel=use_kernel,
+                            interpret=interpret)
+
+    return jax.vmap(one_shard)(words, addr, exp, des)
+
+
 def reserve_slots(free_mask, requests, *, use_kernel: bool = True,
                   interpret: bool = True):
     """KV-cache slot reservation for the serving layer: request i atomically

@@ -32,6 +32,8 @@ from repro.core.model import (ALGORITHMS, CNT_CAS, CNT_CYCLES, CNT_FAILS,
 
 from .algorithms import (Algorithm, ORIGINAL, OURS, OURS_DF, PCAS,
                          STRATEGIES, resolve)
+from repro.checkpoint.committer import DurabilityStats
+
 from .backends import (BACKEND_FACTORIES, Backend, DurableBackend,
                        KernelBackend, SimBackend, UnsupportedBatch,
                        make_backend, register_backend)
@@ -49,6 +51,14 @@ from .session import SimSession
 def pmwcas_apply(words, addr, exp, des, **kw):
     """Batched MwCAS against a word table; see kernels.pmwcas_apply.ops."""
     from repro.kernels.pmwcas_apply.ops import pmwcas_apply as _impl
+    return _impl(words, addr, exp, des, **kw)
+
+
+def pmwcas_apply_stacked(words, addr, exp, des, **kw):
+    """S stacked shard rounds in one vmapped dispatch (words donated);
+    see kernels.pmwcas_apply.ops."""
+    from repro.kernels.pmwcas_apply.ops import \
+        pmwcas_apply_stacked as _impl
     return _impl(words, addr, exp, des, **kw)
 
 
@@ -92,7 +102,7 @@ __all__ = [
     "resolve", "ALGORITHMS",
     # backends
     "Backend", "SimBackend", "KernelBackend", "DurableBackend",
-    "UnsupportedBatch",
+    "UnsupportedBatch", "DurabilityStats",
     "make_backend", "register_backend", "BACKEND_FACTORIES",
     # session + sim surface
     "SimSession", "SimConfig", "SimResult", "CostModel",
@@ -104,8 +114,9 @@ __all__ = [
     # differential
     "run_differential", "increment_batch", "DifferentialReport",
     # batched primitives
-    "pmwcas_apply", "pmwcas_apply_ref", "pmwcas_success_ref",
-    "pmwcas_success_pallas", "reserve_slots", "sequential_oracle",
+    "pmwcas_apply", "pmwcas_apply_stacked", "pmwcas_apply_ref",
+    "pmwcas_success_ref", "pmwcas_success_pallas", "reserve_slots",
+    "sequential_oracle",
     # instrumentation vocabulary
     "CNT_CAS", "CNT_CYCLES", "CNT_FAILS", "CNT_FLUSH", "CNT_HELPS",
     "CNT_INVAL", "CNT_LOAD", "CNT_OPS", "CNT_STORE",

@@ -28,21 +28,22 @@ clients multiplex onto the kernel/durable substrates:
 See DESIGN.md Sec. 8 for the architecture and the cross-shard
 serialization argument; ``examples/kv_service.py`` is the walkthrough.
 """
-from .executor import (SerialShardExecutor, StackedKernelExecutor,
-                       build_rounds, execute_wave, schedule_wave,
-                       select_executor)
+from .executor import (DispatchStats, SerialShardExecutor,
+                       StackedKernelExecutor, build_rounds, execute_wave,
+                       schedule_wave, select_executor)
 from .journal import CrossShardJournal
 from .router import CROSS_SHARD, RoutedOp, ShardRouter
 from .scheduler import BatchScheduler, OpFuture, ServiceError
 from .service import KVFuture, KVService
-from .stats import ServiceStats, ShardStats, fresh_stats
+from .stats import (ServiceStats, ShardStats, collect_durability,
+                    fresh_stats)
 
 __all__ = [
     "ShardRouter", "RoutedOp", "CROSS_SHARD",
     "BatchScheduler", "OpFuture", "ServiceError",
     "KVService", "KVFuture",
-    "SerialShardExecutor", "StackedKernelExecutor", "build_rounds",
-    "schedule_wave", "execute_wave", "select_executor",
+    "SerialShardExecutor", "StackedKernelExecutor", "DispatchStats",
+    "build_rounds", "schedule_wave", "execute_wave", "select_executor",
     "CrossShardJournal",
-    "ServiceStats", "ShardStats", "fresh_stats",
+    "ServiceStats", "ShardStats", "collect_durability", "fresh_stats",
 ]

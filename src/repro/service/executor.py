@@ -12,6 +12,16 @@ with shard count instead of paying one dispatch per shard.
 Shards whose backend is not stackable (durable, sim, or kernel shards
 with mismatched shapes/flags) fall back to per-shard ``execute`` calls.
 
+The stacked dispatch is CACHED, not just batched (DESIGN.md Sec. 9.2):
+every distinct ``[S, B, K]`` shape fed to the jitted dispatch pays an
+XLA retrace, so the executor pins all three axes — S is the FULL kernel
+shard group (shards with no round this wave ride along as all-padding
+rows), B is the scheduler's ``round_cap``, K is the next power of two —
+and steady-state waves reuse one compiled program.  ``DispatchStats``
+counts traces vs cache hits and the padding bytes the stability costs;
+the stacked word tables are donated to the dispatch so the device never
+holds two copies per wave.
+
 Round FORMATION also lives here (:func:`build_rounds`): the service's
 conflict-defer rule — an op whose targets collide with an op already in
 this round's claim set is pushed to the NEXT round instead of being
@@ -23,12 +33,34 @@ applied at the batching layer).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.pmwcas import Backend, KernelBackend, MwCASOp, ops_to_arrays
+from repro.pmwcas import (Backend, KernelBackend, MwCASOp,
+                          ops_to_arrays, pmwcas_apply_stacked)
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Trace-cache accounting for the stacked kernel dispatch.
+
+    ``traces`` counts dispatches whose ``[S, B, K]`` (+ table width and
+    kernel flags) shape had never been seen by this executor — each one
+    is an XLA recompile.  ``hits`` are dispatches served by an
+    already-compiled shape; a steady-state service must retrace ZERO
+    times (the bench asserts it).  ``bytes_padded`` is what shape
+    stability costs: pad cells shipped to the device per dispatch
+    (addr+exp+des, 4 bytes each)."""
+    traces: int = 0
+    hits: int = 0
+    dispatches: int = 0          # stacked device calls issued
+    serial_rounds: int = 0       # rounds executed by per-shard fallback
+    bytes_padded: int = 0
+
+    def as_row(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
 
 
 def build_rounds(queues: Dict[int, Sequence], round_cap: int
@@ -93,6 +125,7 @@ def execute_wave(executor, backends: Sequence[Backend],
     verdicts = executor.execute(
         backends, {s: [p.local for p in entries]
                    for s, entries in rounds.items()})
+    stats.dispatch = getattr(executor, "stats", None)
     out: Dict[int, List[Tuple[object, bool]]] = {}
     for s, entries in rounds.items():
         st = stats.shards[s]
@@ -112,38 +145,39 @@ class SerialShardExecutor:
 
     name = "serial"
 
+    def __init__(self):
+        self.stats = DispatchStats()
+
     def execute(self, backends: Sequence[Backend],
                 rounds: Dict[int, List[MwCASOp]]) -> Dict[int, List[bool]]:
         out: Dict[int, List[bool]] = {}
         for shard, ops in rounds.items():
             verdicts = backends[shard].execute(ops)
             out[shard] = [bool(r.success) for r in verdicts]
+            self.stats.serial_rounds += 1
         return out
-
-
-@functools.lru_cache(maxsize=8)
-def _stacked_apply(use_kernel: bool, interpret: bool):
-    """One jitted vmap of the batched MwCAS primitive per flag pair."""
-    import jax
-
-    from repro.pmwcas import pmwcas_apply
-
-    def one_shard(words, addr, exp, des):
-        return pmwcas_apply(words, addr, exp, des, use_kernel=use_kernel,
-                            interpret=interpret)
-
-    return jax.jit(jax.vmap(one_shard))
 
 
 class StackedKernelExecutor:
     """Kernel shard rounds in ONE vmapped dispatch; serial fallback for
-    everything else.  ``last_stacked`` records how many shards the most
-    recent call actually stacked (tests and benches read it).
+    everything else.  ``last_stacked`` records how many shard rounds the
+    most recent call actually stacked (tests and benches read it).
 
-    Every distinct stacked shape pays one XLA compile, so the dispatch
-    pads to SHAPE-STABLE bounds instead of per-wave maxima: B up to
-    ``round_cap`` (when known — rounds never exceed it) and K up to the
-    next power of two.  Padded rows/slots are ``addr = -1`` no-ops.
+    Every distinct stacked shape pays one XLA retrace, so the dispatch
+    is pinned to SHAPE BUCKETS ``[S, B_bucket, K_bucket]``:
+
+    - **S** is the whole kernel shard group, every wave — a shard with
+      no round this wave rides along as all-padding rows rather than
+      shrinking the stack (a varying S would retrace);
+    - **B_bucket** is ``round_cap`` when known (rounds never exceed it),
+      else the next power of two of the widest round;
+    - **K_bucket** is the next power of two of the widest op.
+
+    Padded rows/slots are ``addr = -1`` no-ops.  The stacked word-table
+    temporary is donated to the dispatch (`pmwcas_apply_stacked`), and
+    ``stats``/:class:`DispatchStats` counts traces vs cache hits plus
+    the padding bytes bucketing ships — steady-state waves must be
+    all hits.
     """
 
     name = "stacked"
@@ -153,6 +187,8 @@ class StackedKernelExecutor:
         self.round_cap = round_cap
         self.last_stacked = 0
         self.stacked_dispatches = 0
+        self.stats = DispatchStats()
+        self._shapes: Set[Hashable] = set()     # mirror of XLA's trace cache
 
     @staticmethod
     def _group_key(backend: KernelBackend) -> Hashable:
@@ -161,47 +197,70 @@ class StackedKernelExecutor:
     def execute(self, backends: Sequence[Backend],
                 rounds: Dict[int, List[MwCASOp]]) -> Dict[int, List[bool]]:
         import jax.numpy as jnp
+        # group EVERY kernel shard (not just those with a round this
+        # wave): group membership fixes the stacked S axis
         groups: Dict[Hashable, List[int]] = {}
         rest: Dict[int, List[MwCASOp]] = {}
-        for shard, ops in rounds.items():
-            b = backends[shard]
+        for shard, b in enumerate(backends):
             if isinstance(b, KernelBackend):
                 groups.setdefault(self._group_key(b), []).append(shard)
-            else:
+        for shard, ops in rounds.items():
+            if not isinstance(backends[shard], KernelBackend):
                 rest[shard] = ops
         out: Dict[int, List[bool]] = {}
         self.last_stacked = 0
         for key, shards in groups.items():
+            active = [s for s in shards if s in rounds]
+            if not active:
+                continue
             if len(shards) < 2:
                 # a lone kernel shard gains nothing from stacking
                 rest[shards[0]] = rounds[shards[0]]
                 continue
             n_words, use_kernel, interpret = key
-            B = max(len(rounds[s]) for s in shards)
+            B = max(len(rounds[s]) for s in active)
             if self.round_cap and self.round_cap >= B:
                 B = self.round_cap
-            K = max(op.k for s in shards for op in rounds[s])
+            else:
+                B = 1 << (B - 1).bit_length()    # capless: pow2 bucket
+            K = max(op.k for s in active for op in rounds[s])
             K = 1 << (K - 1).bit_length()        # next power of two
+            shape = (len(shards), B, K, n_words, use_kernel, interpret)
+            if shape in self._shapes:
+                self.stats.hits += 1
+            else:
+                self._shapes.add(shape)
+                self.stats.traces += 1
             addr = np.full((len(shards), B, K), -1, np.int32)
             exp = np.zeros((len(shards), B, K), np.uint32)
             des = np.zeros((len(shards), B, K), np.uint32)
             for i, s in enumerate(shards):
+                if s not in rounds:
+                    continue
                 a, e, d = ops_to_arrays(rounds[s], K)
                 addr[i, :a.shape[0]] = a
                 exp[i, :a.shape[0]] = e
                 des[i, :a.shape[0]] = d
+            real_cells = sum(op.k for s in active for op in rounds[s])
+            self.stats.bytes_padded += \
+                (len(shards) * B * K - real_cells) * 3 * 4
             words = jnp.stack([backends[s].word_table() for s in shards])
-            new, success = _stacked_apply(use_kernel, interpret)(
+            new, success = pmwcas_apply_stacked(
                 words, jnp.asarray(addr), jnp.asarray(exp),
-                jnp.asarray(des))
+                jnp.asarray(des), use_kernel=use_kernel,
+                interpret=interpret)
             success = np.asarray(success)
             for i, s in enumerate(shards):
                 backends[s].set_word_table(new[i])
-                out[s] = [bool(v) for v in success[i, :len(rounds[s])]]
-            self.last_stacked += len(shards)
+                if s in rounds:
+                    out[s] = [bool(v)
+                              for v in success[i, :len(rounds[s])]]
+            self.last_stacked += len(active)
             self.stacked_dispatches += 1
+            self.stats.dispatches += 1
         if rest:
             out.update(self._serial.execute(backends, rest))
+            self.stats.serial_rounds += len(rest)
         return out
 
 

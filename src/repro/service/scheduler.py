@@ -34,7 +34,7 @@ from repro.pmwcas import Backend, MwCASOp, OpResult, Target
 from .executor import execute_wave, schedule_wave, select_executor
 from .journal import CrossShardJournal
 from .router import RoutedOp, ShardRouter
-from .stats import ServiceStats, fresh_stats
+from .stats import ServiceStats, collect_durability, fresh_stats
 
 
 class ServiceError(RuntimeError):
@@ -82,18 +82,27 @@ class _Pending:
 class BatchScheduler:
     def __init__(self, backends: Sequence[Backend], router: ShardRouter, *,
                  round_cap: int = 16, executor=None,
-                 journal: Optional[CrossShardJournal] = None):
+                 journal: Optional[CrossShardJournal] = None,
+                 journal_prune_every: int = 16):
+        """``journal_prune_every``: GC the cross-shard decision journal
+        every N serialized global rounds (0 disables).  Without the
+        cadence a long-running service grows ``xwal/`` one record per
+        cross-shard op, forever — the scheduler-level analogue of the
+        committer's ``prune_completed`` WAL hygiene."""
         if router.n_shards != len(backends):
             raise ValueError(f"router has {router.n_shards} shards, got "
                              f"{len(backends)} backends")
         if round_cap < 1:
             raise ValueError("round_cap must be >= 1")
+        if journal_prune_every < 0:
+            raise ValueError("journal_prune_every must be >= 0")
         self.backends = list(backends)
         self.router = router
         self.round_cap = round_cap
         self.executor = executor or select_executor(self.backends,
                                                     round_cap=round_cap)
         self.journal = journal
+        self.journal_prune_every = journal_prune_every
         self.stats: ServiceStats = fresh_stats(len(backends), round_cap)
         self._queues: Dict[int, List[_Pending]] = {
             s: [] for s in range(len(backends))}
@@ -184,6 +193,11 @@ class BatchScheduler:
             self.stats.cross_ops += 1
             self._complete(pending.future, ok)
             completed += 1
+        if (self.journal is not None and self.journal_prune_every and
+                self.stats.cross_rounds % self.journal_prune_every == 0):
+            # journal hygiene on a cadence: COMPLETED decision records
+            # are spent (redo never consults them) and safe to drop
+            self.stats.journal_pruned += self.journal.prune()
         return completed
 
     def _execute_cross(self, routed: RoutedOp) -> bool:
@@ -246,6 +260,12 @@ class BatchScheduler:
             self.journal.complete(rec["id"])
             redone += 1
         return redone
+
+    # -- instrumentation -------------------------------------------------------
+    def durability_stats(self):
+        """Merged committer flush accounting over the durable shards
+        (None when no shard is durable)."""
+        return collect_durability(self.backends)
 
     # -- completion ------------------------------------------------------------
     def _complete(self, fut: OpFuture, success: bool) -> None:

@@ -5,13 +5,34 @@ the substrate actually ran, how full each batch was, and how often ops
 were deferred (the service's replacement for a lost CAS) or lost a real
 conflict — plus client-visible latency measured in ROUNDS, the
 substrate-independent unit (a round is one backend batch; wall time per
-round is a property of the backend, not of the service)."""
+round is a property of the backend, not of the service).
+
+Two hot-path waste counters ride along (DESIGN.md Sec. 9): the
+executor's :class:`~repro.service.DispatchStats` (XLA traces vs cache
+hits of the stacked dispatch) attaches after every wave, and
+:func:`collect_durability` merges the per-shard committer
+:class:`repro.pmwcas.DurabilityStats` (flushes issued vs saved,
+commit fences) for durable deployments."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+from repro.pmwcas import DurabilityStats
+
+
+def collect_durability(backends: Sequence) -> Optional[DurabilityStats]:
+    """Merged flush accounting over every shard whose backend exposes
+    ``durability_stats`` (None when no shard is durable)."""
+    merged = None
+    for b in backends:
+        stats = getattr(b, "durability_stats", None)
+        if stats is not None:
+            merged = DurabilityStats() if merged is None else merged
+            merged.merge(stats)
+    return merged
 
 
 @dataclasses.dataclass
@@ -40,6 +61,10 @@ class ServiceStats:
     completed: int = 0           # futures completed (any status)
     cross_rounds: int = 0        # serialized global rounds
     cross_ops: int = 0           # cross-shard ops executed in them
+    journal_pruned: int = 0      # cross-shard records GC'd on cadence
+    # the executor's trace-cache accounting, attached after every wave
+    # (None until a wave ran or the executor carries no stats)
+    dispatch: Optional[object] = None
     latencies: List[int] = dataclasses.field(default_factory=list)
     by_status: Dict[str, int] = dataclasses.field(default_factory=dict)
 
@@ -118,7 +143,7 @@ class ServiceStats:
     # -- reporting -------------------------------------------------------------
     def as_row(self) -> Dict[str, float]:
         """Flat record for the benchmark JSON."""
-        return {
+        row = {
             "steps": self.steps, "rounds": self.rounds,
             "completed": self.completed,
             "ops_per_step": round(self.ops_per_step, 3),
@@ -129,6 +154,15 @@ class ServiceStats:
             "p50_latency_rounds": self.p50_latency_rounds,
             "p99_latency_rounds": self.p99_latency_rounds,
         }
+        if self.dispatch is not None:
+            row.update({
+                "traces": self.dispatch.traces,
+                "dispatch_hits": self.dispatch.hits,
+                "stacked_dispatches": self.dispatch.dispatches,
+                "serial_rounds": self.dispatch.serial_rounds,
+                "bytes_padded": self.dispatch.bytes_padded,
+            })
+        return row
 
     def summary(self) -> str:
         lines = [f"service: {self.completed}/{self.submitted} ops in "

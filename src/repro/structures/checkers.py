@@ -27,6 +27,14 @@ Both durable sweeps also exercise WAL hygiene in their teardown: after
 each recovery check the COMPLETED descriptor records are pruned
 (:meth:`DurableBackend.prune_completed`) and a second crash/recover
 cycle must reproduce the identical structure state.
+
+The durable sweeps take ``group_commit`` (which flush protocol is under
+sweep — the coalesced one-fence-per-round path is the default, matching
+:class:`repro.pmwcas.DurableBackend`) and ``batch`` (ops applied per
+round, so the coalesced path commits real multi-op rounds); the
+acceptable recovered states are computed from an oracle run's ROUND
+composition — a crash inside a batch may recover any round prefix,
+each round atomic at its commit fence (DESIGN.md Sec. 9.1).
 """
 from __future__ import annotations
 
@@ -62,19 +70,48 @@ def replay_effects(ops_with_status: Iterable[Tuple[KVOp, str]]
 
 def _durable_crash_sweep(kvops: Sequence[KVOp], root, attach, *,
                          committer: str, max_crash_points: int,
-                         what: str) -> int:
+                         what: str, group_commit: bool = True,
+                         batch: int = 1) -> int:
     """The shared sweep engine: ``attach(backend)`` builds/attaches the
     structure under test (it may itself persist — a crashing bootstrap
     is part of the sweep) and must expose ``apply`` +
-    ``check_integrity``."""
+    ``check_integrity``.
+
+    ``group_commit`` selects the flush protocol under sweep (the
+    coalesced one-fence-per-round path vs the per-op 3k+2-persist
+    protocol); ``batch`` applies ops ``batch`` at a time so the
+    coalesced path commits real multi-op rounds — the in-flight window
+    is then the whole torn round (atomic at the round-record fence:
+    either every round winner's effect recovers, or none does)."""
     import pathlib
     root = pathlib.Path(root)
+    batches = [list(kvops[i:i + batch])
+               for i in range(0, len(kvops), batch)]
+    # oracle pass on a clean pool: per-op statuses plus the per-batch
+    # ROUND composition, so a crash inside batch j has exactly the
+    # acceptable states {committed + first r rounds of batch j} — each
+    # round is atomic at its (group or per-op) commit fence
+    oracle = attach(DurableBackend(pool=PMemPool(root / "oracle"),
+                                   committer=committer,
+                                   group_commit=group_commit))
+    oracle_rounds: List[List[List[Tuple[KVOp, str]]]] = []
+    for b in batches:
+        res = oracle.apply(b)
+        hist = getattr(oracle, "last_history", None)
+        if hist is None:
+            # no round trace: treat the whole batch as one in-flight unit
+            oracle_rounds.append([list(zip(b, [r.status for r in res]))])
+        else:
+            oracle_rounds.append(
+                [[(b[idx], OK) for pos, idx in enumerate(tr.owners)
+                  if tr.success[pos]] for tr in hist])
     for crash_at in range(max_crash_points + 1):
         pool = PMemPool(root / f"crash{crash_at}",
                         crash_after_persists=crash_at)
-        backend = DurableBackend(pool=pool, committer=committer)
+        backend = DurableBackend(pool=pool, committer=committer,
+                                 group_commit=group_commit)
         committed: List[Tuple[KVOp, str]] = []
-        inflight: Optional[KVOp] = None
+        inflight: Optional[int] = None
         crashed = False
         struct = None
         try:
@@ -82,26 +119,29 @@ def _durable_crash_sweep(kvops: Sequence[KVOp], root, attach, *,
         except SimulatedCrash:
             crashed = True
         if struct is not None:
-            for op in kvops:
+            for j, b in enumerate(batches):
                 try:
-                    (res,) = struct.apply([op])
+                    res = struct.apply(b)
                 except SimulatedCrash:
-                    inflight = op
+                    inflight = j
                     crashed = True
                     break
-                committed.append((op, res.status))
+                committed.extend(zip(b, (r.status for r in res)))
         # crash (drop unpersisted writes), reopen, recover, re-attach
         recovered = backend.crash()
         items = attach(recovered).check_integrity()   # nothing torn
         base = replay_effects(committed)
         acceptable = [base]
         if inflight is not None:
-            acceptable.append(replay_effects(committed + [(inflight, OK)]))
+            rounds = oracle_rounds[inflight]
+            for r in range(1, len(rounds) + 1):
+                eff = [e for rnd in rounds[:r] for e in rnd]
+                acceptable.append(replay_effects(committed + eff))
         if items not in acceptable:
             raise CrashCheckError(
                 f"crash_at={crash_at}: recovered {what} {items}, expected "
                 f"one of {acceptable} (committed={len(committed)} ops, "
-                f"inflight={inflight})")
+                f"inflight batch={inflight})")
         # teardown WAL hygiene: pruning spent descriptors must not
         # change what a further crash/recover cycle reconstructs
         recovered.prune_completed()
@@ -131,23 +171,30 @@ def _durable_crash_sweep(kvops: Sequence[KVOp], root, attach, *,
 
 def check_durable_crash_sweep(kvops: Sequence[KVOp], n_buckets: int,
                               root, *, committer: str = "wal",
-                              max_crash_points: int = 400) -> int:
+                              max_crash_points: int = 400,
+                              group_commit: bool = True,
+                              batch: int = 1) -> int:
     """Crash-at-every-persist sweep over a whole logical workload.
 
     Returns the number of crash points swept (== persists of a clean
     run).  Raises :class:`CrashCheckError` (or
     :class:`repro.structures.TornStructure`) on any torn or lost state.
+    ``group_commit``/``batch`` select the flush protocol and the round
+    width under sweep (see :func:`_durable_crash_sweep`): with group
+    commit and ``batch > 1`` the sweep crosses every persist of the
+    COALESCED path, including the torn-round window.
     """
     return _durable_crash_sweep(
         kvops, root, lambda backend: HashMap(backend, n_buckets),
         committer=committer, max_crash_points=max_crash_points,
-        what="map")
+        what="map", group_commit=group_commit, batch=batch)
 
 
 def check_tree_crash_sweep(kvops: Sequence[KVOp], root, *,
                            leaf_cap: int = 2, root_cap: int = 4,
                            n_regions: int = 4, committer: str = "wal",
-                           max_crash_points: int = 1200) -> int:
+                           max_crash_points: int = 1200,
+                           group_commit: bool = True) -> int:
     """Crash-at-every-persist sweep over a multi-node tree workload.
 
     The workload is expected to drive :class:`BzTreeIndex` through at
@@ -161,13 +208,15 @@ def check_tree_crash_sweep(kvops: Sequence[KVOp], root, *,
     Returns the number of crash points swept.
     """
     from .bztree_index import BzTreeIndex
+
+    def _attach(backend):
+        return BzTreeIndex(backend, leaf_cap=leaf_cap, root_cap=root_cap,
+                           n_regions=n_regions)
+
     return _durable_crash_sweep(
-        kvops, root,
-        lambda backend: BzTreeIndex(backend, leaf_cap=leaf_cap,
-                                    root_cap=root_cap,
-                                    n_regions=n_regions),
-        committer=committer, max_crash_points=max_crash_points,
-        what="tree")
+        kvops, root, _attach, committer=committer,
+        max_crash_points=max_crash_points, what="tree",
+        group_commit=group_commit)
 
 
 def check_sim_crash_sweep(ops: Sequence[MwCASOp], *,

@@ -1,0 +1,49 @@
+"""scripts/perf_trend.py — trend comparison hygiene.
+
+Synthetic summary rows (``us_per_call == 0.0``: ``service_scaling``,
+``service_tree_gc``, ``durable_group_speedup``, ...) are derived
+ratios, not measurements; they must never be compared as throughput
+rows even when they carry an ``ops_per_s``-shaped field.
+"""
+import importlib.util
+import json
+import pathlib
+
+_SPEC = importlib.util.spec_from_file_location(
+    "perf_trend",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts/perf_trend.py")
+perf_trend = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(perf_trend)
+
+
+def _write(directory: pathlib.Path, rows):
+    directory.mkdir(parents=True, exist_ok=True)
+    (directory / "BENCH_service.json").write_text(
+        json.dumps({"section": "service", "rows": rows}))
+
+
+def test_synthetic_rows_are_skipped(tmp_path):
+    base = [
+        {"name": "real", "us_per_call": 12.5, "ops_per_s": 1000.0},
+        {"name": "service_scaling", "us_per_call": 0.0,
+         "ops_per_s": 900.0},              # synthetic: must be ignored
+    ]
+    cur = [
+        {"name": "real", "us_per_call": 12.5, "ops_per_s": 990.0},
+        {"name": "service_scaling", "us_per_call": 0.0,
+         "ops_per_s": 1.0},                # would be a -99.9% "drop"
+    ]
+    _write(tmp_path / "base", base)
+    _write(tmp_path / "cur", cur)
+    regressions = perf_trend.compare(tmp_path / "cur", tmp_path / "base",
+                                     threshold=0.20)
+    assert regressions == []
+
+
+def test_real_regressions_still_flagged(tmp_path):
+    _write(tmp_path / "base",
+           [{"name": "real", "us_per_call": 10.0, "ops_per_s": 1000.0}])
+    _write(tmp_path / "cur",
+           [{"name": "real", "us_per_call": 40.0, "ops_per_s": 250.0}])
+    regs = perf_trend.compare(tmp_path / "cur", tmp_path / "base", 0.20)
+    assert len(regs) == 1 and regs[0][1] == "real"

@@ -290,7 +290,8 @@ _FINAL = {0: 1, 8: 2, 16: 3, 1: 4, 9: 5, 10: 6, 17: 7, 2: 8}
 _CROSS_PAIRS = [[(1, 4), (9, 5)], [(10, 6), (17, 7)]]
 
 
-def _crash_sweep(root: pathlib.Path, crash_shard, crash_journal):
+def _crash_sweep(root: pathlib.Path, crash_shard, crash_journal,
+                 group_commit=True):
     """Sweep crash points over the chosen pool; assert (i) client-
     committed ops survive, (ii) no cross-shard op is half-applied."""
     crash_at, swept = 0, 0
@@ -300,7 +301,8 @@ def _crash_sweep(root: pathlib.Path, crash_shard, crash_journal):
                           crash_after_persists=(
                               crash_at if i == crash_shard else None))
                  for i in range(_S)]
-        backends = [DurableBackend(pool=p) for p in pools]
+        backends = [DurableBackend(pool=p, group_commit=group_commit)
+                    for p in pools]
         jpool = PMemPool(root / f"{tag}j",
                          crash_after_persists=(
                              crash_at if crash_journal else None))
@@ -338,8 +340,13 @@ def _crash_sweep(root: pathlib.Path, crash_shard, crash_journal):
 
 
 def test_crash_during_sharded_round_shard_pool(tmp_path):
-    swept = _crash_sweep(tmp_path, crash_shard=1, crash_journal=False)
+    swept = _crash_sweep(tmp_path / "perop", crash_shard=1,
+                         crash_journal=False, group_commit=False)
     assert swept > 5                # the sweep actually crossed the batch
+    # coalesced commit: far fewer fences on the shard pool, all swept
+    gswept = _crash_sweep(tmp_path / "group", crash_shard=1,
+                          crash_journal=False)
+    assert 1 < gswept < swept
 
 
 def test_crash_during_sharded_round_journal_pool(tmp_path):

@@ -211,8 +211,13 @@ def test_hashmap_durable_crash_at_every_persist(tmp_path):
     pair or loses a committed effect."""
     ops = [KVOp(INSERT, 5, 100), KVOp(INSERT, 7, 200), KVOp(UPDATE, 5, 111),
            KVOp(DELETE, 7), KVOp(INSERT, 9, 300)]
-    n = check_durable_crash_sweep(ops, n_buckets=8, root=tmp_path)
+    n = check_durable_crash_sweep(ops, n_buckets=8, root=tmp_path / "perop",
+                                  group_commit=False)
     assert n > 20                              # the sweep covered the protocol
+    # the coalesced path: one fence per op-round, so the clean run needs
+    # far fewer persists — and every one of them is still swept
+    g = check_durable_crash_sweep(ops, n_buckets=8, root=tmp_path / "group")
+    assert 0 < g < n
 
 
 # ---------------------------------------------------------------------------
@@ -656,16 +661,20 @@ def test_tree_region_gc_protects_pending_split(tmp_path):
     kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
     from repro import PMemPool, SimulatedCrash
     # find a crash point that lands between round 1 and the install:
-    # frozen routed leaf + non-empty pre-entry at the append position
+    # frozen routed leaf + non-empty pre-entry at the append position.
+    # The per-op protocol keeps the persist granularity this hunt was
+    # calibrated for (group commit collapses it to one fence per round)
     for crash_at in range(6, 200):
         pool = PMemPool(tmp_path / f"c{crash_at}",
                         crash_after_persists=crash_at)
-        t = BzTreeIndex(DurableBackend(pool=pool), **kw)
+        t = BzTreeIndex(DurableBackend(pool=pool, group_commit=False),
+                        **kw)
         try:
             t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30),
                      KVOp(INSERT, 9, 90)])
         except SimulatedCrash:
-            t2 = BzTreeIndex(DurableBackend(pool=pool.crash()), **kw)
+            t2 = BzTreeIndex(DurableBackend(pool=pool.crash(),
+                                            group_commit=False), **kw)
             if t2.root_count() == 0 and \
                     int(t2.backend.read(t2.child_addr(0))):
                 break
@@ -736,9 +745,12 @@ def test_tree_crash_sweep_through_split(tmp_path):
     fully-linked post-split tree, never a torn one."""
     ops = [KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30), KVOp(INSERT, 9, 90),
            KVOp(UPDATE, 5, 55), KVOp(DELETE, 3)]
-    n = check_tree_crash_sweep(ops, tmp_path, leaf_cap=2, root_cap=4,
-                               n_regions=4)
+    n = check_tree_crash_sweep(ops, tmp_path / "perop", leaf_cap=2,
+                               root_cap=4, n_regions=4, group_commit=False)
     assert n > 40                              # the sweep crossed the split
+    g = check_tree_crash_sweep(ops, tmp_path / "group", leaf_cap=2,
+                               root_cap=4, n_regions=4)
+    assert 0 < g < n                           # coalesced path: fewer fences
 
 
 def test_tree_sim_shadow_crash_sweep():
