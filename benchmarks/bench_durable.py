@@ -99,6 +99,26 @@ def run(quick: bool = False):
             emit(f"durable_group_recover,{recover_ms * 1e3:.0f},"
                  f"recover_ms={recover_ms:.1f};ok=1")
 
+    # -- WAL hygiene: the prune cadence bounds the on-disk log ---------------
+    svc = KVService(2, structure="hashmap", backend="durable",
+                    n_buckets=2 * spec.n_keys, round_cap=round_cap,
+                    group_commit=True, wal_prune_every=4)
+    svc.apply(load)
+    row = _window(svc, streams)
+    wal_records = sum(len(b.pool.listdir("wal")) for b in svc.backends)
+    emit(f"durable_kv_S2_pruned,{row['dt'] / row['n_ops'] * 1e6:.1f},"
+         f"ops_per_s={row['ops_per_s']:.0f};"
+         f"wal_records={wal_records};wal_pruned={svc.stats.wal_pruned};"
+         f"rounds={row['rounds']:.0f}")
+    assert svc.stats.wal_pruned > 0, "prune cadence never fired"
+    # without pruning the log holds ~1 record per committed round (load
+    # included); the cadence must keep it bounded by the prune interval
+    cap = 2 * svc.wal_prune_every * len(svc.backends)
+    assert wal_records <= cap, (
+        f"WAL grew to {wal_records} records despite wal_prune_every="
+        f"{svc.wal_prune_every} (cap {cap}) — the cadence is not bounding "
+        "the log")
+
     # -- the acceptance row ---------------------------------------------------
     speedup = rows["group"]["ops_per_s"] / max(rows["per_op"]["ops_per_s"],
                                                1e-9)

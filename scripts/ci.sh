@@ -47,6 +47,9 @@ python -m benchmarks.run --quick --only service --json-dir "$BENCH_DIR"
 # the durable section asserts group commit beats per-op commit on ops/s
 # and flush count (and seeds the .bench/baseline entry below)
 python -m benchmarks.run --quick --only durable --json-dir "$BENCH_DIR"
+# the chaos section runs every scenario family under fault injection and
+# asserts all completed histories pass the linearizability check
+python -m benchmarks.run --quick --only chaos --json-dir "$BENCH_DIR"
 
 echo "=== 5. perf trend (>20% ops/s regressions vs previous run) ==="
 # warn-only by default (first run has no baseline); PERF_STRICT=1 gates
@@ -62,5 +65,7 @@ python examples/range_index.py > /dev/null
 echo "range_index OK"
 python examples/kv_service.py > /dev/null
 echo "kv_service OK"
+python examples/chaos_demo.py > /dev/null
+echo "chaos_demo OK"
 
 echo "CI PASSED"

@@ -16,6 +16,9 @@ Public surface (import from here or from :mod:`repro.pmwcas`):
 - ``repro.service`` — sharded, batched execution for many-client
   workloads (``KVService``, ``BatchScheduler``, ``ShardRouter``, the
   stacked kernel dispatch, cross-shard journal and ``ServiceStats``).
+- ``repro.chaos`` — statechart-driven workload & fault harness
+  (``ScenarioDriver``, client/fault ``Machine`` statecharts, the named
+  scenario families, ``chaos_sweep`` and the linearizability checker).
 - checkpoint layer: ``Committer``, ``MarkerCommitter``,
   ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
   ``SimulatedCrash``.
@@ -69,16 +72,23 @@ _PMWCAS = (
     "TAG_DESC", "TAG_DESC_DIRTY", "TAG_DIRTY", "TAG_MASK", "TAG_PAYLOAD",
     "TAG_SHIFT",
 )
+_CHAOS = ("Scenario", "ScenarioDriver", "ChaosReport",
+          "ClientMachine", "ClientSpec", "FaultMachine", "FaultSpec",
+          "Machine", "Transition", "Event",
+          "HistoryRecorder", "check_history", "CheckStats",
+          "LinearizabilityError", "chaos_sweep", "default_scenarios",
+          "run_scenario")
 _LAZY = {name: "repro.pmwcas" for name in _PMWCAS}
 _LAZY.update({name: "repro.checkpoint" for name in _CHECKPOINT})
 _LAZY.update({name: "repro.structures" for name in _STRUCTURES})
 _LAZY.update({name: "repro.service" for name in _SERVICE})
+_LAZY.update({name: "repro.chaos" for name in _CHAOS})
 
-__all__ = sorted(_LAZY) + ["pmwcas", "service", "structures"]
+__all__ = sorted(_LAZY) + ["chaos", "pmwcas", "service", "structures"]
 
 
 def __getattr__(name: str) -> Any:
-    if name in ("pmwcas", "structures", "service"):
+    if name in ("chaos", "pmwcas", "structures", "service"):
         return importlib.import_module(f"repro.{name}")
     try:
         module = _LAZY[name]

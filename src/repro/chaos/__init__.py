@@ -1,0 +1,45 @@
+"""repro.chaos — statechart-driven workload & fault harness with
+linearizability checking.
+
+The layer above :mod:`repro.service`: adversarial *scenarios* instead of
+static workloads.  Seeded statechart machines drive client sessions
+(drifting Zipf skew, storm targeting, think/await pacing) and fault
+processes (crash-at-persist traps, crash-mid-scan, stragglers, shard
+storms); a :class:`ScenarioDriver` runs them against a live
+:class:`repro.service.KVService` wave by wave, injecting crashes and
+recovering in place; every completed verdict lands in a history the
+linearizability checker validates against a sequential oracle
+(DESIGN.md Sec. 10 explains why wave order makes that check linear-time).
+
+Public surface::
+
+    from repro.chaos import chaos_sweep
+    for report in chaos_sweep(seed=1):
+        print(report.summary())
+
+Everything is deterministic per scenario seed — byte-identical traces
+and final state across runs, including across crash/recover cycles.
+"""
+from .statechart import Event, Machine, Transition
+from .machines import (ARM_CRASH, CALM, CRASH_AT_PERSIST, CRASH_MID_SCAN,
+                       ClientMachine, ClientSpec, FAULT_KINDS, FaultMachine,
+                       FaultSpec, SHARD_STORM, STALL, STORM, STRAGGLER)
+from .history import (CheckStats, HistoryRecorder, LinearizabilityError,
+                      check_history)
+from .driver import ChaosReport, Scenario, ScenarioDriver
+from .scenarios import (FAMILIES, chaos_sweep, crash_mid_scan,
+                        default_scenarios, drifting_skew, hot_key_storm,
+                        run_scenario, sim_native, straggler)
+
+__all__ = [
+    "Event", "Machine", "Transition",
+    "ClientMachine", "ClientSpec", "FaultMachine", "FaultSpec",
+    "FAULT_KINDS", "CRASH_AT_PERSIST", "CRASH_MID_SCAN", "STRAGGLER",
+    "SHARD_STORM", "ARM_CRASH", "STALL", "STORM", "CALM",
+    "HistoryRecorder", "check_history", "CheckStats",
+    "LinearizabilityError",
+    "Scenario", "ScenarioDriver", "ChaosReport",
+    "FAMILIES", "default_scenarios", "run_scenario", "chaos_sweep",
+    "hot_key_storm", "crash_mid_scan", "straggler", "drifting_skew",
+    "sim_native",
+]

@@ -1,0 +1,283 @@
+"""ScenarioDriver: statechart machines x KVService x fault injection.
+
+One scenario run is a synchronous wave loop.  Each wave the driver
+
+1. ticks every client machine (ops land in their outboxes),
+2. ticks the fault machines and applies their directives — crash traps
+   arm a shard pool's ``crash_after_persists`` budget (the exact idiom
+   the structure crash sweeps use), stalls and storms post events back
+   to the client machines,
+3. submits the outbox ops (recording invocations in the history),
+4. runs ONE ``KVService.step()`` wave inside a ``SimulatedCrash``
+   handler: on a normal wave newly-completed futures are recorded and
+   their owners get ``done`` events; on a crash the service recovers
+   in place (``KVService.crash()``: every shard replays its WAL), the
+   recovered state is re-adopted into the history, and every in-flight
+   client gets a ``crashed`` event (its verdict is lost, not wrong).
+
+After the scheduled waves the driver disarms all traps, drains the
+in-flight tail, and hands the history to the linearizability checker.
+Every source of nondeterminism is a seeded machine PRNG, so the same
+scenario seed reproduces the run event-for-event — the determinism
+regression asserts byte-identical traces and final state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import SimulatedCrash
+from repro.service import KVService
+from repro.structures import KVOp, SCAN
+
+from .history import CheckStats, HistoryRecorder, check_history
+from .machines import (ARM_CRASH, CALM, ClientMachine, ClientSpec,
+                       FaultMachine, FaultSpec, STALL, STORM)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One reproducible chaos scenario (see :mod:`repro.chaos.scenarios`
+    for the named families)."""
+    name: str
+    family: str
+    client: ClientSpec
+    faults: Tuple[FaultSpec, ...] = ()
+    n_clients: int = 6
+    waves: int = 60
+    n_shards: int = 2
+    n_buckets: int = 32
+    backend: str = "durable"
+    structure: str = "hashmap"
+    load_keys: int = 12            # deterministic pre-populated keys
+    round_cap: int = 8
+    # low cadence: KVService.crash() restarts the step counter, so the
+    # interval must fit between crash gaps for pruning to ever fire
+    wal_prune_every: int = 6
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Outcome of one scenario run."""
+    scenario: Scenario
+    waves_run: int = 0
+    ops_invoked: int = 0
+    ops_completed: int = 0
+    crashes: int = 0
+    faults_fired: int = 0
+    wal_records: int = 0           # descriptor records left across shards
+    wal_pruned: int = 0
+    elapsed_s: float = 0.0
+    check: Optional[CheckStats] = None
+    trace_lines: List[str] = dataclasses.field(default_factory=list)
+    final_items: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ops_per_s(self) -> float:
+        return self.ops_completed / self.elapsed_s if self.elapsed_s else 0.0
+
+    def summary(self) -> str:
+        c = self.check
+        verdict = ("LINEARIZABLE" if c is not None and c.ok else "UNCHECKED")
+        return (f"{self.scenario.name}: {verdict} — "
+                f"{self.ops_completed}/{self.ops_invoked} ops in "
+                f"{self.waves_run} waves, {self.crashes} crashes, "
+                f"{self.faults_fired} faults fired"
+                + (f"; checked {c.immediates} immediates + {c.mutations} "
+                   f"mutations, {c.indeterminate} indeterminate"
+                   if c is not None else ""))
+
+
+class ScenarioDriver:
+    """Run one :class:`Scenario` to completion (see module docstring)."""
+
+    # drain budget after the scheduled waves: in-flight ops retry under
+    # the service's own EXHAUSTED bound, so this only guards a stuck loop
+    DRAIN_CAP = 512
+
+    def __init__(self, scenario: Scenario,
+                 durable_root=None):
+        self.scenario = scenario
+        self.durable_root = durable_root
+        sc = scenario
+        self.clients = [
+            ClientMachine(f"c{i}", sc.client, seed=sc.seed * 1000 + i)
+            for i in range(sc.n_clients)]
+        self.faults = [
+            FaultMachine(fs, seed=sc.seed * 1000 + 500 + j)
+            for j, fs in enumerate(sc.faults)]
+        self.recorder = HistoryRecorder()
+        self.report = ChaosReport(scenario=sc)
+        self.svc: Optional[KVService] = None
+        # outstanding futures: (future, owning client, driver-global seq)
+        # — the driver numbers ops itself because KVService.crash()
+        # rebuilds the service and restarts its internal sequence
+        self._outstanding: List[Tuple[object, ClientMachine, int]] = []
+        self._seq = 0
+
+    # -- service plumbing ------------------------------------------------------
+    def _build_service(self) -> KVService:
+        sc = self.scenario
+        return KVService(sc.n_shards, structure=sc.structure,
+                         backend=sc.backend, n_buckets=sc.n_buckets,
+                         round_cap=sc.round_cap,
+                         durable_root=self.durable_root,
+                         wal_prune_every=sc.wal_prune_every)
+
+    def _load_phase(self) -> None:
+        """Deterministic pre-population, recorded as the checker's base."""
+        sc = self.scenario
+        rng = np.random.default_rng(sc.seed + 0xC0A5)
+        keys = rng.permutation(sc.client.n_keys)[:sc.load_keys]
+        ops = [KVOp("insert", int(k) + 1, int(rng.integers(1, 1 << 20)))
+               for k in keys]
+        self.svc.apply(ops)
+        self.recorder.base(self.svc.check_integrity())
+
+    def _arm_crash(self, shard: int, persists_ahead: int) -> None:
+        pool = getattr(self.svc.backends[shard], "pool", None)
+        if pool is not None:                   # durable shards only
+            pool.crash_after = pool.persist_count + persists_ahead
+
+    def _disarm_all(self) -> None:
+        for b in self.svc.backends:
+            pool = getattr(b, "pool", None)
+            if pool is not None:
+                pool.crash_after = None
+
+    def _wal_record_count(self) -> int:
+        total = 0
+        for b in self.svc.backends:
+            pool = getattr(b, "pool", None)
+            if pool is not None:
+                total += len(pool.listdir("wal"))
+        return total
+
+    # -- wave mechanics --------------------------------------------------------
+    def _apply_directives(self) -> None:
+        for fm in self.faults:
+            for d in fm.drain_directives():
+                if d[0] == ARM_CRASH:
+                    self._arm_crash(d[1], d[2])
+                elif d[0] == STALL:
+                    self.clients[d[1]].post("stall", waves=d[2])
+                elif d[0] == STORM:
+                    for c in self.clients:
+                        c.post("storm", shard=d[1])
+                elif d[0] == CALM:
+                    for c in self.clients:
+                        c.post("calm")
+
+    def _submit_outboxes(self, wave: int) -> int:
+        scans = 0
+        for c in self.clients:
+            if c.outbox is None:
+                continue
+            op, c.outbox = c.outbox, None
+            fut = self.svc.submit(op, client=c.name)
+            self._seq += 1
+            self.recorder.invoke(wave, c.name, self._seq, op.kind,
+                                 op.key, op.value)
+            self.report.ops_invoked += 1
+            self._outstanding.append((fut, c, self._seq))
+            if op.kind == SCAN:
+                scans += 1
+        return scans
+
+    def _collect_completions(self, wave: int) -> int:
+        done = 0
+        still = []
+        for fut, c, seq in self._outstanding:
+            if fut.done:
+                self.recorder.complete(wave, seq, fut.result.status,
+                                       fut.result.value)
+                c.post("done", status=fut.result.status)
+                c.process()
+                self.report.ops_completed += 1
+                done += 1
+            else:
+                still.append((fut, c, seq))
+        self._outstanding = still
+        return done
+
+    def _handle_crash(self, wave: int) -> None:
+        self.report.crashes += 1
+        self.recorder.crash(wave)
+        # the rebuilt service starts fresh stats: bank the prune count
+        self.report.wal_pruned += self.svc.stats.wal_pruned
+        self.svc = self.svc.crash()            # per-shard WAL replay
+        self._disarm_all()                     # fresh pools carry no trap
+        self.recorder.adopt(wave, self.svc.check_integrity())
+        for _fut, c, _seq in self._outstanding:  # verdicts lost, not wrong
+            c.post("crashed")
+            c.process()
+        self._outstanding = []
+        for fm in self.faults:
+            fm.post("crash", wave=wave)
+            fm.process()
+
+    def _step_wave(self, wave: int, scans_pending: int) -> None:
+        for fm in self.faults:
+            fm.post("tick", wave=wave, scans_pending=scans_pending)
+            fm.process()
+        self._apply_directives()
+        try:
+            self.svc.step()
+        except SimulatedCrash:
+            self._handle_crash(wave)
+            return
+        self._collect_completions(wave)
+
+    # -- entry point -----------------------------------------------------------
+    def run(self) -> ChaosReport:
+        sc = self.scenario
+        t0 = time.monotonic()
+        self.svc = self._build_service()
+        self._load_phase()
+        wave = 0
+        for wave in range(1, sc.waves + 1):
+            for c in self.clients:
+                c.post("tick", wave=wave)
+                c.process()
+            scans = self._submit_outboxes(wave)
+            self._step_wave(wave, scans)
+        # drain the in-flight tail with faults disarmed (clients issue
+        # nothing new; the service's EXHAUSTED bound caps retries)
+        self._disarm_all()
+        for extra in range(self.DRAIN_CAP):
+            if not self._outstanding:
+                break
+            wave += 1
+            try:
+                self.svc.step()
+            except SimulatedCrash:             # a pre-armed trap's tail
+                self._handle_crash(wave)
+                continue
+            self._collect_completions(wave)
+        if self._outstanding:
+            raise RuntimeError(
+                f"{sc.name}: {len(self._outstanding)} ops still in flight "
+                f"after {self.DRAIN_CAP} drain waves")
+        self.report.waves_run = wave
+        self.report.final_items = self.svc.check_integrity()
+        self.recorder.final(self.report.final_items)
+        self.report.faults_fired = sum(fm.fired for fm in self.faults)
+        self.report.wal_records = self._wal_record_count()
+        self.report.wal_pruned += self.svc.stats.wal_pruned
+        self.report.elapsed_s = time.monotonic() - t0
+        self.report.trace_lines = self.trace_lines()
+        self.report.check = check_history(self.recorder.events)
+        return self.report
+
+    def trace_lines(self) -> List[str]:
+        """Canonical text trace: every machine's statechart trace plus
+        the history events, byte-comparable across runs."""
+        lines: List[str] = []
+        for m in self.clients + self.faults:
+            lines.extend(m.trace_lines())
+        lines.extend(self.recorder.canonical_lines())
+        return lines

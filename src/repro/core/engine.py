@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .model import (ALG_ORIGINAL, ALG_OURS, ALG_OURS_DF, ALG_PCAS,
-                    CNT_CAS, CNT_CYCLES,
+                    CNT_CAS, CNT_CYCLES, DES_INCREMENT,
                     CNT_FAILS, CNT_FLUSH, CNT_HELPS, CNT_INVAL, CNT_LOAD,
                     CNT_OPS, CNT_STORE, PC, ST_COMPLETED, ST_FAILED,
                     ST_SUCCEEDED, ST_UNDECIDED, SimConfig, TAG_DESC,
@@ -66,6 +66,14 @@ def _cur_op_addrs(cfg: SimConfig, st, tid):
     """Addresses of the thread's current operation (ops wrap around)."""
     idx = lax.rem(st["op_idx"][tid], jnp.int32(cfg.max_ops))
     return lax.dynamic_index_in_dim(st["ops"][tid], idx, axis=0, keepdims=False)
+
+
+def _cur_op_des(cfg: SimConfig, st, tid):
+    """Explicit desired payloads of the current op (DES_INCREMENT rows
+    mean "expected + 1" — the benchmark default)."""
+    idx = lax.rem(st["op_idx"][tid], jnp.int32(cfg.max_ops))
+    return lax.dynamic_index_in_dim(st["ops_des"][tid], idx, axis=0,
+                                    keepdims=False)
 
 
 def _desc_ptr(cfg: SimConfig, st, tid):
@@ -316,9 +324,12 @@ def br_init_desc(cfg, st, tid):
     st = _set(st, "d_state_dirty", tid, jnp.int32(0))
     st = dict(st)
     exp = st["exp"][tid]
+    des_tab = _cur_op_des(cfg, st, tid)
+    des = jnp.where(des_tab == jnp.uint32(DES_INCREMENT),
+                    exp + _u32(1), des_tab)
     st["d_addr"] = st["d_addr"].at[tid].set(addrs)
     st["d_exp"] = st["d_exp"].at[tid].set(exp << TAG_SHIFT)
-    st["d_des"] = st["d_des"].at[tid].set((exp + _u32(1)) << TAG_SHIFT)
+    st["d_des"] = st["d_des"].at[tid].set(des << TAG_SHIFT)
     st = _set(st, "success", tid, True)
     st = _ev_desc_store(cfg, st, tid, tid)
     st = _set(st, "tgt_idx", tid, jnp.int32(0))

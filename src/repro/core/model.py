@@ -61,6 +61,12 @@ ST_COMPLETED = 0
 ST_FAILED = 1
 ST_SUCCEEDED = 2
 ST_UNDECIDED = 3
+
+# Sentinel in the per-op desired-value table (``ops_des``): "desired =
+# expected + 1", the paper's benchmark shape.  Payloads are < 2**(32 -
+# TAG_SHIFT) (they are stored shifted), so the all-ones word can never be
+# a real desired value.
+DES_INCREMENT = np.uint32(0xFFFFFFFF)
 # The original algorithm's status word carries its own dirty bit; we track it
 # as a separate field on the descriptor ("d_state_dirty").
 
@@ -275,12 +281,27 @@ def generate_schedule(cfg: SimConfig) -> np.ndarray:
     return rng.integers(0, cfg.n_threads, size=cfg.n_steps, dtype=np.int32)
 
 
-def init_state(cfg: SimConfig, ops: Optional[np.ndarray] = None) -> Dict[str, Any]:
-    """Build the initial simulator state pytree."""
+def init_state(cfg: SimConfig, ops: Optional[np.ndarray] = None,
+               ops_des: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    """Build the initial simulator state pytree.
+
+    ``ops_des`` optionally supplies explicit desired payload values per
+    target (``[n_threads, max_ops, k]`` uint32, same shape as ``ops``);
+    entries equal to :data:`DES_INCREMENT` (the default everywhere) fall
+    back to the benchmark's ``expected + 1``.  This is how structure
+    rounds — whose desired values are real keys/values, not increments —
+    run natively on the cycle-accurate machines."""
     cfg.validate()
     T, k = cfg.n_threads, cfg.k
     if ops is None:
         ops = generate_ops(cfg)
+    ops = np.asarray(ops)
+    if ops_des is None:
+        ops_des = np.full(ops.shape, DES_INCREMENT, np.uint32)
+    ops_des = np.asarray(ops_des, np.uint32)
+    if ops_des.shape != ops.shape:
+        raise ValueError(f"ops_des shape {ops_des.shape} != ops shape "
+                         f"{ops.shape}")
     start_pc = PC.P_READ if cfg.algorithm == ALG_PCAS else PC.READ_TGT
     state = {
         # memory ------------------------------------------------------------
@@ -325,5 +346,6 @@ def init_state(cfg: SimConfig, ops: Optional[np.ndarray] = None) -> Dict[str, An
                               if jax.config.jax_enable_x64 else jnp.int32),
         # static data ---------------------------------------------------------
         "ops": jnp.asarray(ops),
+        "ops_des": jnp.asarray(ops_des, jnp.uint32),
     }
     return state

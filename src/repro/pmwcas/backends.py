@@ -43,7 +43,8 @@ from repro.checkpoint.marker_committer import MarkerCommitter
 from repro.checkpoint.pmem import PMemPool
 from repro.core import SimConfig
 from repro.core import engine as _engine
-from repro.core.model import ALG_PCAS, PC, TAG_MASK, TAG_SHIFT, init_state
+from repro.core.model import (ALG_PCAS, PC, TAG_MASK, TAG_SHIFT,
+                              init_state)
 
 from .algorithms import Algorithm, OURS, resolve
 from .descriptor import (Addr, Descriptor, MwCASOp, OpResult,
@@ -158,15 +159,31 @@ class SimBackend:
     order.  Success is the thread's own verdict (op_idx advanced); the
     word table is carried across ``execute`` calls.
 
-    Limits (``UnsupportedBatch`` otherwise) — these are the simulator's
-    benchmark-workload constraints, not API choices:
+    Arbitrary desired values are native: the machines take explicit
+    per-target desired payloads (``ops_des`` in the engine state), so
+    structure rounds — whose desireds are keys, values and TOMBSTONEs,
+    not increments — run without shadowing onto fresh words.  Two
+    per-batch remaps make that fit the engine:
 
-    - ops must be increment-shaped (desired == expected + 1) with expected
-      equal to the current stored value: the state machines read expected
-      values from memory rather than taking them as inputs;
-    - all ops in a batch share one width k, addresses sorted (the paper's
-      canonical embedding order), int addresses only;
-    - the PCAS strategy only supports k == 1.
+    - a *value codec*: the machines compare words only for equality, so
+      payloads are injectively renumbered into small ids (keeping every
+      real value, including ``TOMBSTONE = 2**32 - 1``, inside the
+      ``32 - TAG_SHIFT``-bit payload field) and decoded on write-back;
+    - *address compression + private pads*: touched addresses compress
+      to ``0..n-1`` (monotonic, so canonical sorted order is preserved)
+      and each op narrower than the batch's widest is padded to uniform
+      width with fresh private guard words (expected == desired == 0)
+      appended above the compressed range — invisible to the conflict
+      graph, required because one engine config has a single ``k``.
+
+    Limits (``UnsupportedBatch`` otherwise):
+
+    - expected values must equal the current stored values: one-shot
+      batches take pre-batch expecteds;
+    - addresses sorted (the paper's canonical embedding order), distinct
+      within an op, int only, in range;
+    - the PCAS strategy only supports k == 1 and increment-shaped ops
+      (its state machine is hard-wired to ``CAS(v -> v+1)``).
 
     Instrumentation: ``last_result``-style counters are exposed via
     ``counters`` after each batch (CAS/flush/invalidation totals), so the
@@ -189,27 +206,27 @@ class SimBackend:
 
     # -- validation ------------------------------------------------------------
     def _check_batch(self, ops: Sequence[MwCASOp]) -> int:
-        widths = {op.k for op in ops}
-        if len(widths) != 1:
-            raise UnsupportedBatch(
-                f"sim batches need one uniform width, got {sorted(widths)}")
-        (k,) = widths
-        if not self.algorithm.supports_k(k):
-            raise UnsupportedBatch(
-                f"{self.algorithm.name} supports k<="
-                f"{self.algorithm.max_k}, got {k}")
+        if not ops:
+            raise UnsupportedBatch("empty batch")
+        k_max = max(op.k for op in ops)
         for i, op in enumerate(ops):
-            if not op.is_increment():
+            if not self.algorithm.supports_k(op.k):
                 raise UnsupportedBatch(
-                    f"op {i} is not increment-shaped; the simulator reads "
-                    "expected values from memory (benchmark workload)")
+                    f"{self.algorithm.name} supports k<="
+                    f"{self.algorithm.max_k}, got {op.k}")
+            if self.algorithm.name == ALG_PCAS and not op.is_increment():
+                raise UnsupportedBatch(
+                    f"op {i} is not increment-shaped; the PCAS machine is "
+                    "hard-wired to CAS(v -> v+1)")
             addrs = list(op.addrs)
             if any(not isinstance(a, int) for a in addrs):
                 raise UnsupportedBatch(f"op {i} has non-int addresses")
             if addrs != sorted(addrs):
                 raise UnsupportedBatch(
                     f"op {i} addresses not in canonical sorted order")
-            if any(a >= self.n_words for a in addrs):
+            if len(set(addrs)) != len(addrs):
+                raise UnsupportedBatch(f"op {i} has duplicate addresses")
+            if any(a < 0 or a >= self.n_words for a in addrs):
                 raise UnsupportedBatch(f"op {i} address out of range")
             for t in op.targets:
                 if t.expected != int(self._values[t.addr]):
@@ -217,22 +234,50 @@ class SimBackend:
                         f"op {i} expects {t.expected} at word {t.addr} but "
                         f"the simulator holds {int(self._values[t.addr])}; "
                         "one-shot batches take pre-batch expected values")
-        return k
+        return k_max
 
     # -- Backend protocol ------------------------------------------------------
     def execute(self, ops: Sequence[MwCASOp]) -> List[OpResult]:
         import jax.numpy as jnp
-        k = self._check_batch(ops)
+        k_max = self._check_batch(ops)
         B = len(ops)
+        # compress touched addresses to 0..n-1 (monotonic) and lay private
+        # pad words above the compressed range
+        touched = sorted({a for op in ops for a in op.addrs})
+        index = {a: i for i, a in enumerate(touched)}
+        n_pads = sum(k_max - op.k for op in ops)
+        # value codec: renumber payloads into dense ids (0 always encodes
+        # to id 0, so pad words need no seeding)
+        vals = sorted({0} | {int(self._values[a]) for a in touched}
+                      | {int(t.desired) for op in ops for t in op.targets})
+        if len(vals) >= 1 << (32 - TAG_SHIFT):
+            raise UnsupportedBatch("too many distinct payload values")
+        enc = {v: i for i, v in enumerate(vals)}
+        dec = np.asarray(vals, np.uint32)
+        addr_rows: List[List[int]] = []
+        des_rows: List[List[int]] = []
+        next_pad = len(touched)
+        for op in ops:
+            pads = list(range(next_pad, next_pad + (k_max - op.k)))
+            next_pad += len(pads)
+            addr_rows.append([index[a] for a in op.addrs] + pads)
+            des_rows.append([enc[int(t.desired)] for t in op.targets]
+                            + [0] * len(pads))
+        # quantize the word count to a power of two so the jitted engine
+        # step sees a bounded family of shapes across batches
+        n_sim = max(k_max, len(touched) + n_pads)
+        n_sim = 1 << (n_sim - 1).bit_length() if n_sim > 1 else 1
         cfg = SimConfig(algorithm=self.algorithm.name, n_threads=B,
-                        n_words=self.n_words, k=k, max_ops=1, n_steps=1)
-        ops_arr = np.asarray([list(op.addrs) for op in ops],
-                             np.int32).reshape(B, 1, k)
-        st = init_state(cfg, ops_arr)
-        enc = self._values.astype(np.uint32) << TAG_SHIFT
+                        n_words=n_sim, k=k_max, max_ops=1, n_steps=1)
+        ops_arr = np.asarray(addr_rows, np.int32).reshape(B, 1, k_max)
+        des_arr = np.asarray(des_rows, np.uint32).reshape(B, 1, k_max)
+        st = init_state(cfg, ops_arr, ops_des=des_arr)
+        mem = np.zeros(n_sim, np.uint32)
+        mem[:len(touched)] = [enc[int(self._values[a])] for a in touched]
+        word = mem << TAG_SHIFT
         st = dict(st)
-        st["cache"] = jnp.asarray(enc)
-        st["pmem"] = jnp.asarray(enc)
+        st["cache"] = jnp.asarray(word)
+        st["pmem"] = jnp.asarray(word)
 
         step = _compiled_step(cfg)
         from repro.core.model import CNT_FAILS
@@ -264,7 +309,9 @@ class SimBackend:
         cache = np.asarray(st["cache"])
         tags = cache & int(TAG_MASK)
         assert (tags == 0).all(), "batch left non-payload tags in cache"
-        self._values = (cache >> TAG_SHIFT).astype(np.uint32)
+        ids = (cache >> TAG_SHIFT).astype(np.int64)
+        for a, i in index.items():          # decode ids back to real values
+            self._values[a] = dec[ids[i]]
         self.counters = np.asarray(st["counters"])
         return results_from_mask(ops, success, self.name)
 

@@ -83,12 +83,18 @@ class BatchScheduler:
     def __init__(self, backends: Sequence[Backend], router: ShardRouter, *,
                  round_cap: int = 16, executor=None,
                  journal: Optional[CrossShardJournal] = None,
-                 journal_prune_every: int = 16):
+                 journal_prune_every: int = 16,
+                 wal_prune_every: int = 0):
         """``journal_prune_every``: GC the cross-shard decision journal
         every N serialized global rounds (0 disables).  Without the
         cadence a long-running service grows ``xwal/`` one record per
         cross-shard op, forever — the scheduler-level analogue of the
-        committer's ``prune_completed`` WAL hygiene."""
+        committer's ``prune_completed`` WAL hygiene.
+
+        ``wal_prune_every``: the same hygiene one layer down — every N
+        round waves, durably drop spent PER-SHARD committer WAL records
+        (``DurableBackend.prune_completed``) on shards that support it
+        (0 disables)."""
         if router.n_shards != len(backends):
             raise ValueError(f"router has {router.n_shards} shards, got "
                              f"{len(backends)} backends")
@@ -96,6 +102,8 @@ class BatchScheduler:
             raise ValueError("round_cap must be >= 1")
         if journal_prune_every < 0:
             raise ValueError("journal_prune_every must be >= 0")
+        if wal_prune_every < 0:
+            raise ValueError("wal_prune_every must be >= 0")
         self.backends = list(backends)
         self.router = router
         self.round_cap = round_cap
@@ -103,6 +111,7 @@ class BatchScheduler:
                                                     round_cap=round_cap)
         self.journal = journal
         self.journal_prune_every = journal_prune_every
+        self.wal_prune_every = wal_prune_every
         self.stats: ServiceStats = fresh_stats(len(backends), round_cap)
         self._queues: Dict[int, List[_Pending]] = {
             s: [] for s in range(len(backends))}
@@ -142,8 +151,17 @@ class BatchScheduler:
             return 0
         self.stats.steps += 1
         if self._cross:
-            return self._global_round()
-        return self._shard_rounds()
+            completed = self._global_round()
+        else:
+            completed = self._shard_rounds()
+        if (self.wal_prune_every and
+                self.stats.steps % self.wal_prune_every == 0):
+            # per-shard committer WAL hygiene, on a wave cadence
+            for b in self.backends:
+                prune = getattr(b, "prune_completed", None)
+                if prune is not None:
+                    self.stats.wal_pruned += prune()
+        return completed
 
     def drain(self, max_steps: Optional[int] = None) -> int:
         """Step until every queue is empty; returns futures completed.

@@ -94,6 +94,7 @@ class KVService:
                  round_cap: int = 16, max_op_rounds: Optional[int] = None,
                  durable_root: Union[str, pathlib.Path, None] = None,
                  group_commit: bool = True,
+                 wal_prune_every: int = 0,
                  use_kernel: bool = False, interpret: bool = True,
                  executor=None):
         if n_shards < 1:
@@ -118,6 +119,9 @@ class KVService:
         self.round_cap = round_cap
         self.max_op_rounds = (2 * round_cap + 8 if max_op_rounds is None
                               else max_op_rounds)
+        if wal_prune_every < 0:
+            raise ValueError("wal_prune_every must be >= 0")
+        self.wal_prune_every = wal_prune_every
         self.executor = executor or select_executor(self.backends,
                                                     round_cap=round_cap)
         self.stats: ServiceStats = fresh_stats(n_shards, round_cap)
@@ -175,6 +179,17 @@ class KVService:
         if not self.pending_count:
             return 0
         self.stats.steps += 1
+        completed = self._execute_step()
+        if (self.wal_prune_every and
+                self.stats.steps % self.wal_prune_every == 0):
+            # per-shard WAL hygiene on a wave cadence (the committer
+            # analogue of the scheduler's journal_prune_every): without
+            # it a long-running durable service grows wal/ one record
+            # per committed round, forever
+            self.prune_wal()
+        return completed
+
+    def _execute_step(self) -> int:
         completed = 0
         compiled_queues: Dict[int, List[_PendingKV]] = {}
         for s in range(len(self.structs)):
@@ -205,6 +220,18 @@ class KVService:
                     losers.append(pending)       # recompile next wave
             self._requeue(s, losers)
         return completed
+
+    def prune_wal(self) -> int:
+        """Durably drop spent descriptor records on every shard whose
+        backend supports it; returns records pruned (also accumulated in
+        ``stats.wal_pruned``)."""
+        pruned = 0
+        for b in self.backends:
+            prune = getattr(b, "prune_completed", None)
+            if prune is not None:
+                pruned += prune()
+        self.stats.wal_pruned += pruned
+        return pruned
 
     def drain(self, max_steps: Optional[int] = None) -> int:
         """Step until no op is pending.  Per-op round budgets
@@ -366,4 +393,5 @@ class KVService:
                          backend=recovered, n_buckets=self.n_buckets,
                          round_cap=self.round_cap,
                          max_op_rounds=self.max_op_rounds,
+                         wal_prune_every=self.wal_prune_every,
                          **self.tree_shape)

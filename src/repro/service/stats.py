@@ -62,6 +62,7 @@ class ServiceStats:
     cross_rounds: int = 0        # serialized global rounds
     cross_ops: int = 0           # cross-shard ops executed in them
     journal_pruned: int = 0      # cross-shard records GC'd on cadence
+    wal_pruned: int = 0          # spent per-shard WAL records GC'd on cadence
     # the executor's trace-cache accounting, attached after every wave
     # (None until a wave ran or the executor carries no stats)
     dispatch: Optional[object] = None
@@ -151,6 +152,7 @@ class ServiceStats:
             "defer_rate": round(self.defer_rate, 3),
             "conflict_rate": round(self.conflict_rate, 3),
             "cross_rounds": self.cross_rounds,
+            "wal_pruned": self.wal_pruned,
             "p50_latency_rounds": self.p50_latency_rounds,
             "p99_latency_rounds": self.p99_latency_rounds,
         }

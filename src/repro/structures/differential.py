@@ -3,21 +3,24 @@
 ``repro.pmwcas.run_differential`` checks one hand-built increment batch;
 this module raises the stakes: an entire *logical* hash-map workload runs
 to completion on the kernel backend and the durable backend, and every
-executed CAS round is additionally replayed through the cycle-accurate
-simulator as a *shadow batch*.
+executed CAS round is additionally replayed NATIVELY through the
+cycle-accurate simulator — the real ops, real expected/desired payloads
+(keys, values, TOMBSTONEs), mixed widths and all.  The simulator takes
+explicit desired values (``SimBackend``'s per-batch value codec +
+internal padding), so no shadow translation is needed: each round seeds
+a fresh sim from the round's pre-state and must reproduce both the
+verdicts and the post-round word values.
 
-Why a shadow batch: the simulator's state machines execute the paper's
-benchmark shape (increments of the current value, uniform width).  A
-structure round compiled from a snapshot has exactly the conflict
-structure that matters — every op passes condition (a), so the verdict
-is a pure function of which ops share addresses.  The shadow batch maps
-each round's addresses onto fresh words (value 0) and each op onto an
-increment over its address set: same sharing graph, simulator-expressible.
-Shadow verdicts are compared whenever the conservative and
-winner-blocking semantics provably coincide for that graph (computed
+Verdicts are compared whenever the conservative and winner-blocking
+semantics provably coincide for that round's sharing graph (computed
 combinatorially below); rounds where they diverge are counted but not
 asserted — that divergence is a documented property of the substrates
 (DESIGN.md Sec. 3.2), not a bug.
+
+:func:`shadow_batch` — the older increment-over-fresh-words translation —
+remains for the simulator *crash* sweep, which runs rounds through
+``SimSession.crash_at``'s recovery invariant (an increment-counting
+check).
 """
 from __future__ import annotations
 
@@ -107,8 +110,15 @@ class StructDifferentialReport:
 
 def _replay_rounds_on_sim(history: List[RoundTrace],
                           algorithm: Union[str, Algorithm]) -> tuple:
-    """Shadow every executed round through SimBackend; returns
-    (checked, skipped, all_matched)."""
+    """Natively replay every executed round through SimBackend; returns
+    (checked, skipped, all_matched).
+
+    Each round's pre-state is reconstructed from the ops' expected
+    values (every round op passed condition (a), so expecteds are
+    mutually consistent) and the REAL ops run on the micro-op machines —
+    actual desired payloads, mixed widths, guard words.  A checked round
+    must reproduce the verdicts *and* the post-round values at every
+    touched word."""
     checked = skipped = 0
     matched = True
     for trace in history:
@@ -117,11 +127,28 @@ def _replay_rounds_on_sim(history: List[RoundTrace],
         if not np.array_equal(cons, wb):
             skipped += 1
             continue
-        n_shadow, shadow = shadow_batch(trace.ops)
-        sim = SimBackend(n_shadow, algorithm=algorithm)
-        verdicts = np.asarray([r.success for r in sim.execute(shadow)])
+        pre: Dict[int, int] = {}
+        for op in trace.ops:
+            for t in op.targets:
+                pre[t.addr] = t.expected
+        n_words = max(pre) + 1
+        values = np.zeros(n_words, np.uint32)
+        for a, v in pre.items():
+            values[a] = v
+        sim = SimBackend(n_words, algorithm=algorithm, values=values)
+        verdicts = np.asarray([r.success for r in sim.execute(trace.ops)])
         checked += 1
         if not np.array_equal(verdicts, np.asarray(trace.success)):
+            matched = False
+            continue
+        # post-round values: a winner's targets moved to desired, every
+        # other touched word still holds its pre-round value
+        post = dict(pre)
+        for ok, op in zip(trace.success, trace.ops):
+            if ok:
+                for t in op.targets:
+                    post[t.addr] = t.desired
+        if any(sim.read(a) != v for a, v in post.items()):
             matched = False
     return checked, skipped, matched
 

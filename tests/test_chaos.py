@@ -1,0 +1,272 @@
+"""repro.chaos: statechart machines, the scenario driver, determinism,
+and the linearizability checker (including its rejection power — a
+checker that never fails proves nothing)."""
+import dataclasses
+
+import pytest
+
+from repro.chaos import (ChaosReport, ClientMachine, ClientSpec, Event,
+                         FaultMachine, FaultSpec, LinearizabilityError,
+                         Machine, ScenarioDriver, Transition,
+                         CRASH_AT_PERSIST, SHARD_STORM, check_history,
+                         crash_mid_scan, default_scenarios,
+                         drifting_skew, hot_key_storm, sim_native,
+                         straggler)
+
+
+# ---------------------------------------------------------------------------
+# statechart substrate
+# ---------------------------------------------------------------------------
+
+def _toggle(seed=0):
+    return Machine("t", "off", [
+        Transition("off", "flip", "on"),
+        Transition("on", "flip", "off"),
+        Transition("*", "reset", "off"),
+    ], seed)
+
+
+def test_statechart_transitions_and_trace():
+    m = _toggle()
+    m.post("flip")
+    m.post("flip")
+    m.post("noise")          # no transition consumes it -> dropped
+    m.post("reset")
+    fired = m.process()
+    assert fired == 3
+    assert m.state == "off"
+    assert m.trace_lines() == [
+        "t:off--flip-->on", "t:on--flip-->off",
+        "t:off--noise-->.", "t:off--reset-->off"]
+
+
+def test_statechart_declaration_order_and_guards():
+    hits = []
+    m = Machine("g", "s", [
+        Transition("s", "go", "a", guard=lambda m, e: e.get("n", 0) > 3,
+                   action=lambda m, e: hits.append("first")),
+        Transition("s", "go", "b",
+                   action=lambda m, e: hits.append("second")),
+    ], 0)
+    m.post("go", n=1)
+    m.process()
+    assert m.state == "b" and hits == ["second"]
+    m2 = Machine("g", "s", m.transitions, 0)
+    m2.post("go", n=5)
+    m2.process()
+    assert m2.state == "a" and hits[-1] == "first"
+
+
+def test_event_payload_access():
+    ev = Event("e", {"k": 7})
+    assert ev["k"] == 7 and ev.get("missing", 9) == 9
+
+
+def test_client_machine_issue_await_cycle():
+    spec = ClientSpec(think_lo=0, think_hi=0)
+    c = ClientMachine("c0", spec, seed=1)
+    c.post("tick", wave=1)
+    c.process()
+    assert c.state == "await" and c.outbox is not None
+    op = c.outbox
+    assert 1 <= op.key <= spec.n_keys
+    c.post("tick", wave=2)      # still awaiting: no second issue
+    c.process()
+    assert c.issued == 1
+    c.post("done", status="ok")
+    c.process()
+    assert c.state == "think"
+
+
+def test_fault_machine_crash_schedule_fires_after_first_wave():
+    fm = FaultMachine(FaultSpec(kind=CRASH_AT_PERSIST, n_shards=2,
+                                first_wave=3), seed=4)
+    fm.post("tick", wave=1)
+    fm.process()
+    assert fm.state == "idle" and not fm.directives
+    fm.post("tick", wave=3)
+    fm.process()
+    assert fm.state == "armed"
+    (kind, shard, ahead), = fm.drain_directives()
+    assert kind == "arm_crash" and shard in (0, 1) and ahead >= 0
+    fm.post("crash", wave=5)
+    fm.process()
+    assert fm.state == "idle" and fm.fired == 1 and fm.next_wave > 5
+
+
+def test_fault_machine_storm_start_and_end():
+    fm = FaultMachine(FaultSpec(kind=SHARD_STORM, n_shards=2, first_wave=2,
+                                storm_len=3), seed=0)
+    fm.post("tick", wave=2)
+    fm.process()
+    assert fm.state == "storming"
+    (kind, shard), = fm.drain_directives()
+    assert kind == "storm"
+    fm.post("tick", wave=fm.until)
+    fm.process()
+    assert fm.state == "calm"
+    assert fm.drain_directives() == [("calm",)]
+
+
+# ---------------------------------------------------------------------------
+# linearizability checker on synthetic histories
+# ---------------------------------------------------------------------------
+
+def _history(*events):
+    return [("base", [[1, 10], [2, 20]])] + list(events)
+
+
+def test_checker_accepts_consistent_history():
+    stats = check_history(_history(
+        ("invoke", 1, "c0", 1, "read", 1, 0),
+        ("invoke", 1, "c1", 2, "update", 2, 99),
+        ("complete", 1, 1, "ok", 10),
+        ("complete", 1, 2, "ok", None),
+        ("invoke", 2, "c0", 3, "scan", 1, 0),
+        ("complete", 2, 3, "ok", 2),
+        ("final", [[1, 10], [2, 99]]),
+    ))
+    assert stats.ok and stats.immediates == 2 and stats.mutations == 1
+
+
+@pytest.mark.parametrize("tamper, match", [
+    (("complete", 1, 1, "ok", 11), "read"),           # wrong read value
+    (("complete", 1, 1, "not_found", None), "missed"),  # read misses live key
+    (("complete", 1, 2, "not_found", None), "missed"),  # update NF on live key
+], ids=["wrong-read-value", "read-misses-live", "update-misses-live"])
+def test_checker_rejects_corrupted_completion(tamper, match):
+    events = _history(
+        ("invoke", 1, "c0", 1, "read", 1, 0),
+        ("invoke", 1, "c1", 2, "update", 2, 99),
+        tamper,
+        ("final", [[1, 10], [2, 20]]),
+    )
+    with pytest.raises(LinearizabilityError, match=match):
+        check_history(events)
+
+
+def test_checker_rejects_double_mutation_per_wave():
+    events = _history(
+        ("invoke", 1, "c0", 1, "update", 1, 5),
+        ("invoke", 1, "c1", 2, "update", 1, 6),
+        ("complete", 1, 1, "ok", None),
+        ("complete", 1, 2, "ok", None),
+    )
+    with pytest.raises(LinearizabilityError, match="conflict-defer"):
+        check_history(events)
+
+
+def test_checker_rejects_final_state_mismatch():
+    with pytest.raises(LinearizabilityError, match="final"):
+        check_history(_history(("final", [[1, 10]])))
+
+
+def test_checker_crash_adopt_reachability():
+    # in-flight insert(3) at the crash: recovered state may or may not
+    # contain it — both adoptions must pass, any other value must not
+    prefix = _history(("invoke", 2, "c0", 1, "insert", 3, 30), ("crash", 2))
+    for adopted in ([[1, 10], [2, 20]], [[1, 10], [2, 20], [3, 30]]):
+        stats = check_history(prefix + [("adopt", 2, adopted),
+                                        ("final", adopted)])
+        assert stats.ok and stats.crashes == 1 and stats.indeterminate == 1
+    with pytest.raises(LinearizabilityError, match="unreachable"):
+        check_history(prefix + [("adopt", 2, [[1, 10], [2, 20], [3, 31]])])
+
+
+# ---------------------------------------------------------------------------
+# scenario driver end-to-end (durable shards, real crash/recover)
+# ---------------------------------------------------------------------------
+
+def _run(scenario, tmp_path, sub=""):
+    root = None if scenario.backend != "durable" else tmp_path / ("r" + sub)
+    return ScenarioDriver(scenario, durable_root=root).run()
+
+
+def test_chaos_sweep_four_durable_families_linearizable(tmp_path):
+    """The acceptance sweep: every durable family runs with injected
+    crash/recover cycles and every completed history checks out."""
+    crashes = 0
+    for i, make in enumerate((hot_key_storm, crash_mid_scan, straggler,
+                              drifting_skew)):
+        rep = _run(make(seed=0, waves=50), tmp_path, sub=str(i))
+        assert rep.check is not None and rep.check.ok, rep.summary()
+        assert rep.ops_completed > 30, rep.summary()
+        crashes += rep.crashes
+        assert rep.scenario.family in rep.summary()
+    assert crashes >= 3, "the sweep must actually inject crashes"
+
+
+def test_chaos_crash_marks_inflight_indeterminate(tmp_path):
+    rep = _run(drifting_skew(seed=0, waves=50), tmp_path)
+    assert rep.crashes >= 1
+    assert rep.check.crashes == rep.crashes
+    assert rep.ops_invoked >= rep.ops_completed
+    # completed + indeterminate-at-crash accounts for every invocation
+    assert rep.check.indeterminate == rep.ops_invoked - rep.ops_completed
+
+
+def test_chaos_wal_prune_runs_between_waves(tmp_path):
+    rep = _run(drifting_skew(seed=0, waves=50), tmp_path)
+    assert rep.wal_pruned > 0, "prune cadence never fired"
+    # pruning keeps the on-disk WAL bounded well below one record/round
+    total_rounds = rep.ops_completed
+    assert rep.wal_records < total_rounds
+
+
+def test_chaos_determinism_byte_identical_across_runs(tmp_path):
+    """Same seed -> byte-identical event traces and final state, even
+    across crash/recover cycles (the drifting_skew run crashes)."""
+    sc = drifting_skew(seed=3, waves=40)
+    a = _run(sc, tmp_path, sub="a")
+    b = _run(sc, tmp_path, sub="b")
+    assert a.crashes >= 1, "determinism test must cover crash/recover"
+    assert a.trace_lines == b.trace_lines
+    assert a.final_items == b.final_items
+    assert (a.ops_invoked, a.ops_completed, a.crashes) == \
+        (b.ops_invoked, b.ops_completed, b.crashes)
+    c = _run(dataclasses.replace(sc, seed=4, name="drifting_skew/s4"),
+             tmp_path, sub="c")
+    assert c.trace_lines != a.trace_lines, "seed must matter"
+
+
+def test_chaos_driver_rejects_corrupted_real_history(tmp_path):
+    """Tamper with one completed verdict from a REAL run: the checker
+    must notice (regression for the checker's rejection power)."""
+    sc = hot_key_storm(seed=0, waves=30)
+    driver = ScenarioDriver(sc, durable_root=tmp_path / "t")
+    rep = driver.run()
+    assert rep.check.ok
+    events = list(driver.recorder.events)
+    idx = next(i for i, ev in enumerate(events)
+               if ev[0] == "complete" and ev[3] == "ok"
+               and ev[4] is not None)
+    wave, seq, status, val = events[idx][1:]
+    events[idx] = ("complete", wave, seq, status, (val or 0) + 1)
+    with pytest.raises(LinearizabilityError):
+        check_history(events)
+
+
+def test_chaos_sim_native_scenario(tmp_path):
+    """SIM-backed shards run the full KV workload natively (desired
+    values on the micro-op machines — no crash faults by design)."""
+    rep = _run(sim_native(seed=0, waves=12), tmp_path)
+    assert rep.check is not None and rep.check.ok, rep.summary()
+    assert rep.crashes == 0 and rep.check.mutations > 0
+    assert rep.ops_completed == rep.ops_invoked
+
+
+def test_default_scenarios_cover_families():
+    scs = default_scenarios(seed=1, waves=30)
+    assert {s.family for s in scs} == {
+        "hot_key_storm", "crash_mid_scan", "straggler", "drifting_skew",
+        "sim_native"}
+    assert all(s.seed == 1 for s in scs)
+
+
+def test_chaos_report_summary_fields(tmp_path):
+    rep = _run(straggler(seed=0, waves=30), tmp_path)
+    assert isinstance(rep, ChaosReport)
+    assert "LINEARIZABLE" in rep.summary()
+    assert rep.ops_per_s > 0
+    assert rep.waves_run >= 30
+    assert rep.faults_fired >= 1, "straggler fault never fired"

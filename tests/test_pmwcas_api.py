@@ -187,14 +187,34 @@ def test_kernel_backend_carries_state():
 def test_sim_backend_rejects_inexpressible_batches():
     sb = SimBackend(8, algorithm=OURS, values=[1] * 8)
     with pytest.raises(UnsupportedBatch):
-        sb.execute([MwCASOp([(0, 1, 5)])])             # not an increment
-    with pytest.raises(UnsupportedBatch):
         sb.execute([MwCASOp([(0, 9, 10)])])            # stale expected
     with pytest.raises(UnsupportedBatch):
         sb.execute([MwCASOp([(3, 1, 2), (1, 1, 2)])])  # unsorted addrs
     with pytest.raises(UnsupportedBatch):              # PCAS is single-word
         SimBackend(8, algorithm=PCAS, values=[1] * 8).execute(
             [MwCASOp([(0, 1, 2), (1, 1, 2)])])
+    with pytest.raises(UnsupportedBatch):              # PCAS machine is v+1
+        SimBackend(8, algorithm=PCAS, values=[1] * 8).execute(
+            [MwCASOp([(0, 1, 5)])])
+
+
+def test_sim_backend_native_desired_values():
+    """Value jumps, TOMBSTONE-sized payloads, guard words and mixed
+    widths all run natively on the micro-op machines (no shadow words) —
+    the structure rounds' vocabulary."""
+    tomb = (1 << 32) - 1
+    sb = SimBackend(8, algorithm=OURS, values=[5, 5, 0, 0, 0, 0, 0, 0])
+    (r,) = sb.execute([MwCASOp([(0, 5, 9), (1, 5, tomb)])])   # jump + tomb
+    assert r.success and sb.read(0) == 9 and sb.read(1) == tomb
+    # guard word (desired == expected) participates but moves nothing
+    (g,) = sb.execute([MwCASOp([(0, 9, 9), (2, 0, 3)])])
+    assert g.success and sb.read(0) == 9 and sb.read(2) == 3
+    # mixed widths in one batch; conflict on a shared address still loses
+    res = sb.execute([MwCASOp([(3, 0, 7), (4, 0, 8), (5, 0, 2)]),
+                      MwCASOp([(6, 0, 4)]),
+                      MwCASOp([(4, 0, 1)])])
+    assert [x.success for x in res] == [True, True, False]
+    assert sb.values()[3:7].tolist() == [7, 8, 2, 4]
 
 
 def test_sim_backend_counts_real_work():

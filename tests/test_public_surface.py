@@ -79,6 +79,19 @@ def test_service_built_only_on_public_surface(path):
         f"repro.pmwcas / repro.structures, found {bad}")
 
 
+@pytest.mark.parametrize("path", files_under("src/repro/chaos"),
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_chaos_built_only_on_public_surface(path):
+    """The chaos harness sits on top of everything and composes the
+    layers below ONLY through their public surfaces."""
+    allowed = {"repro", "repro.pmwcas", "repro.structures", "repro.service"}
+    bad = [(mod, line) for mod, line in repro_imports(path)
+           if mod not in allowed]
+    assert not bad, (
+        f"{path.relative_to(REPO)} must build only on repro / "
+        f"repro.pmwcas / repro.structures / repro.service, found {bad}")
+
+
 def test_public_surface_covers_the_migration_table():
     """Names the DESIGN.md Sec. 4 table routes through the public
     surface actually resolve there (the cycle can end safely)."""
@@ -88,7 +101,8 @@ def test_public_surface_covers_the_migration_table():
                  "Committer", "PMemPool", "data_rel", "HashMap",
                  "SortedNode", "FreeListAllocator", "zipf_probs",
                  "OutOfRegions", "KVService", "BatchScheduler",
-                 "ShardRouter", "make_backend"):
+                 "ShardRouter", "make_backend", "ScenarioDriver",
+                 "chaos_sweep", "check_history"):
         assert hasattr(repro, name), name
     import repro.pmwcas as pm
     for name in ("MwCASOp", "Backend", "run_differential", "zipf_probs",

@@ -274,6 +274,38 @@ def test_struct_differential_mixed_mutations(tmp_path):
     assert rep.items["kernel"] == rep.items["durable"]
 
 
+def test_struct_differential_native_sim_no_shadow_skips(tmp_path):
+    """The sim replays REAL rounds natively — actual desired payloads
+    (wide values, TOMBSTONE deletes) and mixed op kinds in one round —
+    so no round is skipped for expressibility.  The only legitimate
+    skip is a genuine semantic divergence (winner-blocking !=
+    conservative verdicts), which this conflict-light workload avoids."""
+    ops = ([KVOp(INSERT, k, (k << 8) | 1) for k in (2, 6, 10, 14)]
+           + [KVOp(UPDATE, 2, 123456), KVOp(DELETE, 6),
+              KVOp(INSERT, 18, 7), KVOp(DELETE, 10), KVOp(INSERT, 6, 999)])
+    rep = run_struct_differential(ops, n_buckets=8, durable_root=tmp_path)
+    assert rep.agree, rep.summary()
+    assert rep.sim_rounds_checked >= 3
+    assert rep.sim_rounds_skipped == 0, \
+        "native replay must not skip rounds for expressibility"
+
+
+def test_tree_differential_native_sim_mixed_width_rounds(tmp_path):
+    """BzTree rounds mix op widths (meta-word CAS vs slot+meta inserts);
+    the native replay pads each op privately and still verifies every
+    round (no winner-blocking divergence in this workload)."""
+    spec = WorkloadSpec(n_ops=16, n_keys=10, read=0.1, update=0.3,
+                        insert=0.4, delete=0.2, seed=5, batch=4)
+    ops = load_phase(spec) + compile_workload(spec)
+    rep = run_struct_differential(ops, structure="bztree", leaf_cap=2,
+                                  root_cap=8, n_regions=10,
+                                  durable_root=tmp_path)
+    assert rep.agree, rep.summary()
+    assert rep.sim_rounds_checked >= 3
+    assert rep.sim_rounds_skipped == 0
+    assert rep.items["kernel"] == rep.items["durable"]
+
+
 # ---------------------------------------------------------------------------
 # BzTree-style sorted node
 # ---------------------------------------------------------------------------
