@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro.obs import get_registry
 from repro.service import KVService
 from repro.structures import WorkloadSpec, client_streams, load_phase
 
@@ -53,7 +54,7 @@ def _window(svc: KVService, streams) -> dict:
     svc.check_integrity()
     d1 = svc.durability_stats()
     won = sum(s.ops_won for s in svc.stats.shards)
-    return {
+    row = {
         "n_ops": n, "dt": dt,
         "ops_per_s": n / dt,
         "persists": sum(b.pool.persist_count for b in svc.backends) - p0,
@@ -63,6 +64,22 @@ def _window(svc: KVService, streams) -> dict:
         "fences": d1.fences - d0.fences,
         "rounds": sum(s.rounds for s in svc.stats.shards),
     }
+    # the obs registry keeps an INDEPENDENT ledger of the same commits
+    # (reset_stats zeroed it at window start): the committer accounts
+    # both through one helper, so the two must agree to the exact
+    # integer — any drift means double- or under-counting somewhere
+    reg = get_registry()
+    for key in ("flushes_issued", "flushes_saved", "fences"):
+        obs = reg.value(key, component="committer")
+        assert obs == row[key], (
+            f"registry {key}={obs} disagrees with DurabilityStats "
+            f"delta {row[key]} — the two ledgers drifted")
+    obs_committed = reg.value("ops_committed", component="committer")
+    row["obs_flushes_issued"] = int(
+        reg.value("flushes_issued", component="committer"))
+    row["flushes_per_commit"] = (row["obs_flushes_issued"]
+                                 / max(1, obs_committed))
+    return row
 
 
 def run(quick: bool = False):
@@ -85,6 +102,8 @@ def run(quick: bool = False):
         emit(f"durable_kv_S2_{mode},{row['dt'] / row['n_ops'] * 1e6:.1f},"
              f"ops_per_s={row['ops_per_s']:.0f};"
              f"persists_per_commit={ppc:.2f};"
+             f"flushes_per_commit={row['flushes_per_commit']:.3f};"
+             f"obs_flushes_issued={row['obs_flushes_issued']};"
              f"flushes_issued={row['flushes_issued']};"
              f"flushes_saved={row['flushes_saved']};"
              f"fences={row['fences']};rounds={row['rounds']:.0f}")
@@ -96,8 +115,13 @@ def run(quick: bool = False):
             recover_ms = (time.time() - t0) * 1e3
             assert rec.check_integrity() == before, \
                 "group-commit recovery lost or tore state"
+            # the committer times its own recover() into the registry
+            # (one sample per shard this window)
+            recover_us = get_registry().histogram(
+                "recover_us", component="committer").total_us
             emit(f"durable_group_recover,{recover_ms * 1e3:.0f},"
-                 f"recover_ms={recover_ms:.1f};ok=1")
+                 f"recover_ms={recover_ms:.1f};"
+                 f"recover_us={recover_us:.0f};ok=1")
 
     # -- WAL hygiene: the prune cadence bounds the on-disk log ---------------
     svc = KVService(2, structure="hashmap", backend="durable",

@@ -67,7 +67,9 @@ def _emit_kv(name: str, row: dict):
          f"defer_rate={row['defer_rate']:.3f};"
          f"conflict_rate={row['conflict_rate']:.3f};"
          f"p50_rounds={row['p50_latency_rounds']:.0f};"
-         f"p99_rounds={row['p99_latency_rounds']:.0f}" + extra)
+         f"p99_rounds={row['p99_latency_rounds']:.0f};"
+         f"p50_us={row['p50_latency_us']:.1f};"
+         f"p99_us={row['p99_latency_us']:.1f}" + extra)
 
 
 def run(quick: bool = False):

@@ -4,8 +4,14 @@ per section, writes a machine-readable ``BENCH_<section>.json`` (the
 same rows as structured records: ops/s, CAS/op, flush/op, ... per
 variant) so successive runs form a perf trajectory.
 
+Each JSON-emitting section also runs under the span tracer and writes a
+``TRACE_<section>.json`` Chrome trace (Perfetto-loadable) next to its
+BENCH file — pass ``--no-trace`` to skip (e.g. when timing the benches
+themselves).
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
                                             [--json-dir DIR | --no-json]
+                                            [--no-trace]
 """
 from __future__ import annotations
 
@@ -43,6 +49,8 @@ def main() -> None:
                     help="directory for BENCH_<section>.json (default: cwd)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the machine-readable output")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the per-section TRACE_<section>.json")
     args = ap.parse_args()
 
     from . import (bench_blocks, bench_chaos, bench_ckpt, bench_diff,
@@ -70,17 +78,31 @@ def main() -> None:
     if not args.no_json:
         json_dir = pathlib.Path(args.json_dir)
         json_dir.mkdir(parents=True, exist_ok=True)
+    trace = json_dir is not None and not args.no_trace
+    if trace:
+        from repro.obs import (disable_tracing, enable_tracing,
+                               export_chrome_trace, get_tracer)
     print("name,us_per_call,derived")
     for name in names:
         print(f"# --- {name} ---", flush=True)
         common.drain_rows()                     # anything stray stays out
+        if trace:
+            enable_tracing().clear()
         t0 = time.time()
-        sections[name](quick=args.quick)
+        try:
+            sections[name](quick=args.quick)
+        finally:
+            if trace:
+                disable_tracing()
         rows = common.drain_rows()
         if json_dir is not None:
             path = write_section_json(json_dir, name, rows, args.quick,
                                       time.time() - t0)
             print(f"# wrote {path}", file=sys.stderr, flush=True)
+            if trace and len(get_tracer()):
+                tpath = export_chrome_trace(
+                    json_dir / f"TRACE_{name}.json")
+                print(f"# wrote {tpath}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -51,12 +51,17 @@ python -m benchmarks.run --quick --only durable --json-dir "$BENCH_DIR"
 # asserts all completed histories pass the linearizability check
 python -m benchmarks.run --quick --only chaos --json-dir "$BENCH_DIR"
 
-echo "=== 5. perf trend (>20% ops/s regressions vs previous run) ==="
+echo "=== 5. obs smoke (disabled-tracer overhead + Chrome-trace schema) ==="
+# asserts the off-path costs < 5% of a sim workload and that a traced
+# chaos scenario exports a schema-valid (Perfetto-loadable) trace
+python scripts/obs_smoke.py
+
+echo "=== 6. perf trend (>20% regressions vs previous run) ==="
 # warn-only by default (first run has no baseline); PERF_STRICT=1 gates
 python scripts/perf_trend.py "$BENCH_DIR" .bench/baseline \
     ${PERF_STRICT:+--strict}
 
-echo "=== 6. cross-backend differential examples ==="
+echo "=== 7. cross-backend differential examples ==="
 python examples/quickstart.py > /dev/null
 echo "quickstart OK"
 python examples/kv_store.py > /dev/null

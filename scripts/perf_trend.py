@@ -2,10 +2,13 @@
 """Perf-trend check over the machine-readable benchmark output.
 
 Compares every ``BENCH_<section>.json`` in CURRENT_DIR against the copy
-from the previous run in BASELINE_DIR and flags throughput regressions:
-a row regresses when its ops/s metric drops by more than --threshold
-(default 20%).  Rows are matched by their ``name`` field; the metric is
-``ops_per_s`` where present, else ``mops`` (the simulator sections).
+from the previous run in BASELINE_DIR and flags regressions in BOTH
+directions: a row regresses when its throughput metric drops by more
+than --threshold (default 20%), or when a lower-is-better metric
+(``flushes_per_commit``, ``recover_us`` — the paper's headline costs)
+RISES by more than the threshold.  Rows are matched by their ``name``
+field; the throughput metric is ``ops_per_s`` where present, else
+``mops`` (the simulator sections).
 After the comparison the current JSONs are promoted to the baseline, so
 successive CI runs always compare against their predecessor.
 
@@ -27,6 +30,10 @@ import shutil
 import sys
 
 METRICS = ("ops_per_s", "mops")      # first present wins
+# cost metrics where a RISE is the regression (flush accounting comes
+# straight from the obs registry, so a rise means the flush-elision
+# machinery — the paper's point — has leaked flushes back in)
+LOWER_IS_BETTER = ("flushes_per_commit", "recover_us")
 
 
 def _metric(row: dict):
@@ -49,7 +56,9 @@ def _rows_by_name(path: pathlib.Path) -> dict:
 
 def compare(current: pathlib.Path, baseline: pathlib.Path,
             threshold: float) -> list:
-    """[(section, row name, metric, old, new, drop fraction), ...]"""
+    """[(section, row name, metric, old, new, change fraction,
+    direction), ...] — direction is "drop" for throughput metrics and
+    "rise" for the lower-is-better cost metrics."""
     regressions = []
     for cur_path in sorted(current.glob("BENCH_*.json")):
         base_path = baseline / cur_path.name
@@ -59,15 +68,26 @@ def compare(current: pathlib.Path, baseline: pathlib.Path,
             continue
         base_rows = _rows_by_name(base_path)
         for name, row in _rows_by_name(cur_path).items():
+            if name not in base_rows:
+                continue
+            base = base_rows[name]
             key, new = _metric(row)
-            if key is None or name not in base_rows:
-                continue
-            old_key, old = _metric(base_rows[name])
-            if old_key != key or not old:
-                continue
-            drop = (old - new) / old
-            if drop > threshold:
-                regressions.append((section, name, key, old, new, drop))
+            if key is not None:
+                old_key, old = _metric(base)
+                if old_key == key and old:
+                    drop = (old - new) / old
+                    if drop > threshold:
+                        regressions.append(
+                            (section, name, key, old, new, drop, "drop"))
+            for key in LOWER_IS_BETTER:
+                new, old = row.get(key), base.get(key)
+                if not isinstance(new, (int, float)) or \
+                        not isinstance(old, (int, float)) or old <= 0:
+                    continue
+                rise = (new - old) / old
+                if rise > threshold:
+                    regressions.append(
+                        (section, name, key, old, new, rise, "rise"))
     return regressions
 
 
@@ -90,9 +110,10 @@ def main() -> int:
     args = ap.parse_args()
 
     regressions = compare(args.current, args.baseline, args.threshold)
-    for section, name, key, old, new, drop in regressions:
+    for section, name, key, old, new, change, direction in regressions:
+        sign = "-" if direction == "drop" else "+"
         print(f"perf-trend REGRESSION [{section}] {name}: "
-              f"{key} {old:.0f} -> {new:.0f} (-{drop:.0%})")
+              f"{key} {old:.3g} -> {new:.3g} ({sign}{change:.0%})")
     if not regressions:
         print(f"perf-trend: no >{args.threshold:.0%} regressions")
     failing = bool(regressions and args.strict)

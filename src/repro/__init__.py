@@ -19,6 +19,9 @@ Public surface (import from here or from :mod:`repro.pmwcas`):
 - ``repro.chaos`` — statechart-driven workload & fault harness
   (``ScenarioDriver``, client/fault ``Machine`` statecharts, the named
   scenario families, ``chaos_sweep`` and the linearizability checker).
+- ``repro.obs`` — unified tracing & metrics (``MetricsRegistry``,
+  ``SpanTracer``, ``span``, ``enable_tracing``, the Chrome-trace/JSONL
+  exporters and the ``fold_*`` stats adapters).
 - checkpoint layer: ``Committer``, ``MarkerCommitter``,
   ``CheckpointManager``, ``AsyncCheckpointManager``, ``PMemPool``,
   ``SimulatedCrash``.
@@ -78,17 +81,27 @@ _CHAOS = ("Scenario", "ScenarioDriver", "ChaosReport",
           "HistoryRecorder", "check_history", "CheckStats",
           "LinearizabilityError", "chaos_sweep", "default_scenarios",
           "run_scenario")
+_OBS = ("MetricsRegistry", "Counter", "Gauge", "Histogram",
+        "get_registry", "reset_metrics",
+        "SpanTracer", "span", "instant", "get_tracer",
+        "enable_tracing", "disable_tracing", "tracing_enabled",
+        "chrome_trace", "export_chrome_trace", "export_jsonl",
+        "validate_chrome_trace", "span_tree",
+        "fold_durability", "fold_dispatch", "fold_service",
+        "fold_check", "fold_workload")
 _LAZY = {name: "repro.pmwcas" for name in _PMWCAS}
 _LAZY.update({name: "repro.checkpoint" for name in _CHECKPOINT})
 _LAZY.update({name: "repro.structures" for name in _STRUCTURES})
 _LAZY.update({name: "repro.service" for name in _SERVICE})
 _LAZY.update({name: "repro.chaos" for name in _CHAOS})
+_LAZY.update({name: "repro.obs" for name in _OBS})
 
-__all__ = sorted(_LAZY) + ["chaos", "pmwcas", "service", "structures"]
+__all__ = sorted(_LAZY) + ["chaos", "obs", "pmwcas", "service",
+                           "structures"]
 
 
 def __getattr__(name: str) -> Any:
-    if name in ("chaos", "pmwcas", "structures", "service"):
+    if name in ("chaos", "obs", "pmwcas", "structures", "service"):
         return importlib.import_module(f"repro.{name}")
     try:
         module = _LAZY[name]

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import SimulatedCrash
+from repro.obs import span
 from repro.service import KVService
 from repro.structures import KVOp, SCAN
 
@@ -54,8 +55,9 @@ class Scenario:
     structure: str = "hashmap"
     load_keys: int = 12            # deterministic pre-populated keys
     round_cap: int = 8
-    # low cadence: KVService.crash() restarts the step counter, so the
-    # interval must fit between crash gaps for pruning to ever fire
+    # prune cadence in waves; the step counter survives crashes (the
+    # recovered service carries its ServiceStats), so the cadence fires
+    # on schedule regardless of crash spacing
     wal_prune_every: int = 6
     seed: int = 0
 
@@ -207,9 +209,10 @@ class ScenarioDriver:
     def _handle_crash(self, wave: int) -> None:
         self.report.crashes += 1
         self.recorder.crash(wave)
-        # the rebuilt service starts fresh stats: bank the prune count
-        self.report.wal_pruned += self.svc.stats.wal_pruned
-        self.svc = self.svc.crash()            # per-shard WAL replay
+        # the recovered service carries its stats (monotone counters),
+        # so the prune count is read once, at end of run
+        with span("chaos.crash_recover", wave=wave):
+            self.svc = self.svc.crash()        # per-shard WAL replay
         self._disarm_all()                     # fresh pools carry no trap
         self.recorder.adopt(wave, self.svc.check_integrity())
         for _fut, c, _seq in self._outstanding:  # verdicts lost, not wrong
@@ -236,38 +239,41 @@ class ScenarioDriver:
     def run(self) -> ChaosReport:
         sc = self.scenario
         t0 = time.monotonic()
-        self.svc = self._build_service()
-        self._load_phase()
-        wave = 0
-        for wave in range(1, sc.waves + 1):
-            for c in self.clients:
-                c.post("tick", wave=wave)
-                c.process()
-            scans = self._submit_outboxes(wave)
-            self._step_wave(wave, scans)
-        # drain the in-flight tail with faults disarmed (clients issue
-        # nothing new; the service's EXHAUSTED bound caps retries)
-        self._disarm_all()
-        for extra in range(self.DRAIN_CAP):
-            if not self._outstanding:
-                break
-            wave += 1
-            try:
-                self.svc.step()
-            except SimulatedCrash:             # a pre-armed trap's tail
-                self._handle_crash(wave)
-                continue
-            self._collect_completions(wave)
-        if self._outstanding:
-            raise RuntimeError(
-                f"{sc.name}: {len(self._outstanding)} ops still in flight "
-                f"after {self.DRAIN_CAP} drain waves")
-        self.report.waves_run = wave
-        self.report.final_items = self.svc.check_integrity()
-        self.recorder.final(self.report.final_items)
-        self.report.faults_fired = sum(fm.fired for fm in self.faults)
-        self.report.wal_records = self._wal_record_count()
-        self.report.wal_pruned += self.svc.stats.wal_pruned
+        with span("chaos.scenario", scenario=sc.name,
+                  family=sc.family) as sp:
+            self.svc = self._build_service()
+            self._load_phase()
+            wave = 0
+            for wave in range(1, sc.waves + 1):
+                for c in self.clients:
+                    c.post("tick", wave=wave)
+                    c.process()
+                scans = self._submit_outboxes(wave)
+                self._step_wave(wave, scans)
+            # drain the in-flight tail with faults disarmed (clients
+            # issue nothing new; the EXHAUSTED bound caps retries)
+            self._disarm_all()
+            for extra in range(self.DRAIN_CAP):
+                if not self._outstanding:
+                    break
+                wave += 1
+                try:
+                    self.svc.step()
+                except SimulatedCrash:         # a pre-armed trap's tail
+                    self._handle_crash(wave)
+                    continue
+                self._collect_completions(wave)
+            if self._outstanding:
+                raise RuntimeError(
+                    f"{sc.name}: {len(self._outstanding)} ops still in "
+                    f"flight after {self.DRAIN_CAP} drain waves")
+            self.report.waves_run = wave
+            self.report.final_items = self.svc.check_integrity()
+            self.recorder.final(self.report.final_items)
+            self.report.faults_fired = sum(fm.fired for fm in self.faults)
+            self.report.wal_records = self._wal_record_count()
+            self.report.wal_pruned += self.svc.stats.wal_pruned
+            sp.set(waves=wave, crashes=self.report.crashes)
         self.report.elapsed_s = time.monotonic() - t0
         self.report.trace_lines = self.trace_lines()
         self.report.check = check_history(self.recorder.events)

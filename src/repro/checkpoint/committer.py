@@ -32,6 +32,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..obs import get_registry, span
 from .pmem import PMemPool
 
 ST_COMPLETED, ST_FAILED, ST_SUCCEEDED = "COMPLETED", "FAILED", "SUCCEEDED"
@@ -97,6 +98,19 @@ def _per_op_flush_cost(targets: Sequence[Tuple[str, int, int]]) -> int:
     return 3 * len(targets) + 2
 
 
+def _account(stats: DurabilityStats, **deltas: int) -> None:
+    """Apply deltas to BOTH the dataclass and the global registry with
+    the same integers — the two ledgers can never drift, which is what
+    lets the durable benchmark assert exact equality between them.
+    Registry series carry ``component="committer"`` so live commit
+    accounting never collides with the adapter snapshot folds."""
+    registry = get_registry()
+    for name, delta in deltas.items():
+        setattr(stats, name, getattr(stats, name) + delta)
+        if delta:
+            registry.counter(name, component="committer").inc(delta)
+
+
 class Committer:
     """The paper's algorithm (no dirty flags)."""
 
@@ -133,13 +147,15 @@ class Committer:
         """
         pool = self.pool
         p0 = pool.persist_count
-        try:
-            ok = self._commit(cid, targets, payloads)
-        finally:
-            self.stats.op_commits += 1
-            self.stats.flushes_issued += pool.persist_count - p0
-        if ok:
-            self.stats.ops_committed += 1
+        with span("wal.commit", slots=len(targets)) as sp:
+            try:
+                ok = self._commit(cid, targets, payloads)
+            finally:
+                _account(self.stats, op_commits=1,
+                         flushes_issued=pool.persist_count - p0)
+            if ok:
+                _account(self.stats, ops_committed=1)
+            sp.set(ok=ok, flushes=pool.persist_count - p0)
         return ok
 
     def _commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
@@ -262,53 +278,56 @@ class Committer:
         """
         pool = self.pool
         p0 = pool.persist_count
-        verdicts: List[bool] = []
-        winners: List[Tuple[str, List[Tuple[str, int, int]]]] = []
-        claimed: Set[str] = set()
-        for op_id, targets in entries:
-            targets = [tuple(t) for t in targets]
-            ok = (all(des != exp for _n, exp, des in targets) and
-                  not any(name in claimed for name, _e, _d in targets) and
-                  all(self.slot_version(name) == exp
-                      for name, exp, _d in targets))
-            if ok:
-                claimed.update(name for name, _e, _d in targets)
-                winners.append((op_id, targets))
-            verdicts.append(ok)
-        if not winners:
+        with span("wal.commit_round", ops=len(entries)) as sp:
+            verdicts: List[bool] = []
+            winners: List[Tuple[str, List[Tuple[str, int, int]]]] = []
+            claimed: Set[str] = set()
+            for op_id, targets in entries:
+                targets = [tuple(t) for t in targets]
+                ok = (all(des != exp for _n, exp, des in targets) and
+                      not any(name in claimed
+                              for name, _e, _d in targets) and
+                      all(self.slot_version(name) == exp
+                          for name, exp, _d in targets))
+                if ok:
+                    claimed.update(name for name, _e, _d in targets)
+                    winners.append((op_id, targets))
+                verdicts.append(ok)
+            sp.set(winners=len(winners))
+            if not winners:
+                return verdicts
+            # 2. desired data, visible but unflushed (redo rebuilds it
+            # from the record, so no per-file fence is needed)
+            for _op_id, targets in winners:
+                for name, _exp, des in targets:
+                    pool.write(data_rel(name, des), payloads[name])
+            # 3. the ONE fence: a coalesced WAL record for the round
+            rid = self._next_round_id()
+            rec = {"id": rid, "kind": "round", "state": ST_SUCCEEDED,
+                   "ops": [{"id": op_id,
+                            "targets": [list(t) for t in targets],
+                            "payloads": {name: _b64(payloads[name])
+                                         for name, _e, _d in targets}}
+                           for op_id, targets in winners],
+                   "ts": time.time()}
+            pool.write_record(_desc_rel(rid), rec)
+            # 4. lazy finalize + lazy GC (recovery replays the record)
+            for _op_id, targets in winners:
+                for name, exp, des in targets:
+                    pool.write_record(_slot_rel(name), {"version": des},
+                                      persist=False)
+                    if exp:
+                        pool.delete(data_rel(name, exp))
+            rec["state"] = ST_COMPLETED
+            pool.write_record(_desc_rel(rid), rec, persist=False)
+            issued = pool.persist_count - p0
+            _account(self.stats, flushes_issued=issued,
+                     flushes_saved=sum(_per_op_flush_cost(t)
+                                       for _id, t in winners) - issued,
+                     fences=1, round_commits=1,
+                     ops_committed=len(winners))
+            sp.set(flushes=issued)
             return verdicts
-        # 2. desired data, visible but unflushed (redo rebuilds it from
-        # the record, so no per-file fence is needed)
-        for _op_id, targets in winners:
-            for name, _exp, des in targets:
-                pool.write(data_rel(name, des), payloads[name])
-        # 3. the ONE fence: a coalesced WAL record for the whole round
-        rid = self._next_round_id()
-        rec = {"id": rid, "kind": "round", "state": ST_SUCCEEDED,
-               "ops": [{"id": op_id,
-                        "targets": [list(t) for t in targets],
-                        "payloads": {name: _b64(payloads[name])
-                                     for name, _e, _d in targets}}
-                       for op_id, targets in winners],
-               "ts": time.time()}
-        pool.write_record(_desc_rel(rid), rec)
-        # 4. lazy finalize + lazy GC (recovery replays the record)
-        for _op_id, targets in winners:
-            for name, exp, des in targets:
-                pool.write_record(_slot_rel(name), {"version": des},
-                                  persist=False)
-                if exp:
-                    pool.delete(data_rel(name, exp))
-        rec["state"] = ST_COMPLETED
-        pool.write_record(_desc_rel(rid), rec, persist=False)
-        issued = pool.persist_count - p0
-        self.stats.flushes_issued += issued
-        self.stats.flushes_saved += sum(
-            _per_op_flush_cost(t) for _id, t in winners) - issued
-        self.stats.fences += 1
-        self.stats.round_commits += 1
-        self.stats.ops_committed += len(winners)
-        return verdicts
 
     # -- WAL hygiene --------------------------------------------------------------
     def prune_completed(self) -> int:
@@ -340,43 +359,48 @@ class Committer:
                 pool.persist(rel)
                 flushed.add(rel)
 
-        for fn in pool.listdir("wal"):
-            rel = f"wal/{fn}"
-            desc = pool.read_record(rel)
-            if desc is not None and desc.get("kind") == "round":
-                # REDO the round first (idempotent, exactly what
-                # recover() does): prune may legally run on a reopened
-                # pool before any recover, when the visible slot state
-                # still predates the round — flushing that stale state
-                # and dropping the record would lose the committed ops.
-                p0 = pool.persist_count
-                self._replay_round(desc)
-                for op in desc["ops"]:
-                    for name, _exp, des in op["targets"]:
-                        _flush_once(_slot_rel(name))
-                        _flush_once(data_rel(name, des))
-                pool.delete_persist(rel)
-                issued = pool.persist_count - p0
-                # honest ledger: the per-op protocol would pay one
-                # delete_persist per op record here (its commit-time
-                # flushes were already credited saved in commit_round,
-                # so every persist THIS pass issues claws savings back)
-                self.stats.flushes_issued += issued
-                self.stats.flushes_saved += len(desc["ops"]) - issued
+        with span("wal.prune_completed") as sp:
+            for fn in pool.listdir("wal"):
+                rel = f"wal/{fn}"
+                desc = pool.read_record(rel)
+                if desc is not None and desc.get("kind") == "round":
+                    # REDO the round first (idempotent, exactly what
+                    # recover() does): prune may legally run on a
+                    # reopened pool before any recover, when the visible
+                    # slot state still predates the round — flushing
+                    # that stale state and dropping the record would
+                    # lose the committed ops.
+                    p0 = pool.persist_count
+                    self._replay_round(desc)
+                    for op in desc["ops"]:
+                        for name, _exp, des in op["targets"]:
+                            _flush_once(_slot_rel(name))
+                            _flush_once(data_rel(name, des))
+                    pool.delete_persist(rel)
+                    issued = pool.persist_count - p0
+                    # honest ledger: the per-op protocol would pay one
+                    # delete_persist per op record here (its commit-time
+                    # flushes were already credited saved in
+                    # commit_round, so every persist THIS pass issues
+                    # claws savings back)
+                    _account(self.stats, flushes_issued=issued,
+                             flushes_saved=len(desc["ops"]) - issued)
+                    pruned += 1
+                    continue
+                if desc is not None:
+                    referenced = False
+                    for name, _exp, _des in desc["targets"]:
+                        rec = pool.read_record(_slot_rel(name))
+                        if rec is not None and \
+                                rec.get("desc") == desc["id"]:
+                            referenced = True
+                            break
+                    if referenced:
+                        continue             # still in-flight: keep
+                pool.delete_persist(rel)     # torn/spent: durably drop
+                _account(self.stats, flushes_issued=1)  # per-op cost too
                 pruned += 1
-                continue
-            if desc is not None:
-                referenced = False
-                for name, _exp, _des in desc["targets"]:
-                    rec = pool.read_record(_slot_rel(name))
-                    if rec is not None and rec.get("desc") == desc["id"]:
-                        referenced = True
-                        break
-                if referenced:
-                    continue                 # still in-flight: keep
-            pool.delete_persist(rel)         # torn/spent: durably drop
-            self.stats.flushes_issued += 1   # same cost per-op pays
-            pruned += 1
+            sp.set(pruned=pruned)
         return pruned
 
     def _replay_round(self, desc: Dict) -> None:
@@ -412,30 +436,56 @@ class Committer:
         at the desired version only has its data file ensured, and a
         slot superseded by a later durable commit is left alone."""
         pool = self.pool
-        rounds: List[Dict] = []
-        for fn in pool.listdir("wal"):
-            desc = pool.read_record(f"wal/{fn}")
-            if desc is None:
-                pool.delete(f"wal/{fn}")   # torn/unpersisted WAL record
-                continue
-            if desc.get("kind") == "round":
-                rounds.append(desc)
-                continue
-            t = {s: (e, d) for s, e, d in desc["targets"]}
-            for name, (exp, des) in t.items():
-                rec = pool.read_record(_slot_rel(name))
-                if rec is not None and rec.get("desc") == desc["id"]:
-                    ver = des if desc["state"] == ST_SUCCEEDED else exp
-                    pool.write_record(_slot_rel(name), {"version": ver})
-        for desc in sorted(rounds, key=lambda d: d["id"]):
-            self._replay_round(desc)
-        # drop data files no slot references (uncommitted desired versions)
-        live = set()
-        for fn in pool.listdir("slots"):
-            name = fn[:-len(".json")]
-            live.add(data_rel(name, self.slot_version(name)))
-        for fn in pool.listdir("data"):
-            if f"data/{fn}" not in live:
-                pool.delete(f"data/{fn}")
-        return {fn[:-len('.json')]: self.slot_version(fn[:-len('.json')])
+        t0_ns = time.perf_counter_ns()
+        with span("wal.recover", committer="wal") as sp:
+            # phase 1: scan the WAL — drop torn records, split the rest
+            # into the per-op and round replay queues
+            ops: List[Dict] = []
+            rounds: List[Dict] = []
+            with span("recover.scan_wal") as scan:
+                for fn in pool.listdir("wal"):
+                    desc = pool.read_record(f"wal/{fn}")
+                    if desc is None:
+                        pool.delete(f"wal/{fn}")   # torn/unpersisted
+                    elif desc.get("kind") == "round":
+                        rounds.append(desc)
+                    else:
+                        ops.append(desc)
+                scan.set(ops=len(ops), rounds=len(rounds))
+            # phase 2: per-op descriptors act through slot references
+            # (reserve made the pointer durable); order-independent
+            with span("recover.replay_ops", ops=len(ops)):
+                for desc in ops:
+                    t = {s: (e, d) for s, e, d in desc["targets"]}
+                    for name, (exp, des) in t.items():
+                        rec = pool.read_record(_slot_rel(name))
+                        if rec is not None and \
+                                rec.get("desc") == desc["id"]:
+                            ver = des if desc["state"] == ST_SUCCEEDED \
+                                else exp
+                            pool.write_record(_slot_rel(name),
+                                              {"version": ver})
+            # phase 3: rounds replay in commit order (id embeds sequence)
+            with span("recover.replay_rounds", rounds=len(rounds)):
+                for desc in sorted(rounds, key=lambda d: d["id"]):
+                    self._replay_round(desc)
+            # phase 4: drop data files no slot references (uncommitted
+            # desired versions)
+            with span("recover.gc_data") as gc:
+                live = set()
+                for fn in pool.listdir("slots"):
+                    name = fn[:-len(".json")]
+                    live.add(data_rel(name, self.slot_version(name)))
+                dropped = 0
+                for fn in pool.listdir("data"):
+                    if f"data/{fn}" not in live:
+                        pool.delete(f"data/{fn}")
+                        dropped += 1
+                gc.set(dropped=dropped)
+            recovered = {
+                fn[:-len('.json')]: self.slot_version(fn[:-len('.json')])
                 for fn in pool.listdir("slots")}
+            sp.set(slots=len(recovered))
+        get_registry().histogram("recover_us", component="committer") \
+            .record((time.perf_counter_ns() - t0_ns) / 1e3)
+        return recovered

@@ -9,8 +9,10 @@ from __future__ import annotations
 import time
 from typing import Dict, Sequence, Tuple
 
+from ..obs import get_registry, span
 from .committer import (Committer, DurabilityStats, ST_COMPLETED, ST_FAILED,
-                        ST_SUCCEEDED, _desc_rel, _slot_rel, data_rel)
+                        ST_SUCCEEDED, _account, _desc_rel, _slot_rel,
+                        data_rel)
 from .pmem import PMemPool
 
 
@@ -47,13 +49,16 @@ class MarkerCommitter:
                payloads: Dict[str, bytes]) -> bool:
         pool = self.pool
         p0 = pool.persist_count
-        try:
-            ok = self._commit(cid, targets, payloads)
-        finally:
-            self.stats.op_commits += 1
-            self.stats.flushes_issued += pool.persist_count - p0
-        if ok:
-            self.stats.ops_committed += 1
+        with span("wal.commit", slots=len(targets),
+                  committer="marker") as sp:
+            try:
+                ok = self._commit(cid, targets, payloads)
+            finally:
+                _account(self.stats, op_commits=1,
+                         flushes_issued=pool.persist_count - p0)
+            if ok:
+                _account(self.stats, ops_committed=1)
+            sp.set(ok=ok, flushes=pool.persist_count - p0)
         return ok
 
     def _commit(self, cid: str, targets: Sequence[Tuple[str, int, int]],
@@ -116,18 +121,32 @@ class MarkerCommitter:
         # markers force a scan of every slot (the cost the WAL-only design
         # avoids); afterwards the descriptor logic is identical
         pool = self.pool
-        for fn in pool.listdir("markers"):
-            pool.delete(f"markers/{fn}")
-        for fn in pool.listdir("wal"):
-            desc = pool.read_record(f"wal/{fn}")
-            if desc is None:
-                pool.delete(f"wal/{fn}")
-                continue
-            t = {s: (e, d) for s, e, d in desc["targets"]}
-            for name, (exp, des) in t.items():
-                rec = pool.read_record(_slot_rel(name))
-                if rec is not None and rec.get("desc") == desc["id"]:
-                    ver = des if desc["state"] == ST_SUCCEEDED else exp
-                    pool.write_record(_slot_rel(name), {"version": ver})
-        return {fn[:-len('.json')]: self.slot_version(fn[:-len('.json')])
+        t0_ns = time.perf_counter_ns()
+        with span("wal.recover", committer="marker") as sp:
+            with span("recover.clear_markers") as clear:
+                markers = pool.listdir("markers")
+                for fn in markers:
+                    pool.delete(f"markers/{fn}")
+                clear.set(markers=len(markers))
+            with span("recover.replay_ops"):
+                for fn in pool.listdir("wal"):
+                    desc = pool.read_record(f"wal/{fn}")
+                    if desc is None:
+                        pool.delete(f"wal/{fn}")
+                        continue
+                    t = {s: (e, d) for s, e, d in desc["targets"]}
+                    for name, (exp, des) in t.items():
+                        rec = pool.read_record(_slot_rel(name))
+                        if rec is not None and \
+                                rec.get("desc") == desc["id"]:
+                            ver = des if desc["state"] == ST_SUCCEEDED \
+                                else exp
+                            pool.write_record(_slot_rel(name),
+                                              {"version": ver})
+            recovered = {
+                fn[:-len('.json')]: self.slot_version(fn[:-len('.json')])
                 for fn in pool.listdir("slots")}
+            sp.set(slots=len(recovered))
+        get_registry().histogram("recover_us", component="committer") \
+            .record((time.perf_counter_ns() - t0_ns) / 1e3)
+        return recovered

@@ -19,6 +19,8 @@ import pathlib
 import zlib
 from typing import Dict, Optional
 
+from ..obs import span
+
 
 class SimulatedCrash(Exception):
     pass
@@ -58,8 +60,9 @@ class PMemPool:
         if self.crash_after is not None and \
                 self.persist_count > self.crash_after:
             raise SimulatedCrash(f"crash before persisting {rel}")
-        with open(path, "rb") as f:
-            os.fsync(f.fileno())
+        with span("pmem.persist", rel=rel):
+            with open(path, "rb") as f:
+                os.fsync(f.fileno())
         self._unpersisted.pop(path, None)
 
     def write_persist(self, rel: str, data: bytes):
@@ -89,8 +92,9 @@ class PMemPool:
         if self.crash_after is not None and \
                 self.persist_count > self.crash_after:
             raise SimulatedCrash(f"crash before durably deleting {rel}")
-        if p.exists():
-            p.unlink()
+        with span("pmem.persist", rel=rel, delete=True):
+            if p.exists():
+                p.unlink()
         self._unpersisted.pop(p, None)
 
     def listdir(self, rel: str):

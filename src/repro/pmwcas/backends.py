@@ -45,6 +45,7 @@ from repro.core import SimConfig
 from repro.core import engine as _engine
 from repro.core.model import (ALG_PCAS, PC, TAG_MASK, TAG_SHIFT,
                               init_state)
+from repro.obs import span
 
 from .algorithms import Algorithm, OURS, resolve
 from .descriptor import (Addr, Descriptor, MwCASOp, OpResult,
@@ -107,13 +108,14 @@ class KernelBackend:
                 k: Optional[int] = None) -> List[OpResult]:
         from repro.kernels.pmwcas_apply.ops import pmwcas_apply
         import jax.numpy as jnp
-        addr, exp, des = ops_to_arrays(ops, k)
-        new, success = pmwcas_apply(
-            self._words, jnp.asarray(addr), jnp.asarray(exp),
-            jnp.asarray(des), use_kernel=self.use_kernel,
-            interpret=self.interpret)
-        self._words = new
-        return results_from_mask(ops, np.asarray(success), self.name)
+        with span("mwcas.round", backend=self.name, ops=len(ops)):
+            addr, exp, des = ops_to_arrays(ops, k)
+            new, success = pmwcas_apply(
+                self._words, jnp.asarray(addr), jnp.asarray(exp),
+                jnp.asarray(des), use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            self._words = new
+            return results_from_mask(ops, np.asarray(success), self.name)
 
     def read(self, addr: Addr) -> int:
         if not isinstance(addr, int):
@@ -238,6 +240,10 @@ class SimBackend:
 
     # -- Backend protocol ------------------------------------------------------
     def execute(self, ops: Sequence[MwCASOp]) -> List[OpResult]:
+        with span("mwcas.round", backend=self.name, ops=len(ops)):
+            return self._execute(ops)
+
+    def _execute(self, ops: Sequence[MwCASOp]) -> List[OpResult]:
         import jax.numpy as jnp
         k_max = self._check_batch(ops)
         B = len(ops)
@@ -393,6 +399,12 @@ class DurableBackend:
     def execute(self, ops: Sequence[MwCASOp],
                 payloads: Optional[Mapping[str, bytes]] = None
                 ) -> List[OpResult]:
+        with span("mwcas.round", backend=self.name, ops=len(ops)):
+            return self._execute(ops, payloads)
+
+    def _execute(self, ops: Sequence[MwCASOp],
+                 payloads: Optional[Mapping[str, bytes]] = None
+                 ) -> List[OpResult]:
         names = {t.slot_name for op in ops for t in op.targets}
         snapshot = {n: self.committer.slot_version(n) for n in names}
         claimed: set = set()
@@ -460,11 +472,19 @@ class DurableBackend:
         return self.committer.prune_completed()
 
     def crash(self) -> "DurableBackend":
-        """Simulate a crash: drop unpersisted writes, reopen, recover."""
-        new = DurableBackend(pool=self.pool.crash(),
-                             committer=self._committer_cls,
-                             group_commit=self.group_commit)
-        new.recover()
+        """Simulate a crash: drop unpersisted writes, reopen, recover.
+
+        The durability ledger survives the crash: the new backend's
+        committer keeps accumulating into THIS backend's
+        ``DurabilityStats`` object, so flush/fence counters are monotone
+        across crash/recover cycles (a crash must never zero — or
+        double-count — the measurement window)."""
+        with span("backend.crash_recover", backend=self.name):
+            new = DurableBackend(pool=self.pool.crash(),
+                                 committer=self._committer_cls,
+                                 group_commit=self.group_commit)
+            new.committer.stats = self.committer.stats
+            new.recover()
         return new
 
 

@@ -38,6 +38,7 @@ from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.obs import span
 from repro.pmwcas import (Backend, KernelBackend, MwCASOp,
                           ops_to_arrays, pmwcas_apply_stacked)
 
@@ -152,7 +153,8 @@ class SerialShardExecutor:
                 rounds: Dict[int, List[MwCASOp]]) -> Dict[int, List[bool]]:
         out: Dict[int, List[bool]] = {}
         for shard, ops in rounds.items():
-            verdicts = backends[shard].execute(ops)
+            with span("executor.serial_round", shard=shard, ops=len(ops)):
+                verdicts = backends[shard].execute(ops)
             out[shard] = [bool(r.success) for r in verdicts]
             self.stats.serial_rounds += 1
         return out
@@ -228,9 +230,11 @@ class StackedKernelExecutor:
             shape = (len(shards), B, K, n_words, use_kernel, interpret)
             if shape in self._shapes:
                 self.stats.hits += 1
+                traced = False
             else:
                 self._shapes.add(shape)
                 self.stats.traces += 1
+                traced = True
             addr = np.full((len(shards), B, K), -1, np.int32)
             exp = np.zeros((len(shards), B, K), np.uint32)
             des = np.zeros((len(shards), B, K), np.uint32)
@@ -244,12 +248,15 @@ class StackedKernelExecutor:
             real_cells = sum(op.k for s in active for op in rounds[s])
             self.stats.bytes_padded += \
                 (len(shards) * B * K - real_cells) * 3 * 4
-            words = jnp.stack([backends[s].word_table() for s in shards])
-            new, success = pmwcas_apply_stacked(
-                words, jnp.asarray(addr), jnp.asarray(exp),
-                jnp.asarray(des), use_kernel=use_kernel,
-                interpret=interpret)
-            success = np.asarray(success)
+            with span("executor.stacked_dispatch", shards=len(shards),
+                      B=B, K=K, traced=traced):
+                words = jnp.stack([backends[s].word_table()
+                                   for s in shards])
+                new, success = pmwcas_apply_stacked(
+                    words, jnp.asarray(addr), jnp.asarray(exp),
+                    jnp.asarray(des), use_kernel=use_kernel,
+                    interpret=interpret)
+                success = np.asarray(success)
             for i, s in enumerate(shards):
                 backends[s].set_word_table(new[i])
                 if s in rounds:

@@ -27,8 +27,10 @@ Scheduling rules:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
+from repro.obs import span
 from repro.pmwcas import Backend, MwCASOp, OpResult, Target
 
 from .executor import execute_wave, schedule_wave, select_executor
@@ -44,8 +46,8 @@ class ServiceError(RuntimeError):
 class OpFuture:
     """Client handle for one submitted op (completed by ``step``)."""
 
-    __slots__ = ("op", "client", "shard", "seq", "submit_step", "done",
-                 "result", "latency_rounds")
+    __slots__ = ("op", "client", "shard", "seq", "submit_step",
+                 "submit_ns", "done", "result", "latency_rounds")
 
     def __init__(self, op: MwCASOp, client, shard: int, seq: int,
                  submit_step: int):
@@ -54,6 +56,7 @@ class OpFuture:
         self.shard = shard
         self.seq = seq
         self.submit_step = submit_step
+        self.submit_ns = time.perf_counter_ns()
         self.done = False
         self.result: Optional[OpResult] = None
         self.latency_rounds = 0
@@ -150,17 +153,19 @@ class BatchScheduler:
         if not self.pending_count:
             return 0
         self.stats.steps += 1
-        if self._cross:
-            completed = self._global_round()
-        else:
-            completed = self._shard_rounds()
-        if (self.wal_prune_every and
-                self.stats.steps % self.wal_prune_every == 0):
-            # per-shard committer WAL hygiene, on a wave cadence
-            for b in self.backends:
-                prune = getattr(b, "prune_completed", None)
-                if prune is not None:
-                    self.stats.wal_pruned += prune()
+        with span("scheduler.wave", step=self.stats.steps) as sp:
+            if self._cross:
+                completed = self._global_round()
+            else:
+                completed = self._shard_rounds()
+            if (self.wal_prune_every and
+                    self.stats.steps % self.wal_prune_every == 0):
+                # per-shard committer WAL hygiene, on a wave cadence
+                for b in self.backends:
+                    prune = getattr(b, "prune_completed", None)
+                    if prune is not None:
+                        self.stats.wal_pruned += prune()
+            sp.set(completed=completed)
         return completed
 
     def drain(self, max_steps: Optional[int] = None) -> int:
@@ -186,19 +191,23 @@ class BatchScheduler:
 
     # -- shard rounds ----------------------------------------------------------
     def _shard_rounds(self) -> int:
-        rounds, leftovers = schedule_wave(
-            {s: q for s, q in self._queues.items() if q}, self.round_cap,
-            self.stats)
-        for s in self._queues:
-            self._queues[s] = leftovers.get(s, [])
+        with span("wave.schedule"):
+            rounds, leftovers = schedule_wave(
+                {s: q for s, q in self._queues.items() if q},
+                self.round_cap, self.stats)
+            for s in self._queues:
+                self._queues[s] = leftovers.get(s, [])
         if not rounds:
             return 0
         completed = 0
-        wave = execute_wave(self.executor, self.backends, rounds, self.stats)
-        for pairs in wave.values():
-            for pending, ok in pairs:         # executed verdicts are final
-                self._complete(pending.future, ok)
-                completed += 1
+        with span("wave.dispatch", shards=len(rounds)):
+            wave = execute_wave(self.executor, self.backends, rounds,
+                                self.stats)
+        with span("wave.complete"):
+            for pairs in wave.values():
+                for pending, ok in pairs:     # executed verdicts are final
+                    self._complete(pending.future, ok)
+                    completed += 1
         return completed
 
     # -- the serialized global round -------------------------------------------
@@ -206,16 +215,18 @@ class BatchScheduler:
         self.stats.cross_rounds += 1
         batch, self._cross = self._cross, []
         completed = 0
-        for pending in batch:
-            ok = self._execute_cross(pending.routed)
-            self.stats.cross_ops += 1
-            self._complete(pending.future, ok)
-            completed += 1
-        if (self.journal is not None and self.journal_prune_every and
-                self.stats.cross_rounds % self.journal_prune_every == 0):
-            # journal hygiene on a cadence: COMPLETED decision records
-            # are spent (redo never consults them) and safe to drop
-            self.stats.journal_pruned += self.journal.prune()
+        with span("wave.global_round", ops=len(batch)):
+            for pending in batch:
+                ok = self._execute_cross(pending.routed)
+                self.stats.cross_ops += 1
+                self._complete(pending.future, ok)
+                completed += 1
+            if (self.journal is not None and self.journal_prune_every and
+                    self.stats.cross_rounds % self.journal_prune_every
+                    == 0):
+                # journal hygiene on a cadence: COMPLETED decision
+                # records are spent (redo never consults them), drop them
+                self.stats.journal_pruned += self.journal.prune()
         return completed
 
     def _execute_cross(self, routed: RoutedOp) -> bool:
@@ -257,6 +268,13 @@ class BatchScheduler:
         if self.journal is None:
             return 0
         redone = 0
+        with span("scheduler.recover") as sp:
+            redone = self._recover_pending()
+            sp.set(redone=redone)
+        return redone
+
+    def _recover_pending(self) -> int:
+        redone = 0
         for rec in self.journal.pending():
             by_shard: Dict[int, List[Target]] = {}
             for shard, addr, exp, des in self.journal.targets_of(rec):
@@ -291,5 +309,6 @@ class BatchScheduler:
         fut.latency_rounds = self.stats.steps - fut.submit_step
         fut.result = OpResult(index=fut.seq, success=success,
                               backend="service", op=fut.op)
-        self.stats.record_completion(fut.latency_rounds,
-                                     "ok" if success else "conflict")
+        self.stats.record_completion(
+            fut.latency_rounds, "ok" if success else "conflict",
+            latency_us=(time.perf_counter_ns() - fut.submit_ns) / 1e3)

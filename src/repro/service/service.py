@@ -21,8 +21,10 @@ tree shards run the split protocol between waves, exactly like
 from __future__ import annotations
 
 import pathlib
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+from repro.obs import reset_metrics, span
 from repro.pmwcas import Backend, MwCASOp, make_backend
 from repro.structures import (BzTreeIndex, EXHAUSTED, FULL, HashMap, KVOp,
                               NeedsSplit, OK, OutOfRegions, SCAN,
@@ -37,8 +39,8 @@ from .stats import ServiceStats, collect_durability, fresh_stats
 class KVFuture:
     """Client handle for one submitted logical op."""
 
-    __slots__ = ("op", "client", "shard", "seq", "submit_step", "done",
-                 "result")
+    __slots__ = ("op", "client", "shard", "seq", "submit_step",
+                 "submit_ns", "done", "result")
 
     def __init__(self, op: KVOp, client, shard: int, seq: int,
                  submit_step: int):
@@ -47,6 +49,7 @@ class KVFuture:
         self.shard = shard
         self.seq = seq
         self.submit_step = submit_step
+        self.submit_ns = time.perf_counter_ns()
         self.done = False
         self.result: Optional[StructResult] = None
 
@@ -179,46 +182,52 @@ class KVService:
         if not self.pending_count:
             return 0
         self.stats.steps += 1
-        completed = self._execute_step()
-        if (self.wal_prune_every and
-                self.stats.steps % self.wal_prune_every == 0):
-            # per-shard WAL hygiene on a wave cadence (the committer
-            # analogue of the scheduler's journal_prune_every): without
-            # it a long-running durable service grows wal/ one record
-            # per committed round, forever
-            self.prune_wal()
+        with span("service.wave", step=self.stats.steps) as sp:
+            completed = self._execute_step()
+            if (self.wal_prune_every and
+                    self.stats.steps % self.wal_prune_every == 0):
+                # per-shard WAL hygiene on a wave cadence (the committer
+                # analogue of the scheduler's journal_prune_every):
+                # without it a long-running durable service grows wal/
+                # one record per committed round, forever
+                self.prune_wal()
+            sp.set(completed=completed)
         return completed
 
     def _execute_step(self) -> int:
         completed = 0
         compiled_queues: Dict[int, List[_PendingKV]] = {}
-        for s in range(len(self.structs)):
-            if not self._queues[s]:
-                continue
-            ready, done = self._compile_shard(s)
-            completed += done
-            if ready:
-                compiled_queues[s] = ready
+        with span("wave.compile"):
+            for s in range(len(self.structs)):
+                if not self._queues[s]:
+                    continue
+                ready, done = self._compile_shard(s)
+                completed += done
+                if ready:
+                    compiled_queues[s] = ready
         if not compiled_queues:
             return completed
-        rounds, leftovers = schedule_wave(compiled_queues, self.round_cap,
-                                          self.stats)
-        # deferred ops recompile next wave (their snapshot is stale by
-        # construction once this wave's round commits)
-        for s, later in leftovers.items():
-            self._requeue(s, later)
-        wave = execute_wave(self.executor, self.backends, rounds,
-                            self.stats)
-        for s, pairs in wave.items():
-            losers = []
-            for pending, ok in pairs:
-                if ok:
-                    self._complete(pending.future, OK)
-                    completed += 1
-                else:
-                    pending.attempts += 1
-                    losers.append(pending)       # recompile next wave
-            self._requeue(s, losers)
+        with span("wave.schedule"):
+            rounds, leftovers = schedule_wave(compiled_queues,
+                                              self.round_cap, self.stats)
+            # deferred ops recompile next wave (their snapshot is stale
+            # by construction once this wave's round commits)
+            for s, later in leftovers.items():
+                self._requeue(s, later)
+        with span("wave.dispatch", shards=len(rounds)):
+            wave = execute_wave(self.executor, self.backends, rounds,
+                                self.stats)
+        with span("wave.complete"):
+            for s, pairs in wave.items():
+                losers = []
+                for pending, ok in pairs:
+                    if ok:
+                        self._complete(pending.future, OK)
+                        completed += 1
+                    else:
+                        pending.attempts += 1
+                        losers.append(pending)   # recompile next wave
+                self._requeue(s, losers)
         return completed
 
     def prune_wal(self) -> int:
@@ -329,7 +338,9 @@ class KVService:
         latency = max(1, self.stats.steps - fut.submit_step)
         fut.result = StructResult(fut.op, status, value=value,
                                   rounds=latency)
-        self.stats.record_completion(latency, status)
+        self.stats.record_completion(
+            latency, status,
+            latency_us=(time.perf_counter_ns() - fut.submit_ns) / 1e3)
 
     # -- reads / integrity -----------------------------------------------------
     def lookup(self, key: int) -> Optional[int]:
@@ -365,13 +376,16 @@ class KVService:
     def reset_stats(self) -> None:
         """Start a fresh measurement window (e.g. after a load phase).
 
-        The executor's dispatch counters reset with the window, but its
+        The global metrics registry resets with the window (it is the
+        same measurement — benchmarks read both and compare them), and
+        the executor's dispatch counters reset too, but the executor's
         TRACE CACHE survives — a warmed-up service must show zero
         retraces in the new window, and that is exactly what the
         benchmark asserts."""
         self.stats = fresh_stats(len(self.backends), self.round_cap)
         if hasattr(self.executor, "stats"):
             self.executor.stats = DispatchStats()
+        reset_metrics()
 
     def durability_stats(self):
         """Merged committer flush accounting over the durable shards
@@ -382,16 +396,28 @@ class KVService:
     def crash(self) -> "KVService":
         """Durable services only: crash every shard (drop unpersisted
         writes), recover each from its own WAL, and re-attach the
-        structure partitions.  Returns the recovered service."""
-        recovered = []
-        for b in self.backends:
-            crash = getattr(b, "crash", None)
-            if crash is None:
-                raise TypeError(f"backend {b.name} cannot crash/recover")
-            recovered.append(crash())
-        return KVService(len(recovered), structure=self.structure,
-                         backend=recovered, n_buckets=self.n_buckets,
-                         round_cap=self.round_cap,
-                         max_op_rounds=self.max_op_rounds,
-                         wal_prune_every=self.wal_prune_every,
-                         **self.tree_shape)
+        structure partitions.  Returns the recovered service.
+
+        The measurement window SURVIVES the crash: the recovered service
+        keeps this service's ``ServiceStats`` (steps, completions,
+        latency windows — all monotone across the cycle; the backends
+        likewise carry their ``DurabilityStats`` through
+        ``DurableBackend.crash``) and its executor, whose trace cache a
+        crash has no reason to invalidate."""
+        with span("service.crash_recover", shards=len(self.backends)):
+            recovered = []
+            for b in self.backends:
+                crash = getattr(b, "crash", None)
+                if crash is None:
+                    raise TypeError(
+                        f"backend {b.name} cannot crash/recover")
+                recovered.append(crash())
+            new = KVService(len(recovered), structure=self.structure,
+                            backend=recovered, n_buckets=self.n_buckets,
+                            round_cap=self.round_cap,
+                            max_op_rounds=self.max_op_rounds,
+                            wal_prune_every=self.wal_prune_every,
+                            **self.tree_shape)
+            new.stats = self.stats
+            new.executor = self.executor
+        return new

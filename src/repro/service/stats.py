@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import Histogram
 from repro.pmwcas import DurabilityStats
 
 
@@ -67,6 +68,11 @@ class ServiceStats:
     # (None until a wave ran or the executor carries no stats)
     dispatch: Optional[object] = None
     latencies: List[int] = dataclasses.field(default_factory=list)
+    # wall-clock completion latency alongside the round-based one: rounds
+    # stay the substrate-independent unit, microseconds answer "what did a
+    # client actually wait" on THIS backend
+    latency_us: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.latency_us"))
     by_status: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     # percentile window: a long-running service would otherwise grow the
@@ -74,12 +80,15 @@ class ServiceStats:
     MAX_LATENCY_SAMPLES = 4096
 
     # -- recorders -------------------------------------------------------------
-    def record_completion(self, latency_rounds: int, status: str) -> None:
+    def record_completion(self, latency_rounds: int, status: str,
+                          latency_us: Optional[float] = None) -> None:
         self.completed += 1
         self.latencies.append(int(latency_rounds))
         if len(self.latencies) > self.MAX_LATENCY_SAMPLES:
             del self.latencies[:len(self.latencies)
                                - self.MAX_LATENCY_SAMPLES]
+        if latency_us is not None:
+            self.latency_us.record(latency_us)
         self.by_status[status] = self.by_status.get(status, 0) + 1
 
     # -- aggregates ------------------------------------------------------------
@@ -141,6 +150,14 @@ class ServiceStats:
     def p99_latency_rounds(self) -> float:
         return self.latency_rounds(99.0)
 
+    @property
+    def p50_latency_us(self) -> float:
+        return self.latency_us.p50_us
+
+    @property
+    def p99_latency_us(self) -> float:
+        return self.latency_us.p99_us
+
     # -- reporting -------------------------------------------------------------
     def as_row(self) -> Dict[str, float]:
         """Flat record for the benchmark JSON."""
@@ -155,6 +172,8 @@ class ServiceStats:
             "wal_pruned": self.wal_pruned,
             "p50_latency_rounds": self.p50_latency_rounds,
             "p99_latency_rounds": self.p99_latency_rounds,
+            "p50_latency_us": round(self.p50_latency_us, 3),
+            "p99_latency_us": round(self.p99_latency_us, 3),
         }
         if self.dispatch is not None:
             row.update({

@@ -47,3 +47,37 @@ def test_real_regressions_still_flagged(tmp_path):
            [{"name": "real", "us_per_call": 40.0, "ops_per_s": 250.0}])
     regs = perf_trend.compare(tmp_path / "cur", tmp_path / "base", 0.20)
     assert len(regs) == 1 and regs[0][1] == "real"
+    assert regs[0][6] == "drop"
+
+
+def test_lower_is_better_metrics_flag_rises(tmp_path):
+    """flushes_per_commit / recover_us regress by RISING: a drop is an
+    improvement and must stay silent; a rise past the threshold flags."""
+    _write(tmp_path / "base",
+           [{"name": "durable_kv_S2_group", "us_per_call": 50.0,
+             "ops_per_s": 500.0, "flushes_per_commit": 1.0},
+            {"name": "durable_group_recover", "us_per_call": 800.0,
+             "recover_us": 400.0}])
+    _write(tmp_path / "cur",
+           [{"name": "durable_kv_S2_group", "us_per_call": 50.0,
+             "ops_per_s": 500.0, "flushes_per_commit": 2.5},  # +150%: flag
+            {"name": "durable_group_recover", "us_per_call": 800.0,
+             "recover_us": 100.0}])                           # -75%: fine
+    regs = perf_trend.compare(tmp_path / "cur", tmp_path / "base", 0.20)
+    assert len(regs) == 1
+    section, name, key, old, new, change, direction = regs[0]
+    assert (name, key, direction) == ("durable_kv_S2_group",
+                                      "flushes_per_commit", "rise")
+    assert old == 1.0 and new == 2.5
+
+
+def test_cost_improvements_and_missing_keys_stay_silent(tmp_path):
+    """A row missing the cost key on either side never flags (sections
+    predating the obs fields must keep comparing cleanly)."""
+    _write(tmp_path / "base",
+           [{"name": "row", "us_per_call": 5.0, "ops_per_s": 100.0}])
+    _write(tmp_path / "cur",
+           [{"name": "row", "us_per_call": 5.0, "ops_per_s": 100.0,
+             "flushes_per_commit": 9.0}])    # no baseline value: silent
+    assert perf_trend.compare(tmp_path / "cur", tmp_path / "base",
+                              0.20) == []

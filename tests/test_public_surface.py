@@ -70,13 +70,16 @@ def test_structures_built_only_on_public_surface(path):
                          ids=lambda p: str(p.relative_to(REPO)))
 def test_service_built_only_on_public_surface(path):
     """The sharded service composes the layers below it ONLY through
-    their public surfaces (the structures rule, one level up)."""
-    allowed = {"repro", "repro.pmwcas", "repro.structures"}
+    their public surfaces (the structures rule, one level up).
+    ``repro.obs`` is the one sanctioned extra: instrumentation must be
+    reachable from every layer, which is exactly why it imports nothing
+    of repro itself (asserted below)."""
+    allowed = {"repro", "repro.pmwcas", "repro.structures", "repro.obs"}
     bad = [(mod, line) for mod, line in repro_imports(path)
            if mod not in allowed]
     assert not bad, (
         f"{path.relative_to(REPO)} must build only on repro / "
-        f"repro.pmwcas / repro.structures, found {bad}")
+        f"repro.pmwcas / repro.structures / repro.obs, found {bad}")
 
 
 @pytest.mark.parametrize("path", files_under("src/repro/chaos"),
@@ -84,12 +87,29 @@ def test_service_built_only_on_public_surface(path):
 def test_chaos_built_only_on_public_surface(path):
     """The chaos harness sits on top of everything and composes the
     layers below ONLY through their public surfaces."""
-    allowed = {"repro", "repro.pmwcas", "repro.structures", "repro.service"}
+    allowed = {"repro", "repro.pmwcas", "repro.structures",
+               "repro.service", "repro.obs"}
     bad = [(mod, line) for mod, line in repro_imports(path)
            if mod not in allowed]
     assert not bad, (
         f"{path.relative_to(REPO)} must build only on repro / "
-        f"repro.pmwcas / repro.structures / repro.service, found {bad}")
+        f"repro.pmwcas / repro.structures / repro.service / repro.obs, "
+        f"found {bad}")
+
+
+@pytest.mark.parametrize("path", files_under("src/repro/obs"),
+                         ids=lambda p: str(p.relative_to(REPO)))
+def test_obs_imports_nothing_above_pmwcas(path):
+    """The observability layer sits at the BOTTOM of the import graph:
+    anything (committer, service, chaos, benchmarks) may import it, so
+    it must import nothing above ``repro.pmwcas`` — in practice nothing
+    of repro at all (the stats adapters duck-type instead)."""
+    allowed = {"repro", "repro.pmwcas"}
+    bad = [(mod, line) for mod, line in repro_imports(path)
+           if mod not in allowed]
+    assert not bad, (
+        f"{path.relative_to(REPO)} is the bottom layer; it may import "
+        f"nothing above repro.pmwcas, found {bad}")
 
 
 def test_public_surface_covers_the_migration_table():
@@ -102,7 +122,10 @@ def test_public_surface_covers_the_migration_table():
                  "SortedNode", "FreeListAllocator", "zipf_probs",
                  "OutOfRegions", "KVService", "BatchScheduler",
                  "ShardRouter", "make_backend", "ScenarioDriver",
-                 "chaos_sweep", "check_history"):
+                 "chaos_sweep", "check_history",
+                 "MetricsRegistry", "SpanTracer", "span",
+                 "enable_tracing", "get_registry", "export_chrome_trace",
+                 "fold_durability"):
         assert hasattr(repro, name), name
     import repro.pmwcas as pm
     for name in ("MwCASOp", "Backend", "run_differential", "zipf_probs",
