@@ -1,0 +1,98 @@
+"""Elastic scale-out benchmark: cost of growing while serving.
+
+Three cells, one per question the elastic machinery raises:
+
+- ``elastic_steady``   — insert throughput into a map pre-sized for the
+  whole workload (no growth; the baseline);
+- ``elastic_growth``   — the SAME workload into a map that starts at a
+  quarter of the capacity and doubles its directory online (decide /
+  pump / swing interleaved with the client rounds), so the slowdown
+  factor is the price of growing in-band;
+- ``elastic_migration``— a durable sharded ``KVService`` migrating a
+  key range between shards under the decide/copy/swing protocol;
+  reports keys moved, the held-op pause in waves, and the wall-clock
+  swing pause p99 (``mig_pause_us_p99``, gated lower-is-better by
+  ``scripts/perf_trend.py``).
+
+The summary row ASSERTS the acceptance headline: the elastic service
+absorbs the whole load with ZERO FULL/EXHAUSTED verdicts (shards double
+as they fill; the 4x-capacity test lives in ``tests/test_elastic.py``)
+and the migration leaves the key/value image intact.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.pmwcas import KernelBackend
+from repro.service import KVService
+from repro.structures import FULL, EXHAUSTED, HashMap, INSERT, KVOp, OK
+
+from .common import emit
+
+
+def _insert_run(n_keys: int, n_buckets: int, max_doublings: int):
+    backend = KernelBackend(
+        n_words=HashMap.words_needed(n_buckets, max_doublings),
+        use_kernel=False)
+    m = HashMap(backend, n_buckets, max_doublings=max_doublings)
+    ops = [KVOp(INSERT, k, k + 1) for k in range(1, n_keys + 1)]
+    t0 = time.perf_counter()
+    res = m.apply(ops, max_rounds=4 * n_keys)
+    elapsed = time.perf_counter() - t0
+    ok = sum(r.status == OK for r in res)
+    return m, ok, elapsed
+
+
+def run(quick: bool = False):
+    n_keys = 96 if quick else 384
+    # steady state: the directory is already big enough for every key
+    big = 2 * n_keys
+    m0, ok0, dt0 = _insert_run(n_keys, big, 0)
+    emit(f"elastic_steady,{dt0 / n_keys * 1e6:.1f},"
+         f"ops_per_s={n_keys / dt0:.0f};keys={ok0};"
+         f"n_buckets={big};resizes=0")
+    assert ok0 == n_keys
+
+    # growth: start at a quarter of the needed buckets, double online
+    start = max(4, big // 8)
+    doublings = 4
+    m1, ok1, dt1 = _insert_run(n_keys, start, doublings)
+    emit(f"elastic_growth,{dt1 / n_keys * 1e6:.1f},"
+         f"ops_per_s={n_keys / dt1:.0f};keys={ok1};"
+         f"n_buckets={start};resizes={m1.resizes};"
+         f"keys_migrated={m1.keys_migrated};"
+         f"growth_cost_x={dt1 / dt0:.2f}")
+    assert ok1 == n_keys, f"growth run dropped {n_keys - ok1} inserts"
+    assert m1.resizes >= 2, "the growth cell never actually grew"
+
+    # migration: durable sharded service, one key-range shard move
+    n_shards, n_buckets = 3, 16 if quick else 64
+    span = 3 * n_buckets // 2
+    with tempfile.TemporaryDirectory(prefix="bench_elastic_") as tmp:
+        svc = KVService(n_shards, backend="durable", n_buckets=n_buckets,
+                        max_doublings=2, durable_root=tmp,
+                        migration_chunk=8)
+        load = {k: k * 3 for k in range(100, 100 + 2 * span, 2)}
+        res = svc.apply([KVOp(INSERT, k, v)
+                         for k, v in sorted(load.items())])
+        statuses = [r.status for r in res]
+        full = statuses.count(FULL) + statuses.count(EXHAUSTED)
+        t0 = time.perf_counter()
+        svc.migrate_range(100, 100 + span, n_shards - 1)
+        dt = time.perf_counter() - t0
+        st = svc.stats
+        moved = st.keys_moved
+        emit(f"elastic_migration,{dt / max(1, moved) * 1e6:.1f},"
+             f"ops_per_s={moved / dt:.0f};keys_moved={moved};"
+             f"mig_pause_waves_max={max(st.mig_pause_waves, default=0)};"
+             f"mig_pause_us_p99={st.mig_pause_us.p99_us:.1f}")
+        assert moved > 0, "the migration moved nothing"
+        assert svc.check_integrity() == load, \
+            "migration changed the key/value image"
+        emit(f"elastic_scaleout,0.0,"
+             f"growth_cost_x={dt1 / dt0:.2f};"
+             f"full_or_exhausted={full};"
+             f"migrations={st.migrations};keys_moved={moved}")
+        assert full == 0, \
+            f"{full} FULL/EXHAUSTED verdicts: elastic absorption failed"

@@ -44,7 +44,7 @@ def main() -> None:
                     help="reduced sweeps (CI)")
     ap.add_argument("--only", default=None,
                     help="threads|words|skew|blocks|ckpt|kernels|diff|"
-                         "structs|tree|service|durable|chaos")
+                         "structs|tree|service|durable|chaos|elastic")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<section>.json (default: cwd)")
     ap.add_argument("--no-json", action="store_true",
@@ -54,8 +54,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_blocks, bench_chaos, bench_ckpt, bench_diff,
-                   bench_durable, bench_kernels, bench_service, bench_skew,
-                   bench_structs, bench_threads, bench_words, common)
+                   bench_durable, bench_elastic, bench_kernels,
+                   bench_service, bench_skew, bench_structs, bench_threads,
+                   bench_words, common)
     sections = {
         "threads": bench_threads.run,   # paper Figs. 9 & 10
         "words": bench_words.run,       # paper Figs. 11 & 12
@@ -69,6 +70,7 @@ def main() -> None:
         "service": bench_service.run,   # sharded many-client service (Sec. 8)
         "durable": bench_durable.run,   # per-op vs group commit (Sec. 9)
         "chaos": bench_chaos.run,       # fault harness + lin. check (Sec. 10)
+        "elastic": bench_elastic.run,   # online growth + migration (Sec. 12)
     }
     if args.only and args.only not in sections:
         ap.error(f"unknown section {args.only!r}; "

@@ -50,6 +50,9 @@ python -m benchmarks.run --quick --only durable --json-dir "$BENCH_DIR"
 # the chaos section runs every scenario family under fault injection and
 # asserts all completed histories pass the linearizability check
 python -m benchmarks.run --quick --only chaos --json-dir "$BENCH_DIR"
+# the elastic section asserts online growth absorbs the load with zero
+# FULL/EXHAUSTED and that migrations preserve the key/value image
+python -m benchmarks.run --quick --only elastic --json-dir "$BENCH_DIR"
 
 echo "=== 5. obs smoke (disabled-tracer overhead + Chrome-trace schema) ==="
 # asserts the off-path costs < 5% of a sim workload and that a traced

@@ -32,8 +32,9 @@ import sys
 METRICS = ("ops_per_s", "mops")      # first present wins
 # cost metrics where a RISE is the regression (flush accounting comes
 # straight from the obs registry, so a rise means the flush-elision
-# machinery — the paper's point — has leaked flushes back in)
-LOWER_IS_BETTER = ("flushes_per_commit", "recover_us")
+# machinery — the paper's point — has leaked flushes back in; the
+# migration pause is the elastic section's availability headline)
+LOWER_IS_BETTER = ("flushes_per_commit", "recover_us", "mig_pause_us_p99")
 
 
 def _metric(row: dict):

@@ -24,6 +24,7 @@ regression asserts byte-identical traces and final state.
 from __future__ import annotations
 
 import dataclasses
+import tempfile
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -35,8 +36,9 @@ from repro.service import KVService
 from repro.structures import KVOp, SCAN
 
 from .history import CheckStats, HistoryRecorder, check_history
-from .machines import (ARM_CRASH, CALM, ClientMachine, ClientSpec,
-                       FaultMachine, FaultSpec, STALL, STORM)
+from .machines import (ARM_CRASH, ARM_MIG_CRASH, CALM, ClientMachine,
+                       ClientSpec, FaultMachine, FaultSpec, MIGRATE,
+                       STALL, STORM)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +73,7 @@ class ChaosReport:
     ops_completed: int = 0
     crashes: int = 0
     faults_fired: int = 0
+    migrations: int = 0            # key-range migrations decided
     wal_records: int = 0           # descriptor records left across shards
     wal_pruned: int = 0
     elapsed_s: float = 0.0
@@ -104,6 +107,13 @@ class ScenarioDriver:
     def __init__(self, scenario: Scenario,
                  durable_root=None):
         self.scenario = scenario
+        self._tmpdir = None
+        if durable_root is None and scenario.backend == "durable":
+            # durable scenarios need a root the DRIVER owns: the
+            # migration decision log derives from it, and a crash must
+            # find the same pools again (auto-cleaned on GC)
+            self._tmpdir = tempfile.TemporaryDirectory(prefix="chaos_run_")
+            durable_root = self._tmpdir.name
         self.durable_root = durable_root
         sc = scenario
         self.clients = [
@@ -150,6 +160,8 @@ class ScenarioDriver:
             pool = getattr(b, "pool", None)
             if pool is not None:
                 pool.crash_after = None
+        if self.svc.mig_pool is not None:
+            self.svc.mig_pool.crash_after = None
 
     def _wal_record_count(self) -> int:
         total = 0
@@ -173,6 +185,18 @@ class ScenarioDriver:
                 elif d[0] == CALM:
                     for c in self.clients:
                         c.post("calm")
+                elif d[0] == MIGRATE:
+                    try:
+                        # the decide persist runs here; an armed trap may
+                        # spring on it (caller handles SimulatedCrash)
+                        self.svc.start_migration(d[1], d[2], d[3])
+                        self.report.migrations += 1
+                    except RuntimeError:
+                        pass       # overlaps an in-flight migration: skip
+                elif d[0] == ARM_MIG_CRASH:
+                    pool = self.svc.mig_pool
+                    if pool is not None:
+                        pool.crash_after = pool.persist_count + d[1]
 
     def _submit_outboxes(self, wave: int) -> int:
         scans = 0
@@ -227,8 +251,10 @@ class ScenarioDriver:
         for fm in self.faults:
             fm.post("tick", wave=wave, scans_pending=scans_pending)
             fm.process()
-        self._apply_directives()
         try:
+            # directive application can itself persist (a MIGRATE's
+            # decide record) and spring a previously-armed trap
+            self._apply_directives()
             self.svc.step()
         except SimulatedCrash:
             self._handle_crash(wave)
@@ -254,7 +280,7 @@ class ScenarioDriver:
             # issue nothing new; the EXHAUSTED bound caps retries)
             self._disarm_all()
             for extra in range(self.DRAIN_CAP):
-                if not self._outstanding:
+                if not self._outstanding and not self.svc._migrations:
                     break
                 wave += 1
                 try:

@@ -177,12 +177,16 @@ ARM_CRASH = "arm_crash"        # (ARM_CRASH, shard, persists_ahead)
 STALL = "stall"                # (STALL, client_index, waves)
 STORM = "storm"                # (STORM, shard)
 CALM = "calm"                  # (CALM,)
+MIGRATE = "migrate"            # (MIGRATE, lo, hi, dst_shard)
+ARM_MIG_CRASH = "arm_mig_crash"  # (ARM_MIG_CRASH, persists_ahead)
 
 CRASH_AT_PERSIST = "crash_at_persist"
 CRASH_MID_SCAN = "crash_mid_scan"
 STRAGGLER = "straggler"
 SHARD_STORM = "shard_storm"
-FAULT_KINDS = (CRASH_AT_PERSIST, CRASH_MID_SCAN, STRAGGLER, SHARD_STORM)
+CRASH_MID_MIGRATION = "crash_mid_migration"
+FAULT_KINDS = (CRASH_AT_PERSIST, CRASH_MID_SCAN, STRAGGLER, SHARD_STORM,
+               CRASH_MID_MIGRATION)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,6 +202,7 @@ class FaultSpec:
     persists_hi: int = 12
     stall_waves: int = 6           # straggler: added think time
     storm_len: int = 8             # storm duration in waves
+    n_keys: int = 32               # keyspace (migration range drawing)
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -220,6 +225,18 @@ class FaultMachine(Machine):
                 Transition("idle", "tick", "armed", guard=guard,
                            action=FaultMachine._arm),
                 Transition("idle", "tick", "idle"),
+                Transition("armed", "tick", "armed"),
+                Transition("armed", "crash", "idle",
+                           action=FaultMachine._sprung),
+            ]
+        elif spec.kind == CRASH_MID_MIGRATION:
+            transitions = [
+                Transition("idle", "tick", "armed", guard=self._due,
+                           action=FaultMachine._arm_migration),
+                Transition("idle", "tick", "idle"),
+                Transition("armed", "tick", "idle",
+                           guard=lambda m, e: e["wave"] >= m.until,
+                           action=FaultMachine._reschedule),
                 Transition("armed", "tick", "armed"),
                 Transition("armed", "crash", "idle",
                            action=FaultMachine._sprung),
@@ -275,6 +292,26 @@ class FaultMachine(Machine):
     def _sprung(self, ev) -> None:
         self.fired += 1
         self._reschedule(ev)
+
+    def _arm_migration(self, ev) -> None:
+        """Start a key-range migration and schedule a crash into it:
+        half the draws trap the migration decision log (the swing's own
+        persists), half trap a shard WAL pool (mid-copy)."""
+        sp = self.spec
+        lo = 1 + int(self.rng.integers(sp.n_keys))
+        hi = lo + 1 + int(self.rng.integers(max(2, sp.n_keys // 3)))
+        dst = int(self.rng.integers(sp.n_shards))
+        self.directives.append((MIGRATE, lo, hi, dst))
+        if self.rng.random() < 0.5:
+            self.directives.append(
+                (ARM_MIG_CRASH, 1 + int(self.rng.integers(3))))
+        else:
+            shard = int(self.rng.integers(sp.n_shards))
+            ahead = int(self.rng.integers(sp.persists_lo,
+                                          sp.persists_hi + 1))
+            self.directives.append((ARM_CRASH, shard, ahead))
+        self.until = ev["wave"] + sp.storm_len
+        self.fired += 1
 
     def _pick_victim(self, ev) -> None:
         victim = int(self.rng.integers(self.spec.n_clients))

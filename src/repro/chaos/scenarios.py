@@ -12,11 +12,14 @@ crash/recover cycles under every workload shape), plus their own twist:
   in-flight windows span many waves when the crash lands.
 - :func:`drifting_skew` — the Zipf-hot keys rotate through the keyspace
   on a cadence (the skew the paper's static Eq. 1 workloads never move).
+- :func:`crash_mid_migration` — online key-range shard migrations under
+  live traffic, with crashes scheduled into the copy and the swing; the
+  decision log must leave every migration invisible or completed.
 - :func:`sim_native` — the same client machines on SIM-backed shards:
   full KV ops on the cycle-accurate micro-op machines (native desired
   values), no crash faults (the simulator models cores, not pools).
 
-``chaos_sweep`` runs a list of scenarios (default: all five) and
+``chaos_sweep`` runs a list of scenarios (default: all six) and
 returns their reports; every history must check out linearizable.
 """
 from __future__ import annotations
@@ -25,8 +28,9 @@ import tempfile
 from typing import List, Optional, Sequence
 
 from .driver import ChaosReport, Scenario, ScenarioDriver
-from .machines import (CRASH_AT_PERSIST, CRASH_MID_SCAN, ClientSpec,
-                       FaultSpec, SHARD_STORM, STRAGGLER)
+from .machines import (CRASH_AT_PERSIST, CRASH_MID_MIGRATION,
+                       CRASH_MID_SCAN, ClientSpec, FaultSpec, SHARD_STORM,
+                       STRAGGLER)
 
 
 def _crash(n_shards: int, *, first_wave: int = 8, gap_lo: int = 10,
@@ -86,6 +90,25 @@ def drifting_skew(seed: int = 0, waves: int = 60) -> Scenario:
         faults=(_crash(n_shards, first_wave=10),))
 
 
+def crash_mid_migration(seed: int = 0, waves: int = 60) -> Scenario:
+    """Online key-range shard migrations under client traffic, with
+    crashes scheduled INTO the migration: half trap the decision log's
+    own persists (decide / swing), half a shard WAL pool (mid-copy).
+    Recovery must leave each migration invisible or completed — the
+    history stays linearizable either way (a migration moves keys, it
+    never changes a value)."""
+    n_shards = 3
+    client = ClientSpec(n_keys=32, alpha=0.9, read=0.4, update=0.25,
+                        insert=0.2, delete=0.1, scan=0.05,
+                        n_shards=n_shards)
+    return Scenario(
+        name=f"crash_mid_migration/s{seed}", family="crash_mid_migration",
+        client=client, waves=waves, n_shards=n_shards, seed=seed,
+        faults=(FaultSpec(kind=CRASH_MID_MIGRATION, n_shards=n_shards,
+                          n_keys=32, first_wave=6, gap_lo=8, gap_hi=14,
+                          persists_lo=2, persists_hi=10, storm_len=10),))
+
+
 def sim_native(seed: int = 0, waves: int = 40) -> Scenario:
     """KV chaos on SIM-backed shards: the native-desired-value path —
     real inserts/updates/deletes (keys, values, TOMBSTONEs) running on
@@ -105,6 +128,7 @@ FAMILIES = {
     "crash_mid_scan": crash_mid_scan,
     "straggler": straggler,
     "drifting_skew": drifting_skew,
+    "crash_mid_migration": crash_mid_migration,
     "sim_native": sim_native,
 }
 

@@ -28,10 +28,12 @@ clients multiplex onto the kernel/durable substrates:
 See DESIGN.md Sec. 8 for the architecture and the cross-shard
 serialization argument; ``examples/kv_service.py`` is the walkthrough.
 """
+from .checkers import check_migration_crash_sweep
 from .executor import (DispatchStats, SerialShardExecutor,
                        StackedKernelExecutor, build_rounds, execute_wave,
                        schedule_wave, select_executor)
-from .journal import CrossShardJournal
+from .journal import (CrossShardJournal, MIG_COMPLETED, MIG_MIGRATING,
+                      MIG_ROUTED, MigrationLog)
 from .router import CROSS_SHARD, RoutedOp, ShardRouter
 from .scheduler import BatchScheduler, OpFuture, ServiceError
 from .service import KVFuture, KVService
@@ -45,5 +47,7 @@ __all__ = [
     "SerialShardExecutor", "StackedKernelExecutor", "DispatchStats",
     "build_rounds", "schedule_wave", "execute_wave", "select_executor",
     "CrossShardJournal",
+    "MigrationLog", "MIG_MIGRATING", "MIG_ROUTED", "MIG_COMPLETED",
+    "check_migration_crash_sweep",
     "ServiceStats", "ShardStats", "collect_durability", "fresh_stats",
 ]

@@ -101,3 +101,112 @@ class CrossShardJournal:
 
     def __repr__(self) -> str:
         return f"CrossShardJournal({len(self)} records)"
+
+
+# -- online shard migration ----------------------------------------------------
+MIG_MIGRATING = "MIGRATING"      # decided; copy in flight; rollback on crash
+MIG_ROUTED = "ROUTED"            # routing swung; cleanup redo on crash
+MIG_COMPLETED = "COMPLETED"      # spent (prune-able)
+
+_ROUTES = "mig_routes.json"
+
+
+def _mig_rel(mig_id: str) -> str:
+    return f"mig/{mig_id}.json"
+
+
+class MigrationLog:
+    """Decision log for online key-range shard migrations — the same
+    journal idiom as :class:`CrossShardJournal`, one protocol level up:
+
+    1. persist ``{state: MIGRATING, lo, hi, dst}`` — the *decide*
+       record.  From here until ROUTED, a crash rolls the migration
+       BACK: copies on ``dst`` (in-range keys that hash-route
+       elsewhere) are deleted and the record dropped — the migration
+       never happened;
+    2. the service copies in-range keys to ``dst`` in batched MwCAS
+       rounds (*materialize*; each round per-shard atomic as usual);
+    3. flip the record to ``ROUTED`` (THE durability linearization
+       point of the migration), then persist the route table with the
+       new override (*swing*).  From here a crash rolls FORWARD:
+       recovery re-installs the override and redoes the cleanup;
+    4. delete the now-unroutable source copies, mark ``COMPLETED``
+       (lazy persist — redo is idempotent).
+
+    The route table ``mig_routes.json`` is the persistent image of
+    :attr:`ShardRouter.ranges`; it is rewritten under a completed
+    record's authority only, so its content is always implied by the
+    record states.
+    """
+
+    def __init__(self, pool):
+        self.pool = pool
+
+    # -- the persists of the protocol ------------------------------------------
+    def decide(self, mig_id: str, lo: int, hi: int, dst: int) -> None:
+        self.pool.write_record(_mig_rel(mig_id), {
+            "id": mig_id, "state": MIG_MIGRATING,
+            "lo": lo, "hi": hi, "dst": dst})
+
+    def mark_routed(self, mig_id: str) -> None:
+        rec = self.pool.read_record(_mig_rel(mig_id))
+        rec["state"] = MIG_ROUTED
+        self.pool.write_record(_mig_rel(mig_id), rec)
+
+    def complete(self, mig_id: str) -> None:
+        rec = self.pool.read_record(_mig_rel(mig_id))
+        if rec is None:
+            return
+        rec["state"] = MIG_COMPLETED
+        self.pool.write_record(_mig_rel(mig_id), rec, persist=False)
+
+    def abort(self, mig_id: str) -> None:
+        """Drop a MIGRATING record (rollback's final persist)."""
+        self.pool.delete_persist(_mig_rel(mig_id))
+
+    # -- the route table -------------------------------------------------------
+    def save_routes(self, ranges) -> None:
+        self.pool.write_record(_ROUTES, {
+            "ranges": [list(r) for r in ranges]})
+
+    def load_routes(self) -> List[Tuple[int, int, int]]:
+        rec = self.pool.read_record(_ROUTES)
+        if rec is None:
+            return []
+        return [tuple(r) for r in rec["ranges"]]
+
+    # -- recovery --------------------------------------------------------------
+    def records(self) -> List[Dict]:
+        """Every readable migration record (torn records are residue of
+        an unpersisted decide — the migration never happened — and are
+        dropped)."""
+        out = []
+        for fn in sorted(self.pool.listdir("mig")):
+            rec = self.pool.read_record(f"mig/{fn}")
+            if rec is None:
+                self.pool.delete(f"mig/{fn}")
+                continue
+            out.append(rec)
+        return out
+
+    def pending(self) -> List[Dict]:
+        """Records whose migration is not COMPLETED (recovery work)."""
+        return [r for r in self.records()
+                if r.get("state") != MIG_COMPLETED]
+
+    def prune(self) -> int:
+        """Durably drop COMPLETED records; returns how many."""
+        pruned = 0
+        for fn in self.pool.listdir("mig"):
+            rec = self.pool.read_record(f"mig/{fn}")
+            if rec is not None and rec.get("state") != MIG_COMPLETED:
+                continue
+            self.pool.delete_persist(f"mig/{fn}")
+            pruned += 1
+        return pruned
+
+    def __len__(self) -> int:
+        return len(self.pool.listdir("mig"))
+
+    def __repr__(self) -> str:
+        return f"MigrationLog({len(self)} records)"

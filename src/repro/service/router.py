@@ -59,6 +59,10 @@ class ShardRouter:
         self.n_shards = n_shards
         self.words_per_shard = words_per_shard
         self.policy = policy
+        # key-range routing overrides (online shard migration): ordered
+        # (lo, hi, shard) rows consulted BEFORE the hash — the in-memory
+        # image of the service's persistent route table
+        self.ranges: List[Tuple[int, int, int]] = []
 
     # -- address partition -----------------------------------------------------
     def shard_of_addr(self, addr: int) -> int:
@@ -94,8 +98,48 @@ class ShardRouter:
     def shard_of_key(self, key: int) -> int:
         """Multiplicative-hash key routing for the KV front (the same
         :func:`repro.structures.key_shard` that ``partition_ops``
-        uses, so pre-partitioned workloads land where ops route)."""
+        uses, so pre-partitioned workloads land where ops route).
+        Range overrides installed by a completed shard migration win
+        over the hash."""
+        for lo, hi, shard in self.ranges:
+            if lo <= key < hi:
+                return shard
         return key_shard(key, self.n_shards)
+
+    def hash_shard_of_key(self, key: int) -> int:
+        """The pure hash route, ignoring overrides (what the key would
+        do with no migrations — recovery uses this to tell a migrated
+        copy from a key that natively hashes to its shard)."""
+        return key_shard(key, self.n_shards)
+
+    def set_range(self, lo: int, hi: int, shard: int) -> None:
+        """Install a key-range override; the newest override wins over
+        its whole range, so overlapping older rows are TRIMMED to their
+        non-overlapping remainder (a later migration may re-migrate part
+        of an earlier one's range).  Idempotent; the caller persists the
+        route table (``MigrationLog.save_routes``) — this is only the
+        in-memory image."""
+        if not lo < hi:
+            raise ValueError(f"empty key range [{lo}, {hi})")
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        self.clear_range(lo, hi)
+        self.ranges.append((lo, hi, shard))
+        self.ranges.sort()
+
+    def clear_range(self, lo: int, hi: int) -> None:
+        """Remove [lo, hi) from every override, trimming partial
+        overlaps to their remainder."""
+        out: List[Tuple[int, int, int]] = []
+        for a, b, s in self.ranges:
+            if b <= lo or hi <= a:
+                out.append((a, b, s))
+                continue
+            if a < lo:
+                out.append((a, lo, s))
+            if hi < b:
+                out.append((hi, b, s))
+        self.ranges = out
 
     # -- op classification -----------------------------------------------------
     def classify(self, op: MwCASOp) -> RoutedOp:

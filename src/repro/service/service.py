@@ -24,14 +24,16 @@ import pathlib
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+from repro import PMemPool
 from repro.obs import reset_metrics, span
 from repro.pmwcas import Backend, MwCASOp, make_backend
-from repro.structures import (BzTreeIndex, EXHAUSTED, FULL, HashMap, KVOp,
-                              NeedsSplit, OK, OutOfRegions, SCAN,
-                              StructResult)
+from repro.structures import (BzTreeIndex, DELETE, EXHAUSTED, FULL, HashMap,
+                              INSERT, KVOp, NeedsResize, NeedsSplit, OK,
+                              OutOfRegions, SCAN, StructResult)
 
 from .executor import DispatchStats, execute_wave, schedule_wave, \
     select_executor
+from .journal import MIG_MIGRATING, MIG_ROUTED, MigrationLog
 from .router import ShardRouter
 from .stats import ServiceStats, collect_durability, fresh_stats
 
@@ -78,6 +80,27 @@ class _PendingKV:
         self.attempts = 0
 
 
+class _Migration:
+    """One in-flight key-range migration (service-side state; the
+    durable truth is the :class:`MigrationLog` record)."""
+
+    __slots__ = ("mig_id", "lo", "hi", "dst", "held", "start_step",
+                 "start_ns")
+
+    def __init__(self, mig_id: str, lo: int, hi: int, dst: int,
+                 start_step: int):
+        self.mig_id = mig_id
+        self.lo = lo
+        self.hi = hi
+        self.dst = dst
+        self.held: List[_PendingKV] = []     # ops parked until the swing
+        self.start_step = start_step
+        self.start_ns = time.perf_counter_ns()
+
+    def covers(self, key: int) -> bool:
+        return self.lo <= key < self.hi
+
+
 class KVService:
     """Sharded, batched KV execution service (see module docstring).
 
@@ -92,12 +115,13 @@ class KVService:
                  structure: str = "hashmap",
                  backend: Union[str, Callable[..., Backend],
                                 Sequence[Backend]] = "kernel",
-                 n_buckets: int = 64,
+                 n_buckets: int = 64, max_doublings: int = 0,
                  leaf_cap: int = 4, root_cap: int = 8, n_regions: int = 8,
                  round_cap: int = 16, max_op_rounds: Optional[int] = None,
                  durable_root: Union[str, pathlib.Path, None] = None,
                  group_commit: bool = True,
                  wal_prune_every: int = 0,
+                 migration_pool=None, migration_chunk: int = 8,
                  use_kernel: bool = False, interpret: bool = True,
                  executor=None):
         if n_shards < 1:
@@ -106,10 +130,11 @@ class KVService:
             raise ValueError(f"unknown structure {structure!r}")
         self.structure = structure
         self.n_buckets = n_buckets
+        self.max_doublings = max_doublings
         self.tree_shape = dict(leaf_cap=leaf_cap, root_cap=root_cap,
                                n_regions=n_regions)
         if structure == "hashmap":
-            words = 2 * n_buckets
+            words = HashMap.words_needed(n_buckets, max_doublings)
         else:
             words = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)
         self.words_per_shard = words
@@ -130,6 +155,22 @@ class KVService:
         self.stats: ServiceStats = fresh_stats(n_shards, round_cap)
         self._queues: List[List[_PendingKV]] = [[] for _ in range(n_shards)]
         self._seq = 0
+        # online key-range migration (decide -> copy -> swing; DESIGN.md
+        # Sec. 12): the durable decision log lives in its own pool so
+        # its persists are crash-sweepable like any shard's
+        if migration_chunk < 1:
+            raise ValueError("migration_chunk must be >= 1")
+        self.migration_chunk = migration_chunk
+        if migration_pool is None and durable_root is not None:
+            migration_pool = PMemPool(pathlib.Path(durable_root) / "miglog")
+        elif isinstance(migration_pool, (str, pathlib.Path)):
+            migration_pool = PMemPool(migration_pool)
+        self.mig_pool = migration_pool
+        self.mig_log = (MigrationLog(migration_pool)
+                        if migration_pool is not None else None)
+        self._migrations: List[_Migration] = []
+        self._mig_seq = 0
+        self._recover_migrations()
 
     # -- construction ----------------------------------------------------------
     @staticmethod
@@ -156,7 +197,8 @@ class KVService:
 
     def _attach(self, backend: Backend):
         if self.structure == "hashmap":
-            return HashMap(backend, self.n_buckets)
+            return HashMap(backend, self.n_buckets,
+                           max_doublings=self.max_doublings)
         return BzTreeIndex(backend, **self.tree_shape)
 
     # -- submission ------------------------------------------------------------
@@ -165,7 +207,12 @@ class KVService:
         fut = KVFuture(op, client, shard, self._seq, self.stats.steps)
         self._seq += 1
         self.stats.submitted += 1
-        self._queues[shard].append(_PendingKV(fut))
+        mig = self._covering_migration(op)
+        if mig is not None:
+            # park until the routing swings; released ops re-route
+            mig.held.append(_PendingKV(fut))
+        else:
+            self._queues[shard].append(_PendingKV(fut))
         return fut
 
     def submit_many(self, ops: Sequence[KVOp], client=0) -> List[KVFuture]:
@@ -173,17 +220,22 @@ class KVService:
 
     @property
     def pending_count(self) -> int:
-        return sum(len(q) for q in self._queues)
+        return sum(len(q) for q in self._queues) \
+            + sum(len(m.held) for m in self._migrations)
 
     # -- execution -------------------------------------------------------------
     def step(self) -> int:
-        """One service wave: compile, form rounds, execute, complete.
-        Returns the number of futures completed this wave."""
-        if not self.pending_count:
+        """One service wave: compile, form rounds, execute, complete —
+        plus one copy chunk of every in-flight migration (the
+        incremental materialize; the swing runs the wave the copy
+        drains).  Returns the number of futures completed this wave."""
+        if not self.pending_count and not self._migrations:
             return 0
         self.stats.steps += 1
         with span("service.wave", step=self.stats.steps) as sp:
             completed = self._execute_step()
+            if self._migrations:
+                self._advance_migrations()
             if (self.wal_prune_every and
                     self.stats.steps % self.wal_prune_every == 0):
                 # per-shard WAL hygiene on a wave cadence (the committer
@@ -267,15 +319,19 @@ class KVService:
     # -- wave internals --------------------------------------------------------
     def _compile_shard(self, s: int):
         """Compile shard ``s``'s queue against one snapshot.  Immediate
-        results complete; split requests run the tree's grow protocol
-        (ops recompile next wave); CAS-compiled ops return for round
-        formation."""
+        results complete; split/resize requests run the structure's grow
+        protocol (ops recompile next wave); CAS-compiled ops return for
+        round formation."""
         struct = self.structs[s]
+        if getattr(struct, "hdr", 0) and struct.migrating:
+            # an in-flight directory doubling pumps a chunk per wave
+            struct.resize_step(max_moves=max(len(self._queues[s]), 2))
         snap = struct.snapshot()
         ready: List[_PendingKV] = []
         later: List[_PendingKV] = []
         done = 0
         splits: Dict[int, List[_PendingKV]] = {}
+        resizes: List[_PendingKV] = []
         for pending in self._queues[s]:
             fut = pending.future
             if pending.attempts > self.max_op_rounds:
@@ -283,7 +339,9 @@ class KVService:
                 done += 1
                 continue
             compiled = struct.compile_op(fut.op, snap)
-            if isinstance(compiled, StructResult):
+            if isinstance(compiled, NeedsResize):
+                resizes.append(pending)
+            elif isinstance(compiled, StructResult):
                 if fut.op.kind == SCAN and compiled.status == OK:
                     # scans cover the whole keyspace: sum the count over
                     # every shard partition (each against its own wave
@@ -303,6 +361,18 @@ class KVService:
                 pending.local = compiled
                 ready.append(pending)
         self._queues[s] = []
+        if resizes:
+            # publish the doubling decision; the waiters recompile next
+            # wave against the split-brain table (room is immediate: a
+            # fresh generation has twice the buckets)
+            if struct.begin_resize():
+                for pending in resizes:
+                    pending.attempts += 1
+                later.extend(resizes)
+            else:
+                for pending in resizes:
+                    self._complete(pending.future, FULL)
+                    done += 1
         if splits:
             # grow first; this wave's compiled ops would mostly lose
             # (the split freezes their leaf's meta), so everything on
@@ -342,9 +412,194 @@ class KVService:
             latency, status,
             latency_us=(time.perf_counter_ns() - fut.submit_ns) / 1e3)
 
+    # -- online key-range migration --------------------------------------------
+    def _covering_migration(self, op: KVOp) -> Optional[_Migration]:
+        """The in-flight migration that must hold this op, if any.
+        Scans are held by ANY migration: their count sums every shard,
+        and during a copy a key is (correctly) present on two shards."""
+        for m in self._migrations:
+            if m.covers(op.key) or op.kind == SCAN:
+                return m
+        return None
+
+    def start_migration(self, lo: int, hi: int, dst: int) -> str:
+        """Decide: persist the MIGRATING record and start holding the
+        range.  The copy then proceeds one chunk per ``step`` wave; the
+        swing (route flip + cleanup + held-op release) runs in the wave
+        the copy drains.  Returns the migration id."""
+        if not lo < hi:
+            raise ValueError(f"empty key range [{lo}, {hi})")
+        if not 0 <= dst < len(self.structs):
+            raise ValueError(f"shard {dst} out of range")
+        for m in self._migrations:
+            if lo < m.hi and m.lo < hi:
+                raise RuntimeError(
+                    f"range [{lo}, {hi}) overlaps in-flight migration "
+                    f"{m.mig_id}")
+        if self.mig_log is None and any(
+                getattr(b, "pool", None) is not None for b in self.backends):
+            # crash-capable shards without a decision log would lose the
+            # route table on crash while keeping the moved keys — silent
+            # misrouting; make it a loud configuration error instead
+            raise ValueError(
+                "durable shards need a migration decision log: pass "
+                "migration_pool= or durable_root= to KVService")
+        mig_id = f"mig{self._mig_seq:04d}"
+        self._mig_seq += 1
+        if self.mig_log is not None:
+            self.mig_log.decide(mig_id, lo, hi, dst)    # decide persist
+        m = _Migration(mig_id, lo, hi, dst, self.stats.steps)
+        self._migrations.append(m)
+        self.stats.migrations += 1
+        # ops already queued for the range (and all scans) park too
+        for s in range(len(self._queues)):
+            keep = []
+            for pending in self._queues[s]:
+                op = pending.future.op
+                if m.covers(op.key) or op.kind == SCAN:
+                    m.held.append(pending)
+                else:
+                    keep.append(pending)
+            self._queues[s] = keep
+        m.held.sort(key=lambda p: p.future.seq)
+        return mig_id
+
+    def migrate_range(self, lo: int, hi: int, dst: int,
+                      max_steps: int = 10_000) -> str:
+        """Synchronous convenience: start a migration and step the
+        service until it (and everything it held) completes."""
+        mig_id = self.start_migration(lo, hi, dst)
+        for _ in range(max_steps):
+            if not any(m.mig_id == mig_id for m in self._migrations):
+                return mig_id
+            self.step()
+        raise RuntimeError(f"migration {mig_id} did not converge in "
+                           f"{max_steps} steps")
+
+    def _advance_migrations(self) -> None:
+        for m in list(self._migrations):
+            with span("service.migration_chunk", mig=m.mig_id):
+                copied = self._copy_chunk(m)
+            if copied == 0:
+                self._swing_migration(m)
+                self._migrations.remove(m)
+
+    def _copy_chunk(self, m: _Migration) -> int:
+        """Materialize: copy up to ``migration_chunk`` in-range keys to
+        the destination in one batched-MwCAS ``apply``.  Returns keys
+        copied; 0 means the copy has drained."""
+        dst_struct = self.structs[m.dst]
+        already = set(dst_struct.items())
+        batch: List[KVOp] = []
+        for s, struct in enumerate(self.structs):
+            if s == m.dst:
+                continue
+            for k, v in sorted(struct.items().items()):
+                if m.covers(k) and k not in already:
+                    batch.append(KVOp(INSERT, k, v))
+                    if len(batch) >= self.migration_chunk:
+                        break
+            if len(batch) >= self.migration_chunk:
+                break
+        if not batch:
+            return 0
+        moved = 0
+        for r in dst_struct.apply(batch):
+            if r.status == FULL:
+                raise RuntimeError(
+                    f"migration {m.mig_id}: destination shard {m.dst} is "
+                    "full — size it for the range or make it elastic")
+            if r.status == OK:
+                moved += 1
+        self.stats.keys_moved += moved
+        return len(batch)
+
+    def _swing_migration(self, m: _Migration) -> None:
+        """Swing: ROUTED record persist (the linearization point), then
+        the route table, then cleanup + release.  A crash after the
+        first persist rolls forward; before it, back."""
+        with span("service.migration_swing", mig=m.mig_id):
+            if self.mig_log is not None:
+                self.mig_log.mark_routed(m.mig_id)
+            self.router.set_range(m.lo, m.hi, m.dst)
+            if self.mig_log is not None:
+                self.mig_log.save_routes(self.router.ranges)
+            self._cleanup_range(m.lo, m.hi, m.dst)
+            if self.mig_log is not None:
+                self.mig_log.complete(m.mig_id)
+        self.stats.mig_pause_waves.append(
+            max(1, self.stats.steps - m.start_step))
+        self.stats.mig_pause_us.record(
+            (time.perf_counter_ns() - m.start_ns) / 1e3)
+        # release: held ops re-route (the override now wins) and rejoin
+        # the wave loop in submission order
+        for pending in sorted(m.held, key=lambda p: p.future.seq):
+            shard = self.router.shard_of_key(pending.future.op.key)
+            pending.future.shard = shard
+            self._requeue(shard, [pending])
+
+    def _cleanup_range(self, lo: int, hi: int, dst: int) -> None:
+        """Delete now-unroutable source copies of [lo, hi): in-range
+        keys living where the CURRENT route table does not send them.
+        At swing time that is every source copy; at recovery-redo time
+        the routing check also protects keys a LATER migration has
+        since legitimately moved elsewhere."""
+        for s, struct in enumerate(self.structs):
+            if s == dst:
+                continue
+            dels = [KVOp(DELETE, k) for k in sorted(struct.items())
+                    if lo <= k < hi and self.router.shard_of_key(k) != s]
+            if dels:
+                struct.apply(dels)
+
+    def _recover_migrations(self) -> None:
+        """Redo/rollback from the decision log (constructor + crash).
+
+        MIGRATING records roll BACK: the migration never routed, so
+        in-range keys on the destination that do not route there are
+        half-copied residue — delete them, drop the record.  ROUTED
+        records roll FORWARD: re-install the override, re-persist the
+        route table, redo the cleanup, mark COMPLETED.  Every redo step
+        is idempotent, so a crash during recovery just recovers again.
+        """
+        if self.mig_log is None:
+            return
+        self.router.ranges = self.mig_log.load_routes()
+        seqs = [int(r["id"][3:]) for r in self.mig_log.records()
+                if r["id"].startswith("mig") and r["id"][3:].isdigit()]
+        self._mig_seq = 1 + max(seqs) if seqs else 0
+        pend = self.mig_log.pending()
+        # install every pending ROUTED override FIRST, in decision order
+        # (ids are monotone, records() sorts by them): COMPLETED marks
+        # are lazy, so several routed migrations may replay at once, and
+        # each cleanup below must judge against the FINAL route table —
+        # an earlier record's redo must not delete keys a later
+        # migration has since moved onto their rightful shard
+        routed = [r for r in pend if r["state"] == MIG_ROUTED]
+        for rec in routed:
+            self.router.set_range(rec["lo"], rec["hi"], rec["dst"])
+        if routed:
+            self.mig_log.save_routes(self.router.ranges)
+        for rec in pend:
+            lo, hi, dst = rec["lo"], rec["hi"], rec["dst"]
+            if rec["state"] == MIG_MIGRATING:
+                # rollback: half-copied residue is any in-range key on
+                # the destination that does not route there
+                struct = self.structs[dst]
+                dels = [KVOp(DELETE, k) for k in sorted(struct.items())
+                        if lo <= k < hi
+                        and self.router.shard_of_key(k) != dst]
+                if dels:
+                    struct.apply(dels)
+                self.mig_log.abort(rec["id"])
+            else:                                   # ROUTED: roll forward
+                self._cleanup_range(lo, hi, dst)
+                self.mig_log.complete(rec["id"])
+
     # -- reads / integrity -----------------------------------------------------
     def lookup(self, key: int) -> Optional[int]:
-        return self.structs[self.router.shard_of_key(key)].lookup(key)
+        key_shard = self.router.shard_of_key(key)
+        return self.structs[key_shard].lookup(key)
 
     def items(self) -> Dict[int, int]:
         out: Dict[int, int] = {}
@@ -354,18 +609,33 @@ class KVService:
 
     def check_integrity(self) -> Dict[int, int]:
         """Per-shard structure invariants + the routing invariant (no
-        key lives on a shard it doesn't hash to)."""
+        key lives on a shard it doesn't route to).  During an in-flight
+        migration the destination legitimately holds not-yet-routed
+        copies of in-range keys; those are exempt from the routing and
+        duplicate checks but must MATCH the source value — held writes
+        guarantee the copy can never diverge."""
         out: Dict[int, int] = {}
+        copies: Dict[int, int] = {}
         for s, struct in enumerate(self.structs):
             items = struct.check_integrity()
             for k, v in items.items():
-                if self.router.shard_of_key(k) != s:
+                route = self.router.shard_of_key(k)
+                if route != s:
+                    if any(m.dst == s and m.covers(k)
+                           for m in self._migrations):
+                        copies[k] = v
+                        continue
                     raise RuntimeError(
                         f"key {k} lives on shard {s} but routes to "
-                        f"{self.router.shard_of_key(k)}")
+                        f"{route}")
                 if k in out:
                     raise RuntimeError(f"key {k} live on two shards")
                 out[k] = v
+        for k, v in copies.items():
+            if k in out and out[k] != v:
+                raise RuntimeError(
+                    f"migration copy of key {k} diverged: source holds "
+                    f"{out[k]}, destination copy holds {v}")
         return out
 
     def gc_regions(self) -> int:
@@ -414,9 +684,14 @@ class KVService:
                 recovered.append(crash())
             new = KVService(len(recovered), structure=self.structure,
                             backend=recovered, n_buckets=self.n_buckets,
+                            max_doublings=self.max_doublings,
                             round_cap=self.round_cap,
                             max_op_rounds=self.max_op_rounds,
                             wal_prune_every=self.wal_prune_every,
+                            migration_pool=(self.mig_pool.crash()
+                                            if self.mig_pool is not None
+                                            else None),
+                            migration_chunk=self.migration_chunk,
                             **self.tree_shape)
             new.stats = self.stats
             new.executor = self.executor

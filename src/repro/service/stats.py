@@ -64,6 +64,13 @@ class ServiceStats:
     cross_ops: int = 0           # cross-shard ops executed in them
     journal_pruned: int = 0      # cross-shard records GC'd on cadence
     wal_pruned: int = 0          # spent per-shard WAL records GC'd on cadence
+    migrations: int = 0          # key-range migrations decided
+    keys_moved: int = 0          # keys copied to their new shard
+    # per-migration pause: how long the range was held, in service waves
+    # (substrate-independent) and wall microseconds (this backend)
+    mig_pause_waves: List[int] = dataclasses.field(default_factory=list)
+    mig_pause_us: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.mig_pause_us"))
     # the executor's trace-cache accounting, attached after every wave
     # (None until a wave ran or the executor carries no stats)
     dispatch: Optional[object] = None
@@ -175,6 +182,13 @@ class ServiceStats:
             "p50_latency_us": round(self.p50_latency_us, 3),
             "p99_latency_us": round(self.p99_latency_us, 3),
         }
+        if self.migrations:
+            row.update({
+                "migrations": self.migrations,
+                "keys_moved": self.keys_moved,
+                "mig_pause_waves_max": max(self.mig_pause_waves, default=0),
+                "mig_pause_us_p99": round(self.mig_pause_us.p99_us, 3),
+            })
         if self.dispatch is not None:
             row.update({
                 "traces": self.dispatch.traces,

@@ -33,17 +33,19 @@ and the crash invariants, and Sec. 7 for the multi-node tree.
 from .bztree import (COUNT_MASK, FROZEN_BIT, NODE_EXHAUSTED, NODE_EXISTS,
                      NODE_FROZEN, NODE_FULL, NODE_OK, SortedNode, SplitError,
                      read_pointer, swap_pointer)
-from .bztree_index import BzTreeIndex, LEAF_DEAD, LeafNode, NeedsSplit
+from .bztree_index import (BzTreeIndex, INNER_BIT, LEAF_DEAD, LeafNode,
+                           NeedsSplit)
 from .checkers import (CrashCheckError, check_durable_crash_sweep,
-                       check_sim_crash_sweep, check_tree_crash_sweep,
-                       replay_effects)
+                       check_hashmap_resize_sweep, check_sim_crash_sweep,
+                       check_tree_crash_sweep, replay_effects)
 from .differential import (StructDifferentialReport, conservative_verdicts,
                            run_struct_differential, shadow_batch,
                            winner_blocking_verdicts)
 from .freelist import DoubleFree, FreeListAllocator, OutOfRegions
 from .hashmap import (DELETE, EMPTY, EXHAUSTED, EXISTS, FULL, HashMap,
-                      INSERT, KVOp, NOT_FOUND, OK, READ, RoundTrace, SCAN,
-                      StructResult, TOMBSTONE, TornStructure, UPDATE)
+                      INSERT, KVOp, MIG_BIT, NOT_FOUND, NeedsResize, OK,
+                      READ, RoundTrace, SCAN, StructResult, TOMBSTONE,
+                      TornStructure, UPDATE)
 from .workload import (LOAD, WorkloadSpec, WorkloadStats, YCSB_A, YCSB_B,
                        YCSB_C, YCSB_E, batches, client_streams,
                        compile_workload, interleave, kernel_round_arrays,
@@ -52,7 +54,7 @@ from .workload import (LOAD, WorkloadSpec, WorkloadStats, YCSB_A, YCSB_B,
 __all__ = [
     # hash map
     "HashMap", "KVOp", "StructResult", "RoundTrace", "TornStructure",
-    "EMPTY", "TOMBSTONE",
+    "NeedsResize", "EMPTY", "TOMBSTONE", "MIG_BIT",
     "READ", "INSERT", "UPDATE", "DELETE", "SCAN",
     "OK", "EXISTS", "NOT_FOUND", "FULL", "EXHAUSTED",
     # bztree node
@@ -60,7 +62,7 @@ __all__ = [
     "FROZEN_BIT", "COUNT_MASK",
     "NODE_OK", "NODE_FULL", "NODE_FROZEN", "NODE_EXISTS", "NODE_EXHAUSTED",
     # multi-node tree
-    "BzTreeIndex", "LeafNode", "LEAF_DEAD", "NeedsSplit",
+    "BzTreeIndex", "LeafNode", "LEAF_DEAD", "NeedsSplit", "INNER_BIT",
     # allocator
     "FreeListAllocator", "DoubleFree", "OutOfRegions",
     # workload
@@ -71,7 +73,8 @@ __all__ = [
     "partition_ops",
     # checkers + differential
     "check_durable_crash_sweep", "check_sim_crash_sweep",
-    "check_tree_crash_sweep", "replay_effects",
+    "check_tree_crash_sweep", "check_hashmap_resize_sweep",
+    "replay_effects",
     "CrashCheckError",
     "run_struct_differential", "StructDifferentialReport",
     "conservative_verdicts", "winner_blocking_verdicts", "shadow_batch",

@@ -207,7 +207,10 @@ class SortedNode:
         targets = (self._node_image(left_base, left_keys)
                    + self._node_image(right_base, right_keys)
                    + [tuple(t) for t in extra_targets])
-        (res,) = self.backend.execute([MwCASOp(targets)])
+        # canonical (address-sorted) embedding order: extra_targets may
+        # sit below the half regions, and the simulator shadow replays
+        # growth rounds verbatim
+        (res,) = self.backend.execute([MwCASOp(targets).sorted()])
         if not res.success:
             raise SplitError(
                 "split target region was not zeroed or is contended")

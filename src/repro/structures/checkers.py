@@ -19,9 +19,18 @@ no lost committed effect*:
   micro-op granularity either).
 - **Tree sweep** (:func:`check_tree_crash_sweep`): the durable sweep
   lifted to the multi-node :class:`repro.structures.BzTreeIndex` —
-  crashing at every persist point *through a leaf split* must leave
-  either the pre-split or the fully-linked post-split tree (DESIGN.md
-  Sec. 7), never a torn node image or a half-installed parent entry.
+  crashing at every persist point *through a leaf split* (and, when the
+  workload overflows the root, through a root split's pending-word
+  handoff) must leave either the pre-split or the fully-linked
+  post-split tree (DESIGN.md Sec. 7/12), never a torn node image or a
+  half-installed parent entry.
+- **Resize sweep** (:func:`check_hashmap_resize_sweep`): the durable
+  sweep through directory doubling — every persist of decide / pump /
+  split-brain client ops / finalize swing (DESIGN.md Sec. 12).
+- **Migration sweep** (``repro.service.check_migration_crash_sweep``):
+  the same sweep lifted to the service's online key-range shard
+  migration — it needs a whole ``KVService``, so it lives one layer up
+  (DESIGN.md Sec. 12).
 
 Both durable sweeps also exercise WAL hygiene in their teardown: after
 each recovery check the COMPLETED descriptor records are pruned
@@ -219,6 +228,34 @@ def check_tree_crash_sweep(kvops: Sequence[KVOp], root, *,
         group_commit=group_commit)
 
 
+def check_hashmap_resize_sweep(kvops: Sequence[KVOp], n_buckets: int,
+                               root, *, max_doublings: int = 2,
+                               committer: str = "wal",
+                               max_crash_points: int = 1200,
+                               group_commit: bool = True,
+                               batch: int = 1) -> int:
+    """Crash-at-every-persist sweep through directory doubling.
+
+    The workload is expected to overflow generation 0 (size it with more
+    inserts than ``n_buckets``), so the sweep crosses every persist of
+    the decide (MIG_BIT CAS), the pump (4-word moves), the guarded
+    split-brain client ops and the finalize swing.  After every crash +
+    recovery the re-attached map must pass
+    :meth:`HashMap.check_integrity` (pairs untorn in every generation,
+    retired generations drained, no key live twice, future arrays
+    all-zero — i.e. the table is pre-growth, mid-growth or post-growth,
+    never torn) and hold exactly the committed effects; the live items
+    are growth-invariant, so the engine's acceptable-state computation
+    needs no growth awareness at all.  Returns crash points swept.
+    """
+    return _durable_crash_sweep(
+        kvops, root,
+        lambda backend: HashMap(backend, n_buckets,
+                                max_doublings=max_doublings),
+        committer=committer, max_crash_points=max_crash_points,
+        what="elastic map", group_commit=group_commit, batch=batch)
+
+
 def check_sim_crash_sweep(ops: Sequence[MwCASOp], *,
                           algorithm: Union[str, Algorithm] = OURS,
                           crash_steps: Optional[Sequence[int]] = None,
@@ -233,10 +270,10 @@ def check_sim_crash_sweep(ops: Sequence[MwCASOp], *,
     asserts per-op atomicity for ops with private addresses.  Returns
     the number of crash points checked.
     """
-    widths = {op.k for op in ops}
-    if len(widths) != 1:
-        raise ValueError(f"need one uniform op width, got {sorted(widths)}")
-    (k,) = widths
+    # mixed widths are fine: shadow_batch pads every op to the round's
+    # max width with fresh private words (growth rounds batch 4-word
+    # moves next to 1-word generation CASes)
+    k = max(op.k for op in ops)
     n_shadow, shadow = shadow_batch(ops)
     T = len(shadow)
     table = np.asarray([[list(op.addrs)] for op in shadow], np.int32)

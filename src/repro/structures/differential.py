@@ -159,6 +159,7 @@ def run_struct_differential(kvops: Sequence[KVOp], n_buckets: int = 0, *,
                             durable_root=None, use_kernel: bool = False,
                             interpret: bool = True,
                             max_rounds: Optional[int] = None,
+                            max_doublings: int = 0,
                             leaf_cap: int = 4, root_cap: int = 8,
                             n_regions: int = 8
                             ) -> StructDifferentialReport:
@@ -168,16 +169,20 @@ def run_struct_differential(kvops: Sequence[KVOp], n_buckets: int = 0, *,
     round counts, and every shadow-checked round's verdicts match.
 
     ``structure`` selects the structure under test: ``"hashmap"`` (size
-    by ``n_buckets``) or ``"bztree"`` (the multi-node tree, sized by
-    ``leaf_cap`` / ``root_cap`` / ``n_regions``)."""
+    by ``n_buckets``; ``max_doublings > 0`` makes it elastic, so growth
+    rounds — generation CASes, 4-word pump moves, guarded split-brain
+    ops — run in kernel+durable lockstep and shadow-verify on the
+    simulator like any other round) or ``"bztree"`` (the multi-node
+    tree, sized by ``leaf_cap`` / ``root_cap`` / ``n_regions``; its
+    splits, root splits included, are already part of the history)."""
     kvops = list(kvops)
     if structure == "hashmap":
         if n_buckets < 1:
             raise ValueError("hashmap differential needs n_buckets >= 1")
-        n_words = 2 * n_buckets
+        n_words = HashMap.words_needed(n_buckets, max_doublings)
 
         def make(backend):
-            return HashMap(backend, n_buckets)
+            return HashMap(backend, n_buckets, max_doublings=max_doublings)
     elif structure == "bztree":
         from .bztree_index import BzTreeIndex
         n_words = BzTreeIndex.words_needed(leaf_cap, root_cap, n_regions)

@@ -9,9 +9,9 @@ from repro.chaos import (ChaosReport, ClientMachine, ClientSpec, Event,
                          FaultMachine, FaultSpec, LinearizabilityError,
                          Machine, ScenarioDriver, Transition,
                          CRASH_AT_PERSIST, SHARD_STORM, check_history,
-                         crash_mid_scan, default_scenarios,
-                         drifting_skew, hot_key_storm, sim_native,
-                         straggler)
+                         crash_mid_migration, crash_mid_scan,
+                         default_scenarios, drifting_skew, hot_key_storm,
+                         sim_native, straggler)
 
 
 # ---------------------------------------------------------------------------
@@ -259,8 +259,38 @@ def test_default_scenarios_cover_families():
     scs = default_scenarios(seed=1, waves=30)
     assert {s.family for s in scs} == {
         "hot_key_storm", "crash_mid_scan", "straggler", "drifting_skew",
-        "sim_native"}
+        "crash_mid_migration", "sim_native"}
     assert all(s.seed == 1 for s in scs)
+
+
+def test_chaos_crash_mid_migration_family(tmp_path):
+    """Key-range migrations under live traffic with crashes scheduled
+    into the copy and the swing: every history linearizable, every
+    recovered state routable (a failed routing check would raise out of
+    check_integrity during the run)."""
+    crashes = migrations = 0
+    for seed in (0, 1, 2):
+        rep = _run(crash_mid_migration(seed=seed, waves=50), tmp_path,
+                   sub=f"m{seed}")
+        assert rep.check is not None and rep.check.ok, rep.summary()
+        assert rep.migrations >= 1, "no migration ever started"
+        crashes += rep.crashes
+        migrations += rep.migrations
+    assert crashes >= 2, "the family must actually inject crashes"
+    assert migrations >= 4
+
+
+def test_chaos_crash_mid_migration_determinism(tmp_path):
+    """Same seed -> byte-identical traces across runs, with crashes
+    landing inside migrations (the migration machinery — decide, copy
+    chunks, swing, rollback — must be fully seeded-deterministic)."""
+    sc = crash_mid_migration(seed=1, waves=40)
+    a = _run(sc, tmp_path, sub="ma")
+    b = _run(sc, tmp_path, sub="mb")
+    assert a.crashes >= 1 and a.migrations >= 1
+    assert a.trace_lines == b.trace_lines
+    assert a.final_items == b.final_items
+    assert (a.migrations, a.crashes) == (b.migrations, b.crashes)
 
 
 def test_chaos_report_summary_fields(tmp_path):

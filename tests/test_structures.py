@@ -10,7 +10,8 @@ import pytest
 from repro.pmwcas import (DurableBackend, KernelBackend, MwCASOp,
                           ops_from_arrays, zipf_probs)
 from repro.structures import (BzTreeIndex, DELETE, EXISTS, FULL,
-                              FreeListAllocator, DoubleFree, HashMap, INSERT,
+                              FreeListAllocator, DoubleFree, HashMap,
+                              INNER_BIT, INSERT,
                               KVOp, LEAF_DEAD, LeafNode, NODE_FROZEN,
                               NODE_FULL, NODE_OK, NOT_FOUND, OK,
                               OutOfRegions, READ, SCAN,
@@ -573,20 +574,42 @@ def test_tree_split_preserves_items_and_routing():
 
 
 def test_tree_split_is_exactly_two_mwcas_rounds():
-    """Split propagation = the wide materialize+pre-entry op, then the
-    2-word install — with only the 1-word freeze in front (DESIGN §7)."""
+    """Split propagation = the wide materialize op, then the 2-word
+    swing — with only the 1-word freeze in front (DESIGN §7/§12).  The
+    FIRST split is a ROOT split: the wide op carries both half images,
+    the new 1-entry root image and the pending word."""
     t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=4)
     t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
     executed = []
     real_execute = t.backend.execute
     t.backend.execute = lambda ops: (executed.append(list(ops)),
                                      real_execute(ops))[1]
-    (r,) = t.apply([KVOp(INSERT, 9, 90)])      # forces the split
-    assert r.status == OK and t.splits == 1
+    (r,) = t.apply([KVOp(INSERT, 9, 90)])      # forces the root split
+    assert r.status == OK and t.splits == 1 and t.root_splits == 1
     widths = [[op.k for op in batch] for batch in executed]
     # freeze (1-word), round 1 (ONE wide op: both 1-key half images of
-    # meta+key+value plus the 2-word pre-entry), round 2 (one 2-word
-    # install), then the retried insert (3-word)
+    # meta+key+value, the 4-word new root image, the pending word),
+    # round 2 (the 2-word super/pending swing), then the retried
+    # insert (3-word)
+    assert widths == [[1], [2 * 3 + 4 + 1], [2], [3]]
+
+
+def test_tree_nonroot_split_is_exactly_two_mwcas_rounds():
+    """Once an inner root exists, a leaf split is the original DESIGN §7
+    protocol: wide materialize + invisible parent pre-entry, then the
+    2-word count-bump/pointer-swing install."""
+    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=4)
+    t.apply([KVOp(INSERT, k, 10 * k) for k in (5, 3, 9)])   # root split
+    assert t.root_count() == 1
+    executed = []
+    real_execute = t.backend.execute
+    t.backend.execute = lambda ops: (executed.append(list(ops)),
+                                     real_execute(ops))[1]
+    (r,) = t.apply([KVOp(INSERT, 8, 80)])      # splits the right leaf
+    assert r.status == OK and t.splits == 2 and t.root_splits == 1
+    widths = [[op.k for op in batch] for batch in executed]
+    # freeze, wide op (two 1-key half images + 2-word pre-entry),
+    # 2-word install, retried insert
     assert widths == [[1], [2 * 3 + 2], [2], [3]]
 
 
@@ -594,22 +617,25 @@ def test_tree_pre_entry_invisible_until_install():
     """Round 1 pre-publishes the parent entry beyond the count: readers
     (and the integrity checker) still see the pre-split tree; the 2-word
     install is the linearization point."""
-    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=4)
-    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
-    leaf = LeafNode(t.backend, t.leaf_bases()[0], 2)
+    t = oracle_tree(leaf_cap=2, root_cap=4, n_regions=6)
+    t.apply([KVOp(INSERT, k, 10 * k) for k in (5, 3, 9)])   # inner root
+    root = t.root_base()
+    n = t.root_count()
+    assert n == 1
+    before = t.check_integrity()
+    leaf = LeafNode(t.backend, t.leaf_bases()[1], 2)   # the full [5, 9] leaf
     (grant,) = t.allocator.alloc([1])
     pair = t.allocator.region(grant[0])
-    n = t.root_count()
     sep = leaf.keys()[1]
     leaf.split(pair, pair + t.leaf_words,
                extra_targets=[(t.sep_addr(n), 0, sep),
                               (t.child_addr(n), 0, pair + t.leaf_words)])
-    assert t.root_count() == 0                 # entry not visible
-    assert t.check_integrity() == {3: 30, 5: 50}   # pre-split tree intact
-    assert t._install(n, sep, pair + t.leaf_words)
-    assert t.root_count() == 1                 # now fully linked
-    assert t.check_integrity() == {3: 30, 5: 50}
-    assert t.leaf_bases() == [pair, pair + t.leaf_words]
+    assert t.root_count() == n                 # entry not visible
+    assert t.check_integrity() == before       # pre-split tree intact
+    assert t._install(root, n, sep, pair + t.leaf_words)
+    assert t.root_count() == n + 1             # now fully linked
+    assert t.check_integrity() == before
+    assert t.leaf_bases()[1:] == [pair, pair + t.leaf_words]
 
 
 def test_tree_completes_pending_split_after_crash(tmp_path):
@@ -617,21 +643,55 @@ def test_tree_completes_pending_split_after_crash(tmp_path):
     invisible pre-entry; the next mutation completes the split from
     persisted state alone (left half derived from the pair region)."""
     db = DurableBackend(tmp_path)
-    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=6)
     t = BzTreeIndex(db, **kw)
-    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
-    leaf = LeafNode(db, t.leaf_bases()[0], 2)
+    t.apply([KVOp(INSERT, k, 10 * k) for k in (5, 3, 9)])   # inner root
+    n = t.root_count()
+    leaf = LeafNode(db, t.leaf_bases()[1], 2)  # the full [5, 9] leaf
     (grant,) = t.allocator.alloc([1])
     pair = t.allocator.region(grant[0])
     sep = leaf.keys()[1]
     leaf.split(pair, pair + t.leaf_words,
-               extra_targets=[(t.sep_addr(0), 0, sep),
-                              (t.child_addr(0), 0, pair + t.leaf_words)])
+               extra_targets=[(t.sep_addr(n), 0, sep),
+                              (t.child_addr(n), 0, pair + t.leaf_words)])
+    before = t.check_integrity()
     t2 = BzTreeIndex(db.crash(), **kw)         # attach over recovery
-    assert t2.check_integrity() == {3: 30, 5: 50}
-    (r,) = t2.apply([KVOp(INSERT, 9, 90)])     # lands on the frozen leaf
+    assert t2.check_integrity() == before
+    (r,) = t2.apply([KVOp(INSERT, 7, 70)])     # lands on the frozen leaf
     assert r.status == OK
-    assert t2.root_count() == 1
+    assert t2.root_count() == n + 1
+    assert t2.check_integrity() == {**before, 7: 70}
+
+
+def test_tree_completes_pending_root_split_after_crash(tmp_path):
+    """Crash between root-split round 1 and the super swing leaves the
+    pending word pointing at a fully materialized new root while super
+    still routes to the frozen old root; the next mutation completes
+    the swing from the pending word alone."""
+    db = DurableBackend(tmp_path)
+    kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
+    t = BzTreeIndex(db, **kw)
+    t.apply([KVOp(INSERT, 5, 50), KVOp(INSERT, 3, 30)])
+    # perform ROOT-SPLIT ROUND 1 by hand: both halves + new root image
+    # + pending word in one wide MwCAS, then "crash" before the swing
+    leaf = LeafNode(db, t.root_base(), 2)
+    (grant,) = t.allocator.alloc([1])
+    region = t.allocator.region(grant[0])
+    left, right = region, region + t.leaf_words
+    sep = leaf.keys()[1]
+    new_root = region + 2 * t.leaf_words
+    leaf.split(left, right, extra_targets=[
+        (new_root, 0, 1 | INNER_BIT), (new_root + 1, 0, left),
+        (new_root + 2, 0, sep), (new_root + 3, 0, right),
+        (t.pending_addr, 0, new_root)])
+    t2 = BzTreeIndex(db.crash(), **kw)         # attach over recovery
+    assert t2.root_base() == t.root_base()     # swing not yet visible
+    assert int(t2.backend.read(t2.pending_addr)) == new_root
+    assert t2.check_integrity() == {3: 30, 5: 50}
+    (r,) = t2.apply([KVOp(INSERT, 9, 90)])     # completes the swing
+    assert r.status == OK
+    assert t2.root_base() == new_root and t2.root_count() == 1
+    assert int(t2.backend.read(t2.pending_addr)) == 0
     assert t2.check_integrity() == {3: 30, 5: 50, 9: 90}
 
 
@@ -666,24 +726,27 @@ def test_tree_region_exhaustion_does_not_wedge_leaf():
 
 
 def test_tree_region_gc_reclaims_frozen_originals():
-    """ROADMAP satellite: split originals keep their pair regions
-    claimed forever without GC; ``gc_regions`` frees every region no
-    routing word references and the tree can grow again."""
+    """Split originals keep their regions claimed forever without GC;
+    ``gc_regions`` frees every region no routing state references and
+    the tree can grow again.  ``ensure_room`` now runs a GC pass
+    itself before reporting OutOfRegions, so growth rides through
+    region exhaustion without caller intervention."""
     t = oracle_tree(leaf_cap=2, root_cap=8, n_regions=3)
-    # region 0: bootstrap leaf; splitting eats region 1, freezing the
-    # original in region 0; the next split eats region 2, and so on
+    # region 0: bootstrap leaf; the root split eats region 1, freezing
+    # the original in region 0; the next leaf split eats region 2 —
+    # after that every further split must reclaim residue via auto-GC
     res = t.apply([KVOp(INSERT, k, k) for k in (10, 20, 30, 40)])
     assert all(r.status == OK for r in res) and t.splits >= 1
     before = t.check_integrity()
-    (r,) = t.apply([KVOp(INSERT, 50, 50)])     # no region left -> FULL
-    assert r.status == FULL
-    freed = t.gc_regions()
-    assert freed >= 1 and t.allocator.n_free >= freed
-    assert t.check_integrity() == before       # GC never touches live state
-    (r,) = t.apply([KVOp(INSERT, 50, 50)])     # the reclaimed region serves
+    assert t.allocator.n_free == 0
+    # no region left: the next split succeeds anyway because
+    # ensure_room GCs the frozen originals first
+    (r,) = t.apply([KVOp(INSERT, 50, 50)])
     assert r.status == OK
     assert t.check_integrity() == {**before, 50: 50}
-    assert t.gc_regions() >= 0                 # idempotent / re-runnable
+    freed = t.gc_regions()
+    assert freed >= 0                          # idempotent / re-runnable
+    assert t.check_integrity() == {**before, 50: 50}
 
 
 def test_tree_region_gc_protects_pending_split(tmp_path):
@@ -692,10 +755,11 @@ def test_tree_region_gc_protects_pending_split(tmp_path):
     next mutation completes the split from exactly that state)."""
     kw = dict(leaf_cap=2, root_cap=4, n_regions=4)
     from repro import PMemPool, SimulatedCrash
-    # find a crash point that lands between round 1 and the install:
-    # frozen routed leaf + non-empty pre-entry at the append position.
-    # The per-op protocol keeps the persist granularity this hunt was
-    # calibrated for (group commit collapses it to one fence per round)
+    # find a crash point that lands between root-split round 1 and the
+    # super swing: pending word set, super still on the frozen old
+    # root.  The per-op protocol keeps the persist granularity this
+    # hunt was calibrated for (group commit collapses it to one fence
+    # per round)
     for crash_at in range(6, 200):
         pool = PMemPool(tmp_path / f"c{crash_at}",
                         crash_after_persists=crash_at)
@@ -708,18 +772,19 @@ def test_tree_region_gc_protects_pending_split(tmp_path):
             t2 = BzTreeIndex(DurableBackend(pool=pool.crash(),
                                             group_commit=False), **kw)
             if t2.root_count() == 0 and \
-                    int(t2.backend.read(t2.child_addr(0))):
+                    int(t2.backend.read(t2.pending_addr)):
                 break
     else:
         pytest.skip("no crash point hit the inter-round window")
-    pre_pair = t2.backend.read(t2.child_addr(0))
+    pending = t2.backend.read(t2.pending_addr)
     t2.gc_regions()
-    # the pre-published pair survived GC and the split still completes
-    assert t2.backend.read(t2.child_addr(0)) == pre_pair
+    # the pending new root (and its halves, sharing the region)
+    # survived GC and the split still completes
+    assert t2.backend.read(t2.pending_addr) == pending
     res = t2.apply([KVOp(INSERT, 7, 70)])
     assert res[0].status == OK
     items = t2.check_integrity()
-    assert items[7] == 70 and t2.root_count() == 1
+    assert items[7] == 70 and t2.root_count() >= 1
 
 
 def test_tree_gc_on_durable_crash_recover(tmp_path):
@@ -741,13 +806,19 @@ def test_tree_gc_on_durable_crash_recover(tmp_path):
     assert t3.allocator.n_free >= freed
 
 
-def test_tree_root_full_reports_full():
-    t = oracle_tree(leaf_cap=2, root_cap=1, n_regions=8)
-    res = t.apply([KVOp(INSERT, k, k) for k in (10, 20, 30, 40, 50)])
-    assert [r.status for r in res].count(OK) >= 3
-    assert FULL in {r.status for r in res}     # the tree can't grow more
-    items = t.check_integrity()
-    assert all(v == k for k, v in items.items())
+def test_tree_root_split_unbounds_growth():
+    """root_cap no longer caps the tree: a full inner root splits and
+    the tree grows a level (the elastic scale-out tentpole).  FULL now
+    only means region exhaustion."""
+    t = oracle_tree(leaf_cap=2, root_cap=2, n_regions=32)
+    keys = list(range(10, 130, 10))
+    res = t.apply([KVOp(INSERT, k, k) for k in keys])
+    # 2x the old hard ceiling (root_cap+1 leaves * leaf_cap = 6 keys)
+    assert all(r.status == OK for r in res)
+    assert t.root_splits >= 2 and t.height() >= 3
+    assert t.check_integrity() == {k: k for k in keys}
+    for k in keys:
+        assert t.lookup(k) == k
 
 
 def test_tree_on_real_pallas_kernel():
