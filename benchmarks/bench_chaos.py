@@ -11,7 +11,11 @@ ASSERTS what the chaos harness exists to prove:
 - the durable families actually injected crashes (a chaos bench that
   never crashes measures nothing);
 - the per-shard WAL prune cadence ran and kept the on-disk record
-  count bounded below one record per committed op.
+  count bounded below one record per committed op;
+- every scenario evaluated its SLOs DURING the fault schedule (the
+  in-run ``SloEngine`` verdict rides on each report) and, when tracing
+  is on, the injected faults appear as ``chaos.fault`` instant events
+  in the section trace.
 """
 from __future__ import annotations
 
@@ -19,8 +23,9 @@ import tempfile
 import time
 
 from repro.chaos import default_scenarios, run_scenario
+from repro.obs import get_tracer, tracing_enabled
 
-from .common import emit
+from .common import emit, slo_observe
 
 
 def run(quick: bool = False):
@@ -34,6 +39,10 @@ def run(quick: bool = False):
             reports.append(rep)
             c = rep.check
             us = (rep.elapsed_s / max(1, rep.ops_completed)) * 1e6
+            # the in-run SLO verdict: evaluated wave by wave WHILE the
+            # scenario's faults fired, not after the fact
+            slo = rep.slo or {}
+            slo_evals = sum(s["evaluations"] for s in slo.get("specs", ()))
             emit(f"chaos_{rep.scenario.family},{us:.1f},"
                  f"ops_per_s={rep.ops_per_s:.0f};"
                  f"waves={rep.waves_run};"
@@ -41,7 +50,15 @@ def run(quick: bool = False):
                  f"crashes={rep.crashes};faults_fired={rep.faults_fired};"
                  f"lin_ok={int(c.ok)};immediates={c.immediates};"
                  f"mutations={c.mutations};indeterminate={c.indeterminate};"
+                 f"slo_ok={int(slo.get('ok', False))};"
+                 f"slo_evaluations={slo_evals};"
+                 f"p99_latency_us={rep.p99_latency_us:.1f};"
                  f"wal_records={rep.wal_records};wal_pruned={rep.wal_pruned}")
+            assert rep.slo is not None and slo_evals > 0, (
+                f"{rep.scenario.name}: the driver never evaluated its "
+                "SLOs during the fault schedule")
+            slo_observe(p99_latency_us=rep.p99_latency_us,
+                        ops_per_s=rep.ops_per_s)
 
     durable = [r for r in reports if r.scenario.backend == "durable"]
     crashes = sum(r.crashes for r in durable)
@@ -58,6 +75,13 @@ def run(quick: bool = False):
     assert crashes >= 2, \
         f"chaos sweep injected only {crashes} crashes; faults are dead"
     assert pruned > 0, "WAL prune cadence never ran under chaos"
+    # fault injections are trace instants: when this section runs under
+    # the tracer (benchmarks.run), the injected faults must be visible
+    # inline with the service waves
+    if tracing_enabled() and sum(r.faults_fired for r in reports):
+        names = {e["name"] for e in get_tracer().events()}
+        assert "chaos.fault" in names, (
+            "faults fired but no chaos.fault instant reached the trace")
     for r in durable:
         assert r.wal_records < max(1, r.ops_completed), (
             f"{r.scenario.name}: {r.wal_records} WAL records for "

@@ -28,7 +28,7 @@ from repro.pmwcas import KernelBackend
 from repro.service import KVService
 from repro.structures import FULL, EXHAUSTED, HashMap, INSERT, KVOp, OK
 
-from .common import emit
+from .common import emit, slo_observe
 
 
 def _insert_run(n_keys: int, n_buckets: int, max_doublings: int):
@@ -87,6 +87,7 @@ def run(quick: bool = False):
              f"ops_per_s={moved / dt:.0f};keys_moved={moved};"
              f"mig_pause_waves_max={max(st.mig_pause_waves, default=0)};"
              f"mig_pause_us_p99={st.mig_pause_us.p99_us:.1f}")
+        slo_observe(mig_pause_us_p99=st.mig_pause_us.p99_us)
         assert moved > 0, "the migration moved nothing"
         assert svc.check_integrity() == load, \
             "migration changed the key/value image"

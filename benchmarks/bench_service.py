@@ -22,7 +22,7 @@ from repro.pmwcas import KernelBackend, MwCASOp
 from repro.service import BatchScheduler, KVService, ShardRouter
 from repro.structures import WorkloadSpec, client_streams, load_phase
 
-from .common import emit
+from .common import emit, slo_observe
 
 # Mutation-heavy so nearly every logical op compiles to a CAS (reads and
 # misses complete at compile time and never occupy a round slot): the
@@ -59,6 +59,24 @@ def _emit_kv(name: str, row: dict):
         extra = (f";traces={row['traces']};"
                  f"dispatch_hits={row['dispatch_hits']};"
                  f"serial_rounds={row['serial_rounds']}")
+    if "queue_us_p50" in row:    # the op-lifecycle latency breakdown
+        extra += (f";queue_us_p50={row['queue_us_p50']:.1f};"
+                  f"queue_us_p99={row['queue_us_p99']:.1f};"
+                  f"dispatch_us_p50={row['dispatch_us_p50']:.1f};"
+                  f"dispatch_us_p99={row['dispatch_us_p99']:.1f};"
+                  f"persist_us_p50={row['persist_us_p50']:.1f};"
+                  f"persist_us_p99={row['persist_us_p99']:.1f};"
+                  f"retry_waves_max={row['retry_waves_max']}")
+        # the three components partition each op's latency BY
+        # CONSTRUCTION (service._complete), so their means must
+        # reconcile with the latency mean to rounding noise
+        parts = (row["queue_us_mean"] + row["dispatch_us_mean"]
+                 + row["persist_us_mean"])
+        lat = row["latency_us_mean"]
+        assert abs(parts - lat) <= 0.02 * lat + 1e-6, (
+            f"{name}: queue+dispatch+persist means ({parts:.3f}us) do "
+            f"not reconcile with latency_us mean ({lat:.3f}us) — the "
+            "lifecycle breakdown no longer partitions latency")
     emit(f"{name},{row['dt'] / row['n_ops'] * 1e6:.1f},"
          f"ops_per_s={row['n_ops'] / row['dt']:.0f};"
          f"ops_per_round={row['ops_per_step']:.2f};"
@@ -70,6 +88,10 @@ def _emit_kv(name: str, row: dict):
          f"p99_rounds={row['p99_latency_rounds']:.0f};"
          f"p50_us={row['p50_latency_us']:.1f};"
          f"p99_us={row['p99_latency_us']:.1f}" + extra)
+    slo_observe(p99_latency_us=row["p99_latency_us"],
+                ops_per_s=row["n_ops"] / row["dt"],
+                **({"persist_us_p99": row["persist_us_p99"]}
+                   if "persist_us_p99" in row else {}))
 
 
 def run(quick: bool = False):

@@ -91,3 +91,20 @@ def drain_rows() -> list:
     """Hand over (and clear) the rows emitted since the last drain."""
     rows, _ROWS[:] = list(_ROWS), []
     return rows
+
+
+_SLO_OBS: list = []  # metric observations queued for the section's SloEngine
+
+
+def slo_observe(**metrics):
+    """Queue one SLO observation for the current section.  Each call is
+    one evaluation window entry; ``benchmarks.run`` drains these into the
+    section's :class:`repro.obs.SloEngine` and writes the burn-rate
+    verdicts to ``SLO_<section>.json``."""
+    _SLO_OBS.append({k: float(v) for k, v in metrics.items()})
+
+
+def drain_slo() -> list:
+    """Hand over (and clear) SLO observations queued since last drain."""
+    obs, _SLO_OBS[:] = list(_SLO_OBS), []
+    return obs

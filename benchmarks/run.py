@@ -7,7 +7,10 @@ variant) so successive runs form a perf trajectory.
 Each JSON-emitting section also runs under the span tracer and writes a
 ``TRACE_<section>.json`` Chrome trace (Perfetto-loadable) next to its
 BENCH file — pass ``--no-trace`` to skip (e.g. when timing the benches
-themselves).
+themselves) — plus an ``SLO_<section>.json`` burn-rate verdict: the
+section's queued :func:`benchmarks.common.slo_observe` observations
+replayed through the specs in :mod:`benchmarks.slo_specs` (always at
+least one evaluated spec, via the per-section ``elapsed_s`` ceiling).
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
                                             [--json-dir DIR | --no-json]
@@ -35,6 +38,26 @@ def write_section_json(directory: pathlib.Path, section: str, rows: list,
     }
     path = directory / f"BENCH_{section}.json"
     path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def write_slo_json(directory: pathlib.Path, section: str,
+                   observations: list, quick: bool,
+                   elapsed_s: float) -> pathlib.Path:
+    from repro.obs import SloEngine, validate_slo_report
+
+    from .slo_specs import for_section
+    engine = SloEngine(for_section(section))
+    for obs in observations:
+        engine.observe(obs)
+    # every section gets the wall-clock observation, so the report always
+    # carries >= 1 evaluated spec even with no explicit slo_observe calls
+    engine.observe({"elapsed_s": elapsed_s})
+    doc = validate_slo_report(
+        engine.report(section=section, quick=quick,
+                      unix_time=int(time.time())))
+    path = directory / f"SLO_{section}.json"
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
     return path
 
 
@@ -88,6 +111,7 @@ def main() -> None:
     for name in names:
         print(f"# --- {name} ---", flush=True)
         common.drain_rows()                     # anything stray stays out
+        common.drain_slo()
         if trace:
             enable_tracing().clear()
         t0 = time.time()
@@ -98,9 +122,13 @@ def main() -> None:
                 disable_tracing()
         rows = common.drain_rows()
         if json_dir is not None:
+            elapsed = time.time() - t0
             path = write_section_json(json_dir, name, rows, args.quick,
-                                      time.time() - t0)
+                                      elapsed)
             print(f"# wrote {path}", file=sys.stderr, flush=True)
+            spath = write_slo_json(json_dir, name, common.drain_slo(),
+                                   args.quick, elapsed)
+            print(f"# wrote {spath}", file=sys.stderr, flush=True)
             if trace and len(get_tracer()):
                 tpath = export_chrome_trace(
                     json_dir / f"TRACE_{name}.json")

@@ -1,0 +1,73 @@
+"""Declarative SLOs for the benchmark sections.
+
+Each section that calls :func:`benchmarks.common.slo_observe` gets its
+queued observations replayed through a :class:`repro.obs.SloEngine`
+built from the specs here, and the burn-rate verdicts land in
+``SLO_<section>.json`` next to the BENCH file (schema-validated by
+``scripts/obs_smoke.py``).
+
+Bounds are intentionally loose regression tripwires, not performance
+targets: a spec firing (``ok=False``) means BOTH the short and long
+burn windows exceeded their error budget — sustained degradation, not a
+single noisy sample.  The ``DEFAULT`` spec applies to every section, so
+every ``SLO_<section>.json`` carries at least one evaluated spec even
+for sections that queue no explicit observations (``benchmarks.run``
+always appends one ``elapsed_s`` observation per section).
+"""
+from __future__ import annotations
+
+from repro.obs import SloSpec
+
+# applies to EVERY section: a whole-section wall-clock ceiling.  Bound is
+# generous (full runs take minutes, quick runs seconds) — it exists so
+# each section has >= 1 evaluated spec and a runaway run trips the gate.
+DEFAULT = SloSpec(
+    "section_elapsed", "elapsed_s", 3600.0, "ceiling", error_budget=0.0,
+    description="benchmark section completes within an hour")
+
+SECTION_SPECS = {
+    "service": (
+        SloSpec("service_p99_latency", "p99_latency_us", 2_000_000.0,
+                "ceiling", error_budget=0.25,
+                description="client p99 completion latency under 2s per "
+                            "measured cell"),
+        SloSpec("service_throughput", "ops_per_s", 1.0, "floor",
+                error_budget=0.25,
+                description="completed ops per wall second above 1"),
+        SloSpec("service_persist_p99", "persist_us_p99", 1_000_000.0,
+                "ceiling", error_budget=0.25,
+                description="per-op persist share p99 under 1s"),
+    ),
+    "durable": (
+        SloSpec("durable_group_redundant", "redundant_fences", 0.0,
+                "ceiling", error_budget=0.0,
+                description="group-commit hot path issues ZERO redundant "
+                            "fences (the instruction class the paper "
+                            "removes)"),
+        SloSpec("durable_flushes_per_commit", "persists_per_commit", 64.0,
+                "ceiling", error_budget=0.1,
+                description="flush fences per committed op stay bounded"),
+        SloSpec("durable_recover", "recover_us", 5_000_000.0, "ceiling",
+                error_budget=0.1,
+                description="WAL recovery under 5s"),
+    ),
+    "chaos": (
+        SloSpec("chaos_p99_latency", "p99_latency_us", 5_000_000.0,
+                "ceiling", error_budget=0.25,
+                description="p99 completion latency under 5s through "
+                            "fault schedules"),
+        SloSpec("chaos_throughput", "ops_per_s", 1.0, "floor",
+                error_budget=0.34,
+                description="throughput floor holds during chaos"),
+    ),
+    "elastic": (
+        SloSpec("elastic_mig_pause", "mig_pause_us_p99", 2_000_000.0,
+                "ceiling", error_budget=0.25,
+                description="migration write-pause p99 under 2s"),
+    ),
+}
+
+
+def for_section(name: str):
+    """Specs evaluated for a section: its own (if any) plus DEFAULT."""
+    return tuple(SECTION_SPECS.get(name, ())) + (DEFAULT,)

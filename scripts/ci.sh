@@ -54,15 +54,22 @@ python -m benchmarks.run --quick --only chaos --json-dir "$BENCH_DIR"
 # FULL/EXHAUSTED and that migrations preserve the key/value image
 python -m benchmarks.run --quick --only elastic --json-dir "$BENCH_DIR"
 
-echo "=== 5. obs smoke (disabled-tracer overhead + Chrome-trace schema) ==="
-# asserts the off-path costs < 5% of a sim workload and that a traced
-# chaos scenario exports a schema-valid (Perfetto-loadable) trace
-python scripts/obs_smoke.py
+echo "=== 5. obs smoke (tracer overhead + trace/SLO schemas) ==="
+# asserts the off-path costs < 5% of a sim workload, that a traced
+# chaos scenario exports a schema-valid (Perfetto-loadable) trace, and
+# that every SLO_<section>.json the bench smoke wrote validates with
+# >= 1 evaluated spec
+python scripts/obs_smoke.py "$BENCH_DIR"
 
 echo "=== 6. perf trend (>20% regressions vs previous run) ==="
-# warn-only by default (first run has no baseline); PERF_STRICT=1 gates
+# warn-only by default (first run has no baseline); PERF_STRICT=1 gates.
+# The redundant_fences zero-tolerance check fails even without strict.
 python scripts/perf_trend.py "$BENCH_DIR" .bench/baseline \
     ${PERF_STRICT:+--strict}
+
+echo "=== 6b. obs report (fold BENCH_/TRACE_/SLO_ into one page) ==="
+python scripts/obs_report.py "$BENCH_DIR" -o "$BENCH_DIR/REPORT.md"
+head -n 5 "$BENCH_DIR/REPORT.md"
 
 echo "=== 7. cross-backend differential examples ==="
 python examples/quickstart.py > /dev/null

@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Fold a benchmark output directory into one markdown observability
+report.
+
+Reads every ``BENCH_<section>.json``, ``SLO_<section>.json`` and
+``TRACE_<section>.json`` in DIR (all three are optional per section)
+and writes a single human-readable summary: per-section row tables,
+SLO burn-rate verdicts, and trace event counts.  This is the "one
+page" view of a CI bench run — the raw JSONs stay the machine
+interface.
+
+    python scripts/obs_report.py DIR [-o OUT.md]
+
+With no ``-o`` the report goes to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# row fields promoted into the per-section table when present (the long
+# tail of derived fields stays in the JSON)
+_ROW_FIELDS = (
+    "us_per_call", "ops_per_s", "mops", "persists_per_commit",
+    "flushes_per_commit", "redundant_fences", "redundant_fences_per_op",
+    "queue_us_p99", "dispatch_us_p99", "persist_us_p99",
+    "p99_latency_us", "mig_pause_us_p99", "crashes", "lin_ok", "slo_ok",
+)
+
+
+def _fmt(val) -> str:
+    if isinstance(val, bool):
+        return str(int(val))
+    if isinstance(val, float):
+        return f"{val:.3g}"
+    return str(val)
+
+
+def _sections(directory: pathlib.Path) -> list:
+    names = set()
+    for kind in ("BENCH", "SLO", "TRACE"):
+        for p in directory.glob(f"{kind}_*.json"):
+            names.add(p.stem[len(kind) + 1:])
+    return sorted(names)
+
+
+def _load(directory: pathlib.Path, kind: str, section: str):
+    path = directory / f"{kind}_{section}.json"
+    if not path.exists():
+        return None
+    try:
+        return json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return {"_error": f"{path.name}: invalid JSON"}
+
+
+def _bench_table(bench: dict) -> list:
+    rows = [r for r in bench.get("rows", []) if "name" in r]
+    if not rows:
+        return ["(no rows)", ""]
+    cols = ["name"] + [f for f in _ROW_FIELDS
+                       if any(f in r for r in rows)]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(
+            _fmt(r[c]) if c in r else "" for c in cols) + " |")
+    out.append("")
+    return out
+
+
+def _slo_block(slo: dict) -> list:
+    verdict = "OK" if slo.get("ok") else "**FIRING**"
+    out = [f"SLO verdict: {verdict} "
+           f"({slo.get('observations', 0)} observations, windows "
+           f"short={slo.get('windows', {}).get('short')}/"
+           f"long={slo.get('windows', {}).get('long')})", ""]
+    cols = ("name", "metric", "kind", "bound", "evaluations",
+            "violations", "burn_short", "burn_long", "worst", "ok")
+    out += ["| " + " | ".join(cols) + " |",
+            "|" + "|".join("---" for _ in cols) + "|"]
+    for s in slo.get("specs", []):
+        out.append("| " + " | ".join(
+            _fmt(s[c]) if c in s else "" for c in cols) + " |")
+    out.append("")
+    return out
+
+
+def _trace_block(trace: dict) -> list:
+    events = trace.get("traceEvents", [])
+    by_name = {}
+    for e in events:
+        by_name[e.get("name", "?")] = by_name.get(e.get("name", "?"), 0) + 1
+    top = sorted(by_name.items(), key=lambda kv: -kv[1])[:8]
+    return [f"Trace: {len(events)} events; top spans: "
+            + ", ".join(f"`{n}`×{c}" for n, c in top), ""]
+
+
+def build_report(directory: pathlib.Path) -> str:
+    sections = _sections(directory)
+    lines = [f"# Observability report — `{directory}`", ""]
+    if not sections:
+        lines.append("No BENCH_/SLO_/TRACE_ JSON found.")
+        return "\n".join(lines) + "\n"
+    firing = [s for s in sections
+              if (_load(directory, "SLO", s) or {}).get("ok") is False]
+    lines.append(f"Sections: {len(sections)} "
+                 f"({', '.join(sections)}); "
+                 + (f"SLOs firing in: {', '.join(firing)}"
+                    if firing else "all SLOs ok") + ".")
+    lines.append("")
+    for section in sections:
+        lines.append(f"## {section}")
+        lines.append("")
+        bench = _load(directory, "BENCH", section)
+        if bench is not None:
+            if "_error" in bench:
+                lines += [bench["_error"], ""]
+            else:
+                lines.append(f"Bench: {len(bench.get('rows', []))} rows, "
+                             f"elapsed {bench.get('elapsed_s', '?')}s"
+                             + (", quick" if bench.get("quick") else "")
+                             + ".")
+                lines.append("")
+                lines += _bench_table(bench)
+        slo = _load(directory, "SLO", section)
+        if slo is not None:
+            lines += (_slo_block(slo) if "_error" not in slo
+                      else [slo["_error"], ""])
+        trace = _load(directory, "TRACE", section)
+        if trace is not None:
+            lines += (_trace_block(trace) if "_error" not in trace
+                      else [trace["_error"], ""])
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("directory", type=pathlib.Path,
+                    help="dir holding BENCH_/SLO_/TRACE_<section>.json")
+    ap.add_argument("-o", "--out", type=pathlib.Path, default=None,
+                    help="write the markdown here (default: stdout)")
+    args = ap.parse_args()
+    if not args.directory.is_dir():
+        print(f"obs-report: {args.directory} is not a directory",
+              file=sys.stderr)
+        return 2
+    report = build_report(args.directory)
+    if args.out is not None:
+        args.out.write_text(report)
+        print(f"obs-report: wrote {args.out}")
+    else:
+        print(report, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,14 @@ Two checks (both exercise the real instrumented stack, not mocks):
    schema check Perfetto relies on; also assert the scenario span
    actually decomposed (chaos.scenario has children).
 
-    PYTHONPATH=src python scripts/obs_smoke.py
+3. **SLO reports are schema-valid.**  Build a small SloEngine, feed it
+   observations, and run the report through
+   :func:`repro.obs.validate_slo_report`; then, when a directory is
+   given (CI passes the bench-smoke output dir), validate every
+   ``SLO_<section>.json`` in it the same way and require each to carry
+   at least one evaluated spec.
+
+    PYTHONPATH=src python scripts/obs_smoke.py [BENCH_DIR]
 """
 from __future__ import annotations
 
@@ -30,9 +37,10 @@ import sys
 import tempfile
 import time
 
-from repro.obs import (disable_tracing, enable_tracing, export_chrome_trace,
-                       get_tracer, span, span_tree, tracing_enabled,
-                       validate_chrome_trace)
+from repro.obs import (SloEngine, SloSpec, disable_tracing, enable_tracing,
+                       export_chrome_trace, get_tracer, span, span_tree,
+                       tracing_enabled, validate_chrome_trace,
+                       validate_slo_report)
 from repro.pmwcas import MwCASOp, make_backend
 
 OVERHEAD_BUDGET = 0.05
@@ -110,9 +118,37 @@ def check_trace_export() -> None:
     assert children, "chaos.scenario span never decomposed into children"
 
 
+def check_slo_reports(bench_dir: pathlib.Path | None) -> None:
+    # self-check: a live engine's report must pass its own schema
+    engine = SloEngine([
+        SloSpec("p99", "p99_latency_us", 100.0, "ceiling",
+                error_budget=0.1),
+        SloSpec("tput", "ops_per_s", 10.0, "floor", error_budget=0.1),
+    ], short_window=2, long_window=4)
+    for v in (50.0, 150.0, 60.0):
+        engine.observe({"p99_latency_us": v, "ops_per_s": 100.0})
+    validate_slo_report(engine.report(section="smoke"))
+    if bench_dir is None:
+        print("obs-smoke: SLO schema self-check OK (no dir given)")
+        return
+    # every SLO_<section>.json the bench smoke emitted must validate
+    # and carry at least one evaluated spec
+    paths = sorted(bench_dir.glob("SLO_*.json"))
+    assert paths, f"no SLO_*.json under {bench_dir} — the section " \
+                  "runner stopped writing SLO verdicts"
+    for path in paths:
+        doc = validate_slo_report(json.loads(path.read_text()))
+        evals = sum(s["evaluations"] for s in doc["specs"])
+        assert evals > 0, f"{path.name}: no spec was ever evaluated"
+    print(f"obs-smoke: {len(paths)} SLO report(s) schema-valid "
+          f"({', '.join(p.name for p in paths)})")
+
+
 def main() -> int:
+    bench_dir = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else None
     check_disabled_overhead()
     check_trace_export()
+    check_slo_reports(bench_dir)
     print("obs-smoke OK")
     return 0
 

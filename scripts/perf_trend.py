@@ -12,7 +12,13 @@ field; the throughput metric is ``ops_per_s`` where present, else
 After the comparison the current JSONs are promoted to the baseline, so
 successive CI runs always compare against their predecessor.
 
-On the first run (no baseline) nothing is compared — warn-only by
+A third gate needs no baseline at all: ``ZERO_TOLERANCE`` metrics
+(``redundant_fences`` — the group-commit hot path's provenance counter)
+must be exactly zero in every current row, and a violation fails the
+run even without --strict (it is a correctness property, not a noisy
+wall-clock trend).
+
+On the first run (no baseline) nothing else is compared — warn-only by
 design.  Regressions print warnings and exit 0 unless --strict (CI can
 opt in via ``PERF_STRICT=1 bash scripts/ci.sh``): wall-clock benches on
 shared runners are noisy, so the trend is a tripwire, not a gate, until
@@ -33,8 +39,15 @@ METRICS = ("ops_per_s", "mops")      # first present wins
 # cost metrics where a RISE is the regression (flush accounting comes
 # straight from the obs registry, so a rise means the flush-elision
 # machinery — the paper's point — has leaked flushes back in; the
-# migration pause is the elastic section's availability headline)
-LOWER_IS_BETTER = ("flushes_per_commit", "recover_us", "mig_pause_us_p99")
+# migration pause is the elastic section's availability headline; the
+# queue/persist tails are the op-lifecycle breakdown's gateable legs)
+LOWER_IS_BETTER = ("flushes_per_commit", "recover_us", "mig_pause_us_p99",
+                   "queue_us_p99", "persist_us_p99")
+# metrics that must be EXACTLY ZERO in the current run, baseline or not:
+# a single redundant fence on the group-commit hot path reintroduces the
+# instruction class the paper removes (the per-op row deliberately uses
+# the distinct name ``redundant_fences_per_op``, which is expected > 0)
+ZERO_TOLERANCE = ("redundant_fences",)
 
 
 def _metric(row: dict):
@@ -92,6 +105,23 @@ def compare(current: pathlib.Path, baseline: pathlib.Path,
     return regressions
 
 
+def zero_check(current: pathlib.Path) -> list:
+    """Zero-tolerance gate: runs over EVERY current row (including the
+    synthetic summary rows), needs no baseline.  Returns
+    [(section, row name, metric, value, value, 1.0, "nonzero"), ...]."""
+    violations = []
+    for cur_path in sorted(current.glob("BENCH_*.json")):
+        section = cur_path.stem[len("BENCH_"):]
+        data = json.loads(cur_path.read_text())
+        for row in data.get("rows", []):
+            for key in ZERO_TOLERANCE:
+                val = row.get(key)
+                if isinstance(val, (int, float)) and val != 0:
+                    violations.append((section, row.get("name", "?"), key,
+                                       val, val, 1.0, "nonzero"))
+    return violations
+
+
 def promote(current: pathlib.Path, baseline: pathlib.Path) -> None:
     baseline.mkdir(parents=True, exist_ok=True)
     for cur_path in current.glob("BENCH_*.json"):
@@ -111,13 +141,20 @@ def main() -> int:
     args = ap.parse_args()
 
     regressions = compare(args.current, args.baseline, args.threshold)
+    zeros = zero_check(args.current)
     for section, name, key, old, new, change, direction in regressions:
         sign = "-" if direction == "drop" else "+"
         print(f"perf-trend REGRESSION [{section}] {name}: "
               f"{key} {old:.3g} -> {new:.3g} ({sign}{change:.0%})")
-    if not regressions:
-        print(f"perf-trend: no >{args.threshold:.0%} regressions")
-    failing = bool(regressions and args.strict)
+    for section, name, key, _old, new, _change, _direction in zeros:
+        print(f"perf-trend ZERO-TOLERANCE [{section}] {name}: "
+              f"{key} = {new:.3g} (must be 0)")
+    if not regressions and not zeros:
+        print(f"perf-trend: no >{args.threshold:.0%} regressions; "
+              "zero-tolerance metrics clean")
+    # the zero-tolerance gate is a correctness property, not a noisy
+    # wall-clock trend: it fails even without --strict
+    failing = bool(zeros) or bool(regressions and args.strict)
     if failing:
         # keep the pre-regression baseline: promoting the regressed run
         # would make an unchanged retry compare against itself and pass

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import SimulatedCrash
-from repro.obs import span
+from repro.obs import SloEngine, SloSpec, instant, span
 from repro.service import KVService
 from repro.structures import KVOp, SCAN
 
@@ -39,6 +39,22 @@ from .history import CheckStats, HistoryRecorder, check_history
 from .machines import (ARM_CRASH, ARM_MIG_CRASH, CALM, ClientMachine,
                        ClientSpec, FaultMachine, FaultSpec, MIGRATE,
                        STALL, STORM)
+
+
+# the degradation objectives every scenario is judged against WHILE its
+# faults fire (one observation per wave; multi-window burn semantics in
+# repro.obs.slo).  Bounds are deliberately loose — chaos runs measure
+# degradation, not steady-state speed — and the per-family verdict lands
+# in ``ChaosReport.slo`` / ``BENCH_chaos.json``.
+CHAOS_SLOS = (
+    SloSpec("p99_latency_ceiling", "p99_latency_us", 5_000_000.0,
+            "ceiling", error_budget=0.2,
+            description="client p99 completion latency stays under 5s "
+                        "through crashes and storms"),
+    SloSpec("throughput_floor", "ops_per_s", 1.0, "floor",
+            error_budget=0.34,
+            description="completed ops per wall second stays above 1"),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +93,10 @@ class ChaosReport:
     wal_records: int = 0           # descriptor records left across shards
     wal_pruned: int = 0
     elapsed_s: float = 0.0
+    p99_latency_us: float = 0.0    # final client p99 (stats survive crashes)
+    # per-family degradation verdict: the SLO report evaluated DURING
+    # the fault schedule (None only if the run never reached the loop)
+    slo: Optional[Dict] = None
     check: Optional[CheckStats] = None
     trace_lines: List[str] = dataclasses.field(default_factory=list)
     final_items: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -175,17 +195,27 @@ class ScenarioDriver:
     def _apply_directives(self) -> None:
         for fm in self.faults:
             for d in fm.drain_directives():
+                # every injected fault is an instant event: the chaos
+                # trace shows faults inline with the service waves
                 if d[0] == ARM_CRASH:
+                    instant("chaos.fault", kind="crash_trap", shard=d[1],
+                            persists_ahead=d[2])
                     self._arm_crash(d[1], d[2])
                 elif d[0] == STALL:
+                    instant("chaos.fault", kind="stall", client=d[1],
+                            waves=d[2])
                     self.clients[d[1]].post("stall", waves=d[2])
                 elif d[0] == STORM:
+                    instant("chaos.fault", kind="storm", shard=d[1])
                     for c in self.clients:
                         c.post("storm", shard=d[1])
                 elif d[0] == CALM:
+                    instant("chaos.fault", kind="calm")
                     for c in self.clients:
                         c.post("calm")
                 elif d[0] == MIGRATE:
+                    instant("chaos.fault", kind="migrate", lo=d[1],
+                            hi=d[2], dst=d[3])
                     try:
                         # the decide persist runs here; an armed trap may
                         # spring on it (caller handles SimulatedCrash)
@@ -194,6 +224,8 @@ class ScenarioDriver:
                     except RuntimeError:
                         pass       # overlaps an in-flight migration: skip
                 elif d[0] == ARM_MIG_CRASH:
+                    instant("chaos.fault", kind="mig_crash_trap",
+                            persists_ahead=d[1])
                     pool = self.svc.mig_pool
                     if pool is not None:
                         pool.crash_after = pool.persist_count + d[1]
@@ -232,6 +264,7 @@ class ScenarioDriver:
 
     def _handle_crash(self, wave: int) -> None:
         self.report.crashes += 1
+        instant("chaos.fault", kind="crash", wave=wave)
         self.recorder.crash(wave)
         # the recovered service carries its stats (monotone counters),
         # so the prune count is read once, at end of run
@@ -265,6 +298,9 @@ class ScenarioDriver:
     def run(self) -> ChaosReport:
         sc = self.scenario
         t0 = time.monotonic()
+        # SLOs are judged DURING the fault schedule, one observation per
+        # wave — degradation inside the windows is the measurement
+        slo_engine = SloEngine(CHAOS_SLOS, short_window=8, long_window=32)
         with span("chaos.scenario", scenario=sc.name,
                   family=sc.family) as sp:
             self.svc = self._build_service()
@@ -276,6 +312,11 @@ class ScenarioDriver:
                     c.process()
                 scans = self._submit_outboxes(wave)
                 self._step_wave(wave, scans)
+                elapsed = time.monotonic() - t0
+                slo_engine.observe({
+                    "p99_latency_us": self.svc.stats.p99_latency_us,
+                    "ops_per_s": (self.report.ops_completed / elapsed
+                                  if elapsed > 0 else 0.0)})
             # drain the in-flight tail with faults disarmed (clients
             # issue nothing new; the EXHAUSTED bound caps retries)
             self._disarm_all()
@@ -299,7 +340,11 @@ class ScenarioDriver:
             self.report.faults_fired = sum(fm.fired for fm in self.faults)
             self.report.wal_records = self._wal_record_count()
             self.report.wal_pruned += self.svc.stats.wal_pruned
-            sp.set(waves=wave, crashes=self.report.crashes)
+            self.report.p99_latency_us = self.svc.stats.p99_latency_us
+            self.report.slo = slo_engine.report(
+                section=f"chaos.{sc.family}")
+            sp.set(waves=wave, crashes=self.report.crashes,
+                   slo_ok=self.report.slo["ok"])
         self.report.elapsed_s = time.monotonic() - t0
         self.report.trace_lines = self.trace_lines()
         self.report.check = check_history(self.recorder.events)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import time
 from typing import Dict, Sequence, Tuple
 
-from ..obs import get_registry, span
+from ..obs import flush_reason, get_registry, span
 from .committer import (Committer, DurabilityStats, ST_COMPLETED, ST_FAILED,
                         ST_SUCCEEDED, _account, _desc_rel, _slot_rel,
                         data_rel)
@@ -74,11 +74,20 @@ class MarkerCommitter:
                     des == self.slot_version(name) and \
                     pool.read(data_rel(name, des)) != payloads[name]:
                 return False
-        for name, _exp, des in targets:
-            pool.write_persist(data_rel(name, des), payloads[name])
+        with flush_reason("committer", "data_prepare"):
+            for name, _exp, des in targets:
+                pool.write_persist(data_rel(name, des), payloads[name])
         desc = {"id": cid, "state": ST_FAILED,
                 "targets": [list(t) for t in targets], "ts": time.time()}
-        pool.write_record(_desc_rel(cid), desc)
+        with flush_reason("committer", "descriptor"):
+            pool.write_record(_desc_rel(cid), desc)
+        # the dirty-flag algorithm's conservative read barrier (same as
+        # Committer._commit step 2b): fence each slot line before
+        # trusting its read
+        with flush_reason("committer", "read_barrier"):
+            for name, _exp, _des in targets:
+                if pool.exists(_slot_rel(name)):
+                    pool.persist(_slot_rel(name))
         success = True
         reserved = []
         for name, exp, _des in targets:
@@ -89,21 +98,26 @@ class MarkerCommitter:
             if cur_ver != exp:
                 success = False
                 break
-            pool.write_record(_slot_rel(name), {"desc": cid, "expected": exp})
+            with flush_reason("committer", "reserve"):
+                pool.write_record(_slot_rel(name),
+                                  {"desc": cid, "expected": exp})
             reserved.append(name)
         if success:
             desc["state"] = ST_SUCCEEDED
-            pool.write_record(_desc_rel(cid), desc)
+            with flush_reason("committer", "commit_point"):
+                pool.write_record(_desc_rel(cid), desc)
         t = {s: (e, d) for s, e, d in targets}
-        for name in reserved:
-            exp, des = t[name]
-            ver = des if success else exp
-            # dirty-flag analogue: set marker, persist, write, persist,
-            # clear marker, persist  (the double-flush the paper removes)
-            pool.write_record(_marker_rel(name), {"dirty": True, "slot": name})
-            pool.write_record(_slot_rel(name), {"version": ver})
-            pool.write_record(_marker_rel(name), {"dirty": False,
-                                                  "slot": name})
+        with flush_reason("committer", "marker_finalize"):
+            for name in reserved:
+                exp, des = t[name]
+                ver = des if success else exp
+                # dirty-flag analogue: set marker, persist, write, persist,
+                # clear marker, persist  (the double-flush the paper removes)
+                pool.write_record(_marker_rel(name),
+                                  {"dirty": True, "slot": name})
+                pool.write_record(_slot_rel(name), {"version": ver})
+                pool.write_record(_marker_rel(name), {"dirty": False,
+                                                      "slot": name})
         desc["state"] = ST_COMPLETED if success else desc["state"]
         pool.write_record(_desc_rel(cid), desc, persist=False)
         if success:
@@ -122,7 +136,8 @@ class MarkerCommitter:
         # avoids); afterwards the descriptor logic is identical
         pool = self.pool
         t0_ns = time.perf_counter_ns()
-        with span("wal.recover", committer="marker") as sp:
+        with span("wal.recover", committer="marker") as sp, \
+                flush_reason("committer", "recover"):
             with span("recover.clear_markers") as clear:
                 markers = pool.listdir("markers")
                 for fn in markers:

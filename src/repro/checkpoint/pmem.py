@@ -16,10 +16,11 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import time
 import zlib
 from typing import Dict, Optional
 
-from ..obs import span
+from ..obs import record_fence, span
 
 
 class SimulatedCrash(Exception):
@@ -33,6 +34,9 @@ class PMemPool:
         self.crash_after = crash_after_persists
         self.persist_count = 0
         self.write_count = 0
+        # wall-clock spent inside persist fences (fsync), for the
+        # per-op persist_us attribution in the service stats
+        self.persist_ns = 0
         # files written but not yet persisted ("dirty cache lines"), mapped
         # to their last DURABLE content (None = never existed durably) so a
         # crash can restore what the medium actually held
@@ -60,9 +64,16 @@ class PMemPool:
         if self.crash_after is not None and \
                 self.persist_count > self.crash_after:
             raise SimulatedCrash(f"crash before persisting {rel}")
+        # the line is clean (nothing unpersisted under it) => this fence
+        # changes no durable state; the provenance ledger flags it as
+        # redundant — the instruction class the paper removes
+        redundant = path not in self._unpersisted
+        t0 = time.perf_counter_ns()
         with span("pmem.persist", rel=rel):
             with open(path, "rb") as f:
                 os.fsync(f.fileno())
+        self.persist_ns += time.perf_counter_ns() - t0
+        record_fence(redundant=redundant)
         self._unpersisted.pop(path, None)
 
     def write_persist(self, rel: str, data: bytes):
@@ -92,9 +103,15 @@ class PMemPool:
         if self.crash_after is not None and \
                 self.persist_count > self.crash_after:
             raise SimulatedCrash(f"crash before durably deleting {rel}")
+        # redundant iff there was durably nothing to delete and no
+        # visible-but-dirty file to discard
+        redundant = p not in self._unpersisted and not p.exists()
+        t0 = time.perf_counter_ns()
         with span("pmem.persist", rel=rel, delete=True):
             if p.exists():
                 p.unlink()
+        self.persist_ns += time.perf_counter_ns() - t0
+        record_fence(redundant=redundant)
         self._unpersisted.pop(p, None)
 
     def listdir(self, rel: str):

@@ -15,6 +15,14 @@ measurable numbers across the whole stack:
   buffer while enabled.
 - :mod:`repro.obs.export` — JSONL and Chrome-trace exporters (Perfetto
   loads the latter directly) plus the schema validator CI runs.
+- :mod:`repro.obs.provenance` — the flush-provenance ledger: a
+  thread-local ``flush_reason(component, reason)`` stack the persist
+  seam reads, plus the redundant-fence detector counters
+  (``flush_fences`` / ``redundant_fences``, DESIGN §13).
+- :mod:`repro.obs.slo` — declarative :class:`SloSpec` objectives
+  evaluated over sliding observation windows with multi-window burn
+  rates; every bench section writes its verdicts as
+  ``SLO_<section>.json``.
 - :mod:`repro.obs.adapters` — idempotent folds of the five legacy
   ``*Stats`` dataclasses into registry series (duck-typed; this package
   imports nothing above ``repro.pmwcas`` — nothing of ``repro`` at
@@ -31,6 +39,8 @@ from .export import (chrome_trace, export_chrome_trace, export_jsonl,
                      span_tree, validate_chrome_trace)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry, reset_metrics)
+from .provenance import (current_flush_reason, flush_reason, record_fence)
+from .slo import SloEngine, SloSpec, validate_slo_report
 from .trace import (NULL_SPAN, SpanTracer, disable_tracing,
                     enable_tracing, get_tracer, instant, span,
                     tracing_enabled)
@@ -42,6 +52,8 @@ __all__ = [
     "enable_tracing", "disable_tracing", "tracing_enabled",
     "chrome_trace", "export_chrome_trace", "export_jsonl",
     "validate_chrome_trace", "span_tree",
+    "flush_reason", "current_flush_reason", "record_fence",
+    "SloSpec", "SloEngine", "validate_slo_report",
     "fold_durability", "fold_dispatch", "fold_service", "fold_check",
     "fold_workload",
 ]

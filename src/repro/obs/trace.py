@@ -28,6 +28,8 @@ import time
 from collections import deque
 from typing import Dict, List, Optional
 
+from .metrics import get_registry
+
 
 class _NullSpan:
     """The disabled-path singleton: every method is a no-op."""
@@ -125,13 +127,26 @@ class SpanTracer:
     def _record(self, event: Dict) -> None:
         with self._lock:
             if len(self._events) == self._events.maxlen:
-                self.dropped += 1
+                self._count_dropped(1)
             self._events.append(event)
+
+    def _count_dropped(self, n: int) -> None:
+        """Every lost event lands in BOTH ledgers: the tracer's own
+        ``dropped`` (exported as ``otherData.dropped_events``) and the
+        registry counter ``spans_dropped{component="obs"}`` — so a
+        benchmark window can see trace loss without holding the tracer."""
+        self.dropped += n
+        get_registry().counter("spans_dropped", component="obs").inc(n)
 
     # -- lifecycle -------------------------------------------------------------
     def enable(self, capacity: Optional[int] = None) -> "SpanTracer":
         if capacity is not None and capacity != self.capacity:
             with self._lock:
+                # shrinking below the buffered count discards the oldest
+                # events; count them — this path used to lose them silently
+                lost = max(0, len(self._events) - capacity)
+                if lost:
+                    self._count_dropped(lost)
                 self.capacity = capacity
                 self._events = deque(self._events, maxlen=capacity)
         self.enabled = True

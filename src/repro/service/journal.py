@@ -27,6 +27,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence, Tuple
 
+from repro.obs import flush_reason
+
 ST_SUCCEEDED = "SUCCEEDED"
 ST_COMPLETED = "COMPLETED"
 
@@ -52,9 +54,10 @@ class CrossShardJournal:
     # -- the 2 persists of the protocol ---------------------------------------
     def decide(self, op_id: str, targets: Sequence[CrossTarget]) -> None:
         """Persist the SUCCEEDED decision record (linearization point)."""
-        self.pool.write_record(_rel(op_id), {
-            "id": op_id, "state": ST_SUCCEEDED,
-            "targets": [list(t) for t in targets]})
+        with flush_reason("service", "journal_decide"):
+            self.pool.write_record(_rel(op_id), {
+                "id": op_id, "state": ST_SUCCEEDED,
+                "targets": [list(t) for t in targets]})
 
     def complete(self, op_id: str) -> None:
         """Mark the record spent.  Lazy persist (no durability barrier):
@@ -88,7 +91,8 @@ class CrossShardJournal:
             rec = self.pool.read_record(f"xwal/{fn}")
             if rec is not None and rec.get("state") != ST_COMPLETED:
                 continue
-            self.pool.delete_persist(f"xwal/{fn}")
+            with flush_reason("service", "journal_prune"):
+                self.pool.delete_persist(f"xwal/{fn}")
             pruned += 1
         return pruned
 
@@ -144,14 +148,16 @@ class MigrationLog:
 
     # -- the persists of the protocol ------------------------------------------
     def decide(self, mig_id: str, lo: int, hi: int, dst: int) -> None:
-        self.pool.write_record(_mig_rel(mig_id), {
-            "id": mig_id, "state": MIG_MIGRATING,
-            "lo": lo, "hi": hi, "dst": dst})
+        with flush_reason("service", "migration_decide"):
+            self.pool.write_record(_mig_rel(mig_id), {
+                "id": mig_id, "state": MIG_MIGRATING,
+                "lo": lo, "hi": hi, "dst": dst})
 
     def mark_routed(self, mig_id: str) -> None:
         rec = self.pool.read_record(_mig_rel(mig_id))
         rec["state"] = MIG_ROUTED
-        self.pool.write_record(_mig_rel(mig_id), rec)
+        with flush_reason("service", "migration_routed"):
+            self.pool.write_record(_mig_rel(mig_id), rec)
 
     def complete(self, mig_id: str) -> None:
         rec = self.pool.read_record(_mig_rel(mig_id))
@@ -162,12 +168,14 @@ class MigrationLog:
 
     def abort(self, mig_id: str) -> None:
         """Drop a MIGRATING record (rollback's final persist)."""
-        self.pool.delete_persist(_mig_rel(mig_id))
+        with flush_reason("service", "migration_abort"):
+            self.pool.delete_persist(_mig_rel(mig_id))
 
     # -- the route table -------------------------------------------------------
     def save_routes(self, ranges) -> None:
-        self.pool.write_record(_ROUTES, {
-            "ranges": [list(r) for r in ranges]})
+        with flush_reason("service", "migration_routes"):
+            self.pool.write_record(_ROUTES, {
+                "ranges": [list(r) for r in ranges]})
 
     def load_routes(self) -> List[Tuple[int, int, int]]:
         rec = self.pool.read_record(_ROUTES)
@@ -201,7 +209,8 @@ class MigrationLog:
             rec = self.pool.read_record(f"mig/{fn}")
             if rec is not None and rec.get("state") != MIG_COMPLETED:
                 continue
-            self.pool.delete_persist(f"mig/{fn}")
+            with flush_reason("service", "migration_prune"):
+                self.pool.delete_persist(f"mig/{fn}")
             pruned += 1
         return pruned
 

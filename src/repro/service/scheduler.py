@@ -30,7 +30,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
-from repro.obs import span
+from repro.obs import instant, span, tracing_enabled
 from repro.pmwcas import Backend, MwCASOp, OpResult, Target
 
 from .executor import execute_wave, schedule_wave, select_executor
@@ -46,7 +46,7 @@ class ServiceError(RuntimeError):
 class OpFuture:
     """Client handle for one submitted op (completed by ``step``)."""
 
-    __slots__ = ("op", "client", "shard", "seq", "submit_step",
+    __slots__ = ("op", "client", "shard", "seq", "op_id", "submit_step",
                  "submit_ns", "done", "result", "latency_rounds")
 
     def __init__(self, op: MwCASOp, client, shard: int, seq: int,
@@ -55,6 +55,8 @@ class OpFuture:
         self.client = client
         self.shard = shard
         self.seq = seq
+        # stable causal identity for the op's trace events (DESIGN §13)
+        self.op_id = f"op{seq}"
         self.submit_step = submit_step
         self.submit_ns = time.perf_counter_ns()
         self.done = False
@@ -127,6 +129,10 @@ class BatchScheduler:
         fut = OpFuture(op, client, routed.shard, self._seq, self.stats.steps)
         self._seq += 1
         self.stats.submitted += 1
+        if tracing_enabled():
+            instant("op.submit", op_id=fut.op_id, client=client,
+                    shard=routed.shard, cross=routed.is_cross,
+                    step=self.stats.steps)
         if routed.is_cross:
             self._cross.append(_Pending(routed, fut))
         else:
@@ -201,14 +207,34 @@ class BatchScheduler:
             return 0
         completed = 0
         with span("wave.dispatch", shards=len(rounds)):
+            dispatch_start_ns = time.perf_counter_ns()
+            persist_ns0 = self._persist_ns_total()
             wave = execute_wave(self.executor, self.backends, rounds,
                                 self.stats)
         with span("wave.complete"):
+            # the wave's fence wall-clock splits evenly across its ops
+            # (one group-commit record covers the whole round)
+            persist_wave_ns = self._persist_ns_total() - persist_ns0
+            n_done = sum(len(pairs) for pairs in wave.values())
+            persist_share_us = (persist_wave_ns / 1e3 / n_done
+                                if n_done else 0.0)
             for pairs in wave.values():
                 for pending, ok in pairs:     # executed verdicts are final
-                    self._complete(pending.future, ok)
+                    self._complete(pending.future, ok,
+                                   dispatch_start_ns=dispatch_start_ns,
+                                   persist_share_us=persist_share_us)
                     completed += 1
         return completed
+
+    def _persist_ns_total(self) -> int:
+        """Wall-clock the durable shards have spent inside persist
+        fences, summed (0 for kernel/sim deployments)."""
+        total = 0
+        for b in self.backends:
+            pool = getattr(b, "pool", None)
+            if pool is not None:
+                total += pool.persist_ns
+        return total
 
     # -- the serialized global round -------------------------------------------
     def _global_round(self) -> int:
@@ -217,9 +243,15 @@ class BatchScheduler:
         completed = 0
         with span("wave.global_round", ops=len(batch)):
             for pending in batch:
+                dispatch_start_ns = time.perf_counter_ns()
+                persist_ns0 = self._persist_ns_total()
                 ok = self._execute_cross(pending.routed)
                 self.stats.cross_ops += 1
-                self._complete(pending.future, ok)
+                self._complete(
+                    pending.future, ok,
+                    dispatch_start_ns=dispatch_start_ns,
+                    persist_share_us=(self._persist_ns_total()
+                                      - persist_ns0) / 1e3)
                 completed += 1
             if (self.journal is not None and self.journal_prune_every and
                     self.stats.cross_rounds % self.journal_prune_every
@@ -304,11 +336,32 @@ class BatchScheduler:
         return collect_durability(self.backends)
 
     # -- completion ------------------------------------------------------------
-    def _complete(self, fut: OpFuture, success: bool) -> None:
+    def _complete(self, fut: OpFuture, success: bool, *,
+                  dispatch_start_ns: Optional[int] = None,
+                  persist_share_us: float = 0.0) -> None:
         fut.done = True
         fut.latency_rounds = self.stats.steps - fut.submit_step
         fut.result = OpResult(index=fut.seq, success=success,
                               backend="service", op=fut.op)
+        status = "ok" if success else "conflict"
+        latency_us = (time.perf_counter_ns() - fut.submit_ns) / 1e3
+        # queue + dispatch + persist partition latency_us exactly (the
+        # same decomposition as KVService._complete; the scheduler
+        # executes each submission once, so retry_waves is always 0)
+        if dispatch_start_ns is None:
+            queue_us, dispatch_us, persist_us = latency_us, 0.0, 0.0
+        else:
+            queue_us = min(max(
+                (dispatch_start_ns - fut.submit_ns) / 1e3, 0.0), latency_us)
+            persist_us = min(max(persist_share_us, 0.0),
+                             latency_us - queue_us)
+            dispatch_us = latency_us - queue_us - persist_us
         self.stats.record_completion(
-            fut.latency_rounds, "ok" if success else "conflict",
-            latency_us=(time.perf_counter_ns() - fut.submit_ns) / 1e3)
+            fut.latency_rounds, status, latency_us=latency_us,
+            queue_us=queue_us, dispatch_us=dispatch_us,
+            persist_us=persist_us, retry_waves=0)
+        if tracing_enabled():
+            instant("op.complete", op_id=fut.op_id, status=status,
+                    queue_us=round(queue_us, 1),
+                    dispatch_us=round(dispatch_us, 1),
+                    persist_us=round(persist_us, 1), step=self.stats.steps)

@@ -25,7 +25,8 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro import PMemPool
-from repro.obs import reset_metrics, span
+from repro.obs import (flush_reason, instant, reset_metrics, span,
+                       tracing_enabled)
 from repro.pmwcas import Backend, MwCASOp, make_backend
 from repro.structures import (BzTreeIndex, DELETE, EXHAUSTED, FULL, HashMap,
                               INSERT, KVOp, NeedsResize, NeedsSplit, OK,
@@ -41,7 +42,7 @@ from .stats import ServiceStats, collect_durability, fresh_stats
 class KVFuture:
     """Client handle for one submitted logical op."""
 
-    __slots__ = ("op", "client", "shard", "seq", "submit_step",
+    __slots__ = ("op", "client", "shard", "seq", "op_id", "submit_step",
                  "submit_ns", "done", "result")
 
     def __init__(self, op: KVOp, client, shard: int, seq: int,
@@ -50,6 +51,10 @@ class KVFuture:
         self.client = client
         self.shard = shard
         self.seq = seq
+        # the stable causal identity: every trace event of this op's
+        # lifecycle (submit -> defer/requeue -> dispatch -> complete)
+        # carries it, so the timeline reassembles from the trace alone
+        self.op_id = f"kv{seq}"
         self.submit_step = submit_step
         self.submit_ns = time.perf_counter_ns()
         self.done = False
@@ -207,6 +212,9 @@ class KVService:
         fut = KVFuture(op, client, shard, self._seq, self.stats.steps)
         self._seq += 1
         self.stats.submitted += 1
+        if tracing_enabled():
+            instant("op.submit", op_id=fut.op_id, client=client,
+                    shard=shard, kind=op.kind, step=self.stats.steps)
         mig = self._covering_migration(op)
         if mig is not None:
             # park until the routing swings; released ops re-route
@@ -267,20 +275,43 @@ class KVService:
             for s, later in leftovers.items():
                 self._requeue(s, later)
         with span("wave.dispatch", shards=len(rounds)):
+            dispatch_start_ns = time.perf_counter_ns()
+            persist_ns0 = self._persist_ns_total()
             wave = execute_wave(self.executor, self.backends, rounds,
                                 self.stats)
         with span("wave.complete"):
+            # this op's persist share: the wave's fence wall-clock is a
+            # group property (one round record covers every winner), so
+            # it splits evenly across the winners it made durable
+            persist_wave_ns = self._persist_ns_total() - persist_ns0
+            winners = sum(1 for pairs in wave.values()
+                          for _p, ok in pairs if ok)
+            persist_share_us = (persist_wave_ns / 1e3 / winners
+                                if winners else 0.0)
             for s, pairs in wave.items():
                 losers = []
                 for pending, ok in pairs:
                     if ok:
-                        self._complete(pending.future, OK)
+                        self._complete(pending.future, OK,
+                                       dispatch_start_ns=dispatch_start_ns,
+                                       persist_share_us=persist_share_us,
+                                       retry_waves=pending.attempts)
                         completed += 1
                     else:
                         pending.attempts += 1
                         losers.append(pending)   # recompile next wave
                 self._requeue(s, losers)
         return completed
+
+    def _persist_ns_total(self) -> int:
+        """Wall-clock the durable shards have spent inside persist
+        fences, summed (0 for kernel/sim deployments)."""
+        total = 0
+        for b in self.backends:
+            pool = getattr(b, "pool", None)
+            if pool is not None:
+                total += pool.persist_ns
+        return total
 
     def prune_wal(self) -> int:
         """Durably drop spent descriptor records on every shard whose
@@ -325,7 +356,8 @@ class KVService:
         struct = self.structs[s]
         if getattr(struct, "hdr", 0) and struct.migrating:
             # an in-flight directory doubling pumps a chunk per wave
-            struct.resize_step(max_moves=max(len(self._queues[s]), 2))
+            with flush_reason("structures", "doubling_pump"):
+                struct.resize_step(max_moves=max(len(self._queues[s]), 2))
         snap = struct.snapshot()
         ready: List[_PendingKV] = []
         later: List[_PendingKV] = []
@@ -335,7 +367,8 @@ class KVService:
         for pending in self._queues[s]:
             fut = pending.future
             if pending.attempts > self.max_op_rounds:
-                self._complete(fut, EXHAUSTED)
+                self._complete(fut, EXHAUSTED,
+                               retry_waves=pending.attempts)
                 done += 1
                 continue
             compiled = struct.compile_op(fut.op, snap)
@@ -351,9 +384,11 @@ class KVService:
                          or 0)
                         for s2, other in enumerate(self.structs)
                         if s2 != s)
-                    self._complete(fut, OK, value)
+                    self._complete(fut, OK, value,
+                                   retry_waves=pending.attempts)
                 else:
-                    self._complete(fut, compiled.status, compiled.value)
+                    self._complete(fut, compiled.status, compiled.value,
+                                   retry_waves=pending.attempts)
                 done += 1
             elif isinstance(compiled, NeedsSplit):
                 splits.setdefault(compiled.leaf_base, []).append(pending)
@@ -365,13 +400,16 @@ class KVService:
             # publish the doubling decision; the waiters recompile next
             # wave against the split-brain table (room is immediate: a
             # fresh generation has twice the buckets)
-            if struct.begin_resize():
+            with flush_reason("structures", "doubling_swing"):
+                began = struct.begin_resize()
+            if began:
                 for pending in resizes:
                     pending.attempts += 1
                 later.extend(resizes)
             else:
                 for pending in resizes:
-                    self._complete(pending.future, FULL)
+                    self._complete(pending.future, FULL,
+                                   retry_waves=pending.attempts)
                     done += 1
         if splits:
             # grow first; this wave's compiled ops would mostly lose
@@ -389,7 +427,8 @@ class KVService:
                     later.extend(waiters)
                 else:
                     for pending in waiters:
-                        self._complete(pending.future, FULL)
+                        self._complete(pending.future, FULL,
+                                       retry_waves=pending.attempts)
                         done += 1
             self._requeue(s, ready + later)
             return [], done
@@ -400,17 +439,48 @@ class KVService:
         """Merge entries back into the shard queue in submission order
         (FIFO fairness across defers, losses and recompiles)."""
         if entries:
+            if tracing_enabled():
+                for pending in entries:
+                    instant("op.requeue", op_id=pending.future.op_id,
+                            shard=s, attempts=pending.attempts,
+                            step=self.stats.steps)
             self._queues[s].extend(entries)
             self._queues[s].sort(key=lambda p: p.future.seq)
 
-    def _complete(self, fut: KVFuture, status: str, value=None) -> None:
+    def _complete(self, fut: KVFuture, status: str, value=None, *,
+                  dispatch_start_ns: Optional[int] = None,
+                  persist_share_us: float = 0.0,
+                  retry_waves: int = 0) -> None:
         fut.done = True
         latency = max(1, self.stats.steps - fut.submit_step)
         fut.result = StructResult(fut.op, status, value=value,
                                   rounds=latency)
+        now_ns = time.perf_counter_ns()
+        latency_us = (now_ns - fut.submit_ns) / 1e3
+        # decompose: queue (submit -> this wave's dispatch start),
+        # persist (the op's share of the wave's fence wall-clock),
+        # dispatch (the rest).  The three sum to latency_us exactly —
+        # compile-time completions (reads, EXHAUSTED, FULL) never reach
+        # a dispatch, so their whole latency is queueing.
+        if dispatch_start_ns is None:
+            queue_us, dispatch_us, persist_us = latency_us, 0.0, 0.0
+        else:
+            queue_us = min(max(
+                (dispatch_start_ns - fut.submit_ns) / 1e3, 0.0), latency_us)
+            persist_us = min(max(persist_share_us, 0.0),
+                             latency_us - queue_us)
+            dispatch_us = latency_us - queue_us - persist_us
         self.stats.record_completion(
-            latency, status,
-            latency_us=(time.perf_counter_ns() - fut.submit_ns) / 1e3)
+            latency, status, latency_us=latency_us, queue_us=queue_us,
+            dispatch_us=dispatch_us, persist_us=persist_us,
+            retry_waves=retry_waves)
+        if tracing_enabled():
+            instant("op.complete", op_id=fut.op_id, status=status,
+                    latency_us=round(latency_us, 1),
+                    queue_us=round(queue_us, 1),
+                    dispatch_us=round(dispatch_us, 1),
+                    persist_us=round(persist_us, 1),
+                    retry_waves=retry_waves, step=self.stats.steps)
 
     # -- online key-range migration --------------------------------------------
     def _covering_migration(self, op: KVOp) -> Optional[_Migration]:

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.obs import Histogram
+from repro.obs import Histogram, get_registry
 from repro.pmwcas import DurabilityStats
 
 
@@ -80,6 +80,20 @@ class ServiceStats:
     # client actually wait" on THIS backend
     latency_us: Histogram = dataclasses.field(
         default_factory=lambda: Histogram("service.latency_us"))
+    # the op-lifecycle breakdown (DESIGN §13): latency_us decomposes as
+    # queue_us (submit -> wave dispatch start) + dispatch_us (device +
+    # host scheduling) + persist_us (this op's share of the wave's fence
+    # wall-clock) — the three sum to latency_us per op BY CONSTRUCTION,
+    # so the histograms' means must reconcile (bench-asserted).
+    queue_us: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.queue_us"))
+    dispatch_us: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.dispatch_us"))
+    persist_us: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.persist_us"))
+    # waves an op was scheduled into before completing (0 = first try)
+    retry_waves: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("service.retry_waves"))
     by_status: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     # percentile window: a long-running service would otherwise grow the
@@ -88,7 +102,11 @@ class ServiceStats:
 
     # -- recorders -------------------------------------------------------------
     def record_completion(self, latency_rounds: int, status: str,
-                          latency_us: Optional[float] = None) -> None:
+                          latency_us: Optional[float] = None,
+                          queue_us: Optional[float] = None,
+                          dispatch_us: Optional[float] = None,
+                          persist_us: Optional[float] = None,
+                          retry_waves: Optional[int] = None) -> None:
         self.completed += 1
         self.latencies.append(int(latency_rounds))
         if len(self.latencies) > self.MAX_LATENCY_SAMPLES:
@@ -96,6 +114,24 @@ class ServiceStats:
                                - self.MAX_LATENCY_SAMPLES]
         if latency_us is not None:
             self.latency_us.record(latency_us)
+        # mirror the breakdown into the global registry (same series the
+        # benchmark windows and obs_report read) alongside the dataclass
+        reg = get_registry()
+        if queue_us is not None:
+            self.queue_us.record(queue_us)
+            reg.histogram("queue_us", component="service").record(queue_us)
+        if dispatch_us is not None:
+            self.dispatch_us.record(dispatch_us)
+            reg.histogram("dispatch_us",
+                          component="service").record(dispatch_us)
+        if persist_us is not None:
+            self.persist_us.record(persist_us)
+            reg.histogram("persist_us",
+                          component="service").record(persist_us)
+        if retry_waves is not None:
+            self.retry_waves.record(retry_waves)
+            reg.histogram("retry_waves",
+                          component="service").record(retry_waves)
         self.by_status[status] = self.by_status.get(status, 0) + 1
 
     # -- aggregates ------------------------------------------------------------
@@ -182,6 +218,22 @@ class ServiceStats:
             "p50_latency_us": round(self.p50_latency_us, 3),
             "p99_latency_us": round(self.p99_latency_us, 3),
         }
+        if self.queue_us.count:
+            row.update({
+                "queue_us_p50": round(self.queue_us.p50_us, 3),
+                "queue_us_p99": round(self.queue_us.p99_us, 3),
+                "dispatch_us_p50": round(self.dispatch_us.p50_us, 3),
+                "dispatch_us_p99": round(self.dispatch_us.p99_us, 3),
+                "persist_us_p50": round(self.persist_us.p50_us, 3),
+                "persist_us_p99": round(self.persist_us.p99_us, 3),
+                # means reconcile with latency_us_mean exactly (the
+                # three components partition each op's latency)
+                "queue_us_mean": round(self.queue_us.mean_us, 3),
+                "dispatch_us_mean": round(self.dispatch_us.mean_us, 3),
+                "persist_us_mean": round(self.persist_us.mean_us, 3),
+                "latency_us_mean": round(self.latency_us.mean_us, 3),
+                "retry_waves_max": int(self.retry_waves.max_us),
+            })
         if self.migrations:
             row.update({
                 "migrations": self.migrations,
