@@ -61,6 +61,12 @@ echo "=== 5. obs smoke (tracer overhead + trace/SLO schemas) ==="
 # >= 1 evaluated spec
 python scripts/obs_smoke.py "$BENCH_DIR"
 
+echo "=== 5b. checkpointed-recovery smoke (epoch durability end to end) ==="
+# drives an epoch_rounds=4/checkpoint_every=2 durable service through
+# write -> crash -> recover and asserts acked ops survive, a checkpoint
+# image bounds the WAL, and a second crash is a fixpoint (DESIGN Sec. 14)
+python scripts/recovery_smoke.py
+
 echo "=== 6. perf trend (>20% regressions vs previous run) ==="
 # warn-only by default (first run has no baseline); PERF_STRICT=1 gates.
 # The redundant_fences zero-tolerance check fails even without strict.

@@ -98,6 +98,31 @@ def _trace_block(trace: dict) -> list:
             + ", ".join(f"`{n}`×{c}" for n, c in top), ""]
 
 
+def _recover_block(trace: dict) -> list:
+    """Recovery-phase breakdown from the ``recover.*`` spans: where the
+    replay wall-clock went (checkpoint load vs record scan vs batched
+    round replay).  Empty when the section's trace recorded no
+    recovery."""
+    phases = {}
+    for e in trace.get("traceEvents", []):
+        name = e.get("name", "")
+        if e.get("ph") == "X" and name.startswith("recover."):
+            spans, total = phases.get(name, (0, 0.0))
+            phases[name] = (spans + 1, total + float(e.get("dur", 0)))
+    if not phases:
+        return []
+    grand = sum(total for _n, total in phases.values()) or 1.0
+    out = ["Recovery phases:", "",
+           "| phase | spans | total_us | share |",
+           "|---|---|---|---|"]
+    for name in sorted(phases, key=lambda n: -phases[n][1]):
+        spans, total = phases[name]
+        out.append(f"| `{name}` | {spans} | {total:.0f} | "
+                   f"{total / grand:.0%} |")
+    out.append("")
+    return out
+
+
 def build_report(directory: pathlib.Path) -> str:
     sections = _sections(directory)
     lines = [f"# Observability report — `{directory}`", ""]
@@ -131,8 +156,11 @@ def build_report(directory: pathlib.Path) -> str:
                       else [slo["_error"], ""])
         trace = _load(directory, "TRACE", section)
         if trace is not None:
-            lines += (_trace_block(trace) if "_error" not in trace
-                      else [trace["_error"], ""])
+            if "_error" in trace:
+                lines += [trace["_error"], ""]
+            else:
+                lines += _trace_block(trace)
+                lines += _recover_block(trace)
     return "\n".join(lines) + "\n"
 
 

@@ -41,8 +41,8 @@ METRICS = ("ops_per_s", "mops")      # first present wins
 # machinery — the paper's point — has leaked flushes back in; the
 # migration pause is the elastic section's availability headline; the
 # queue/persist tails are the op-lifecycle breakdown's gateable legs)
-LOWER_IS_BETTER = ("flushes_per_commit", "recover_us", "mig_pause_us_p99",
-                   "queue_us_p99", "persist_us_p99")
+LOWER_IS_BETTER = ("flushes_per_commit", "recover_us", "recover_ms",
+                   "mig_pause_us_p99", "queue_us_p99", "persist_us_p99")
 # metrics that must be EXACTLY ZERO in the current run, baseline or not:
 # a single redundant fence on the group-commit hot path reintroduces the
 # instruction class the paper removes (the per-op row deliberately uses

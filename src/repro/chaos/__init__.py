@@ -23,25 +23,27 @@ and final state across runs, including across crash/recover cycles.
 from .statechart import Event, Machine, Transition
 from .machines import (ARM_CRASH, ARM_MIG_CRASH, CALM, CRASH_AT_PERSIST,
                        CRASH_MID_MIGRATION, CRASH_MID_SCAN, ClientMachine,
-                       ClientSpec, FAULT_KINDS, FaultMachine, FaultSpec,
-                       MIGRATE, SHARD_STORM, STALL, STORM, STRAGGLER)
+                       ClientSpec, EPOCH_BOUNDARY, FAULT_KINDS,
+                       FaultMachine, FaultSpec, MIGRATE, SHARD_STORM,
+                       STALL, STORM, STRAGGLER)
 from .history import (CheckStats, HistoryRecorder, LinearizabilityError,
                       check_history)
 from .driver import ChaosReport, Scenario, ScenarioDriver
 from .scenarios import (FAMILIES, chaos_sweep, crash_mid_migration,
                         crash_mid_scan, default_scenarios, drifting_skew,
-                        hot_key_storm, run_scenario, sim_native, straggler)
+                        epoch_boundary, hot_key_storm, run_scenario,
+                        sim_native, straggler)
 
 __all__ = [
     "Event", "Machine", "Transition",
     "ClientMachine", "ClientSpec", "FaultMachine", "FaultSpec",
     "FAULT_KINDS", "CRASH_AT_PERSIST", "CRASH_MID_SCAN", "STRAGGLER",
-    "SHARD_STORM", "CRASH_MID_MIGRATION",
+    "SHARD_STORM", "CRASH_MID_MIGRATION", "EPOCH_BOUNDARY",
     "ARM_CRASH", "STALL", "STORM", "CALM", "MIGRATE", "ARM_MIG_CRASH",
     "HistoryRecorder", "check_history", "CheckStats",
     "LinearizabilityError",
     "Scenario", "ScenarioDriver", "ChaosReport",
     "FAMILIES", "default_scenarios", "run_scenario", "chaos_sweep",
     "hot_key_storm", "crash_mid_scan", "straggler", "drifting_skew",
-    "crash_mid_migration", "sim_native",
+    "crash_mid_migration", "epoch_boundary", "sim_native",
 ]

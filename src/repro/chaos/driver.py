@@ -77,6 +77,10 @@ class Scenario:
     # recovered service carries its ServiceStats), so the cadence fires
     # on schedule regardless of crash spacing
     wal_prune_every: int = 6
+    # epoch durability knobs (KVService pass-through): rounds per shared
+    # fence and epochs per WAL checkpoint (1/0 = classic per-round mode)
+    epoch_rounds: int = 1
+    checkpoint_every: int = 0
     seed: int = 0
 
 
@@ -150,6 +154,11 @@ class ScenarioDriver:
         # rebuilds the service and restarts its internal sequence
         self._outstanding: List[Tuple[object, ClientMachine, int]] = []
         self._seq = 0
+        # service-step -> driver-wave map: with epoch durability, an ack
+        # can be withheld for waves after its verdict was decided; the
+        # history records the DECIDED wave (fut.done_step), where the
+        # op's effect became visible to later reads
+        self._wave_of_step: Dict[int, int] = {}
 
     # -- service plumbing ------------------------------------------------------
     def _build_service(self) -> KVService:
@@ -158,7 +167,9 @@ class ScenarioDriver:
                          backend=sc.backend, n_buckets=sc.n_buckets,
                          round_cap=sc.round_cap,
                          durable_root=self.durable_root,
-                         wal_prune_every=sc.wal_prune_every)
+                         wal_prune_every=sc.wal_prune_every,
+                         epoch_rounds=sc.epoch_rounds,
+                         checkpoint_every=sc.checkpoint_every)
 
     def _load_phase(self) -> None:
         """Deterministic pre-population, recorded as the checker's base."""
@@ -251,7 +262,9 @@ class ScenarioDriver:
         still = []
         for fut, c, seq in self._outstanding:
             if fut.done:
-                self.recorder.complete(wave, seq, fut.result.status,
+                decided = self._wave_of_step.get(
+                    getattr(fut, "done_step", None), wave)
+                self.recorder.complete(decided, seq, fut.result.status,
                                        fut.result.value)
                 c.post("done", status=fut.result.status)
                 c.process()
@@ -292,6 +305,7 @@ class ScenarioDriver:
         except SimulatedCrash:
             self._handle_crash(wave)
             return
+        self._wave_of_step.setdefault(self.svc.stats.steps, wave)
         self._collect_completions(wave)
 
     # -- entry point -----------------------------------------------------------
@@ -329,6 +343,7 @@ class ScenarioDriver:
                 except SimulatedCrash:         # a pre-armed trap's tail
                     self._handle_crash(wave)
                     continue
+                self._wave_of_step.setdefault(self.svc.stats.steps, wave)
                 self._collect_completions(wave)
             if self._outstanding:
                 raise RuntimeError(

@@ -185,8 +185,14 @@ CRASH_MID_SCAN = "crash_mid_scan"
 STRAGGLER = "straggler"
 SHARD_STORM = "shard_storm"
 CRASH_MID_MIGRATION = "crash_mid_migration"
+# same trap mechanics as CRASH_AT_PERSIST, but meant for scenarios with
+# epoch durability on: with rounds buffered under one coalesced fence,
+# nearly every persist a shard issues IS an epoch-close or checkpoint
+# fence, so a small persists_ahead budget lands the crash exactly on an
+# epoch boundary — the bounded-loss window the protocol must contain
+EPOCH_BOUNDARY = "epoch_boundary"
 FAULT_KINDS = (CRASH_AT_PERSIST, CRASH_MID_SCAN, STRAGGLER, SHARD_STORM,
-               CRASH_MID_MIGRATION)
+               CRASH_MID_MIGRATION, EPOCH_BOUNDARY)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,9 +224,9 @@ class FaultMachine(Machine):
         self.spec = spec
         self.directives: List[Tuple] = []
         self.fired = 0
-        if spec.kind in (CRASH_AT_PERSIST, CRASH_MID_SCAN):
-            guard = (self._may_crash if spec.kind == CRASH_AT_PERSIST
-                     else self._may_crash_scan)
+        if spec.kind in (CRASH_AT_PERSIST, CRASH_MID_SCAN, EPOCH_BOUNDARY):
+            guard = (self._may_crash_scan if spec.kind == CRASH_MID_SCAN
+                     else self._may_crash)
             transitions = [
                 Transition("idle", "tick", "armed", guard=guard,
                            action=FaultMachine._arm),

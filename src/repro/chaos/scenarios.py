@@ -15,11 +15,14 @@ crash/recover cycles under every workload shape), plus their own twist:
 - :func:`crash_mid_migration` — online key-range shard migrations under
   live traffic, with crashes scheduled into the copy and the swing; the
   decision log must leave every migration invisible or completed.
+- :func:`epoch_boundary` — epoch durability on (rounds share one fence,
+  acks held behind open epochs), with crashes aimed at the epoch-close
+  and checkpoint persists; acked ops must survive every landing.
 - :func:`sim_native` — the same client machines on SIM-backed shards:
   full KV ops on the cycle-accurate micro-op machines (native desired
   values), no crash faults (the simulator models cores, not pools).
 
-``chaos_sweep`` runs a list of scenarios (default: all six) and
+``chaos_sweep`` runs a list of scenarios (default: all seven) and
 returns their reports; every history must check out linearizable.
 """
 from __future__ import annotations
@@ -29,8 +32,8 @@ from typing import List, Optional, Sequence
 
 from .driver import ChaosReport, Scenario, ScenarioDriver
 from .machines import (CRASH_AT_PERSIST, CRASH_MID_MIGRATION,
-                       CRASH_MID_SCAN, ClientSpec, FaultSpec, SHARD_STORM,
-                       STRAGGLER)
+                       CRASH_MID_SCAN, ClientSpec, EPOCH_BOUNDARY,
+                       FaultSpec, SHARD_STORM, STRAGGLER)
 
 
 def _crash(n_shards: int, *, first_wave: int = 8, gap_lo: int = 10,
@@ -109,6 +112,28 @@ def crash_mid_migration(seed: int = 0, waves: int = 60) -> Scenario:
                           persists_lo=2, persists_hi=10, storm_len=10),))
 
 
+def epoch_boundary(seed: int = 0, waves: int = 60) -> Scenario:
+    """Crashes aimed at epoch-close/checkpoint fences, with epoch
+    durability ON (``epoch_rounds=4``, ``checkpoint_every=2``).  Under
+    the epoch protocol nearly every persist a shard issues IS an epoch
+    boundary, so a small ``persists_ahead`` budget (1..3) lands the
+    crash exactly on one.  The service withholds acks behind open
+    epochs, so every acked op must survive — the checker sees lost
+    in-flight verdicts as indeterminate, never a revoked ack — and the
+    epoch checkpoints must keep the WAL bounded despite the crashes."""
+    n_shards = 2
+    client = ClientSpec(n_keys=32, alpha=0.9, read=0.4, update=0.25,
+                        insert=0.2, delete=0.1, scan=0.05,
+                        n_shards=n_shards)
+    return Scenario(
+        name=f"epoch_boundary/s{seed}", family="epoch_boundary",
+        client=client, waves=waves, n_shards=n_shards, seed=seed,
+        epoch_rounds=4, checkpoint_every=2, wal_prune_every=0,
+        faults=(FaultSpec(kind=EPOCH_BOUNDARY, n_shards=n_shards,
+                          first_wave=8, gap_lo=10, gap_hi=16,
+                          persists_lo=1, persists_hi=3),))
+
+
 def sim_native(seed: int = 0, waves: int = 40) -> Scenario:
     """KV chaos on SIM-backed shards: the native-desired-value path —
     real inserts/updates/deletes (keys, values, TOMBSTONEs) running on
@@ -129,6 +154,7 @@ FAMILIES = {
     "straggler": straggler,
     "drifting_skew": drifting_skew,
     "crash_mid_migration": crash_mid_migration,
+    "epoch_boundary": epoch_boundary,
     "sim_native": sim_native,
 }
 
@@ -149,7 +175,7 @@ def run_scenario(scenario: Scenario, durable_root=None) -> ChaosReport:
 def chaos_sweep(scenarios: Optional[Sequence[Scenario]] = None, *,
                 seed: int = 0, waves: int = 60,
                 durable_root=None) -> List[ChaosReport]:
-    """Run every scenario (default: all five families) and check every
+    """Run every scenario (default: every family) and check every
     history.  Raises :class:`repro.chaos.LinearizabilityError` on the
     first violation — a passing sweep IS the correctness claim."""
     scenarios = (default_scenarios(seed=seed, waves=waves)

@@ -24,13 +24,30 @@ class MarkerCommitter:
     # dirty-flag markers are inherently per-slot; no round-level protocol
     supports_rounds = False
 
-    def __init__(self, pool: PMemPool):
+    def __init__(self, pool: PMemPool, epoch_rounds: int = 1,
+                 checkpoint_every: int = 0):
+        # epoch durability needs round records to buffer and a single
+        # coalesced fence to ride; per-slot dirty flags force a fence
+        # per slot write, so the baseline cannot defer them — refuse
+        # rather than silently measure the wrong protocol
+        if int(epoch_rounds) != 1 or int(checkpoint_every):
+            raise ValueError(
+                "marker committer has no epoch protocol (per-slot dirty "
+                "flags cannot defer their fences); use the WAL committer "
+                "for epoch_rounds > 1 / checkpoint_every > 0")
         self.pool = pool
         self.stats = DurabilityStats()
 
     # WAL hygiene is committer-agnostic (it reads only descriptors and
     # slot records, both shared vocabulary) — reuse the primary logic
     prune_completed = Committer.prune_completed
+
+    # surface uniformity with Committer's epoch API: every marker commit
+    # is already durable at return, so the barrier has nothing to close
+    epoch_pending = 0
+
+    def sync(self) -> int:
+        return 0
 
     def slot_version(self, name: str) -> int:
         rec = self.pool.read_record(_slot_rel(name))

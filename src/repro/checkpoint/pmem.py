@@ -120,6 +120,18 @@ class PMemPool:
             return []
         return sorted(x.name for x in d.iterdir())
 
+    # -- cache-line introspection (epoch tests assert the bounded-loss
+    # window directly against what is dirty) --------------------------------
+    def is_dirty(self, rel: str) -> bool:
+        """True if the file is visible but not durable (a crash now
+        would revert it to its last persisted content)."""
+        return (self.root / rel) in self._unpersisted
+
+    @property
+    def dirty_lines(self) -> int:
+        """Files currently written-but-unpersisted."""
+        return len(self._unpersisted)
+
     # -- crash model -----------------------------------------------------------
     def crash(self) -> "PMemPool":
         """Revert every file to its last durable content and reopen."""

@@ -23,7 +23,10 @@ label is split across the stack on purpose:
   doubling, ``"committer"`` for a plain commit);
 - ``reason`` comes from the INNERMOST frame — the mechanical reason this
   particular line was fenced (``"descriptor"``, ``"group_record"``,
-  ``"wal_prune"``, ``"read_barrier"``, ``"migration_routed"``, …).
+  ``"wal_prune"``, ``"read_barrier"``, ``"migration_routed"``,
+  ``"epoch_close"`` — the ONE fence an epoch of buffered rounds shares,
+  ``"checkpoint"`` — a WAL checkpoint image plus the covered-record
+  GC it durably supersedes, …).
 
 So a descriptor persisted inside a directory-doubling swing shows up as
 ``{component="structures", reason="descriptor"}`` — both the business

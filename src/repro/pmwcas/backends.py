@@ -352,13 +352,23 @@ class DurableBackend:
     was the round record durable?  (yes → recovery redoes the round; no
     → the round never happened.)  ``durability_stats`` exposes the
     flushes issued/saved and fence counts.
+
+    With ``epoch_rounds > 1`` (requires group commit) rounds buffer into
+    a durability epoch sharing ONE fence (DESIGN.md Sec. 14): a round's
+    verdict is final at :meth:`execute` return but durable only at the
+    next epoch close — :meth:`sync` is the explicit barrier, and a crash
+    loses at most ``epoch_rounds - 1`` committed rounds, never a torn
+    one.  ``checkpoint_every = N`` persists a checkpoint image every N
+    epoch closes so recovery replay stays bounded; :attr:`epoch_pending`
+    exposes the open window.
     """
     name = "durable"
 
     def __init__(self, root: Union[str, pathlib.Path, None] = None, *,
                  pool: Optional[PMemPool] = None,
                  committer: Union[str, type] = "wal",
-                 group_commit: bool = True):
+                 group_commit: bool = True, epoch_rounds: int = 1,
+                 checkpoint_every: int = 0):
         self._tmpdir = None
         if pool is None:
             if root is None:
@@ -374,9 +384,16 @@ class DurableBackend:
             self._committer_cls = MarkerCommitter
         else:
             raise ValueError(f"unknown committer {committer!r}")
-        self.committer = self._committer_cls(pool)
+        self.committer = self._committer_cls(
+            pool, epoch_rounds=epoch_rounds,
+            checkpoint_every=checkpoint_every)
         self.group_commit = bool(group_commit) and getattr(
             self._committer_cls, "supports_rounds", False)
+        if int(epoch_rounds) > 1 and not self.group_commit:
+            raise ValueError("epoch_rounds > 1 requires group commit "
+                             "(epochs buffer coalesced round records)")
+        self.epoch_rounds = max(1, int(epoch_rounds))
+        self.checkpoint_every = max(0, int(checkpoint_every))
         self._seq = 0
 
     # -- setup -----------------------------------------------------------------
@@ -463,6 +480,23 @@ class DurableBackend:
     def recover(self) -> Dict[str, int]:
         return self.committer.recover()
 
+    def sync(self) -> int:
+        """Close the open durability epoch (one fence); returns rounds
+        made durable.  No-op outside epoch mode."""
+        return self.committer.sync()
+
+    def checkpoint(self) -> int:
+        """Persist a checkpoint image and durably drop the round/epoch
+        records it covers (closes the open epoch first).  No-op for the
+        marker baseline (its commits are durable per slot already)."""
+        ckpt = getattr(self.committer, "checkpoint", None)
+        return ckpt() if ckpt is not None else 0
+
+    @property
+    def epoch_pending(self) -> int:
+        """Rounds committed-but-unfenced in the open epoch."""
+        return getattr(self.committer, "epoch_pending", 0)
+
     def prune_completed(self) -> int:
         """WAL hygiene: durably drop spent descriptor records (every op
         writes one; without pruning ``wal/`` grows without bound).  Safe
@@ -482,7 +516,9 @@ class DurableBackend:
         with span("backend.crash_recover", backend=self.name):
             new = DurableBackend(pool=self.pool.crash(),
                                  committer=self._committer_cls,
-                                 group_commit=self.group_commit)
+                                 group_commit=self.group_commit,
+                                 epoch_rounds=self.epoch_rounds,
+                                 checkpoint_every=self.checkpoint_every)
             new.committer.stats = self.committer.stats
             new.recover()
         return new

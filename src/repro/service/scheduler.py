@@ -23,6 +23,13 @@ Scheduling rules:
   With durable shards, atomicity across a *crash* additionally needs the
   decision log (:class:`repro.service.CrossShardJournal`): pass one, and
   call :meth:`recover` after re-attaching crashed shards.
+- **epoch durability is bounded-loss at this layer**: unlike the KV
+  front (which withholds acks behind open epochs), the raw scheduler
+  completes futures at commit time — under ``epoch_rounds > 1`` a
+  completed-but-unsynced op can be lost to a crash, bounded by the
+  epoch window.  :meth:`drain` closes every shard's open epoch before
+  returning, so a drained scheduler is fully durable; callers needing
+  a mid-stream barrier call :meth:`sync_epochs` explicitly.
 """
 from __future__ import annotations
 
@@ -188,7 +195,23 @@ class BatchScheduler:
             raise ServiceError(
                 f"drain did not converge in {limit} steps "
                 f"({self.pending_count} ops still queued)")
+        # a drained scheduler promises durability: close open epochs so
+        # every completed future's round is actually on the medium
+        self.sync_epochs()
         return done
+
+    def sync_epochs(self) -> int:
+        """Durability barrier over the shards: close every open epoch
+        (one fence each).  Returns rounds made durable; counted in
+        ``stats.epoch_syncs`` when anything flushed."""
+        synced = 0
+        for b in self.backends:
+            sync = getattr(b, "sync", None)
+            if sync is not None:
+                synced += sync()
+        if synced:
+            self.stats.epoch_syncs += 1
+        return synced
 
     def read(self, addr: int) -> int:
         """Read one word through the shard that owns it."""

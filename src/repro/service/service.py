@@ -43,7 +43,7 @@ class KVFuture:
     """Client handle for one submitted logical op."""
 
     __slots__ = ("op", "client", "shard", "seq", "op_id", "submit_step",
-                 "submit_ns", "done", "result")
+                 "submit_ns", "done", "done_step", "result")
 
     def __init__(self, op: KVOp, client, shard: int, seq: int,
                  submit_step: int):
@@ -58,6 +58,9 @@ class KVFuture:
         self.submit_step = submit_step
         self.submit_ns = time.perf_counter_ns()
         self.done = False
+        # the wave that DECIDED the op (epoch mode can ack later than it
+        # decides; history checkers need the decision wave)
+        self.done_step: Optional[int] = None
         self.result: Optional[StructResult] = None
 
     @property
@@ -125,6 +128,7 @@ class KVService:
                  round_cap: int = 16, max_op_rounds: Optional[int] = None,
                  durable_root: Union[str, pathlib.Path, None] = None,
                  group_commit: bool = True,
+                 epoch_rounds: int = 1, checkpoint_every: int = 0,
                  wal_prune_every: int = 0,
                  migration_pool=None, migration_chunk: int = 8,
                  use_kernel: bool = False, interpret: bool = True,
@@ -145,10 +149,19 @@ class KVService:
         self.words_per_shard = words
         self.router = ShardRouter(n_shards, words_per_shard=words,
                                   policy="range")
+        self.epoch_rounds = max(1, int(epoch_rounds))
+        self.checkpoint_every = max(0, int(checkpoint_every))
         self.backends = self._build_backends(
             backend, n_shards, words, durable_root, group_commit,
+            self.epoch_rounds, self.checkpoint_every,
             use_kernel, interpret)
         self.structs = [self._attach(b) for b in self.backends]
+        # epoch ack gate (DESIGN.md Sec. 14): decisions made while ANY
+        # durable shard has an open epoch are withheld here, in decide
+        # order, until the global durability frontier passes them
+        self._held: List[tuple] = []
+        self._epoch_open_since: Dict[int, int] = {}
+        self._epochs_closed_seen: Dict[int, int] = {}
         self.round_cap = round_cap
         self.max_op_rounds = (2 * round_cap + 8 if max_op_rounds is None
                               else max_op_rounds)
@@ -180,6 +193,7 @@ class KVService:
     # -- construction ----------------------------------------------------------
     @staticmethod
     def _build_backends(spec, n_shards, words, durable_root, group_commit,
+                        epoch_rounds, checkpoint_every,
                         use_kernel, interpret) -> List[Backend]:
         if isinstance(spec, (list, tuple)):
             if len(spec) != n_shards:
@@ -194,7 +208,9 @@ class KVService:
             elif spec == "durable":
                 root = (None if durable_root is None
                         else pathlib.Path(durable_root) / f"shard{s}")
-                kw = dict(root=root, group_commit=group_commit)
+                kw = dict(root=root, group_commit=group_commit,
+                          epoch_rounds=epoch_rounds,
+                          checkpoint_every=checkpoint_every)
             else:                       # sim / custom kind / factory
                 kw = dict(n_words=words)
             out.append(make_backend(spec, **kw))
@@ -228,8 +244,11 @@ class KVService:
 
     @property
     def pending_count(self) -> int:
+        # held acks count as pending: the client has no verdict yet, and
+        # drain() must not return while an epoch still owes them a fence
         return sum(len(q) for q in self._queues) \
-            + sum(len(m.held) for m in self._migrations)
+            + sum(len(m.held) for m in self._migrations) \
+            + len(self._held)
 
     # -- execution -------------------------------------------------------------
     def step(self) -> int:
@@ -251,6 +270,13 @@ class KVService:
                 # without it a long-running durable service grows wal/
                 # one record per committed round, forever
                 self.prune_wal()
+            if self._held and not any(self._queues) \
+                    and not self._migrations:
+                # only withheld acks remain: no further round will close
+                # the epochs naturally, so pay the barrier now (this is
+                # what makes drain() a durability barrier)
+                self.sync_epochs()
+            self._settle_epochs()
             sp.set(completed=completed)
         return completed
 
@@ -292,10 +318,10 @@ class KVService:
                 losers = []
                 for pending, ok in pairs:
                     if ok:
-                        self._complete(pending.future, OK,
-                                       dispatch_start_ns=dispatch_start_ns,
-                                       persist_share_us=persist_share_us,
-                                       retry_waves=pending.attempts)
+                        self._finish(pending.future, OK,
+                                     dispatch_start_ns=dispatch_start_ns,
+                                     persist_share_us=persist_share_us,
+                                     retry_waves=pending.attempts)
                         completed += 1
                     else:
                         pending.attempts += 1
@@ -367,8 +393,8 @@ class KVService:
         for pending in self._queues[s]:
             fut = pending.future
             if pending.attempts > self.max_op_rounds:
-                self._complete(fut, EXHAUSTED,
-                               retry_waves=pending.attempts)
+                self._finish(fut, EXHAUSTED,
+                             retry_waves=pending.attempts)
                 done += 1
                 continue
             compiled = struct.compile_op(fut.op, snap)
@@ -384,11 +410,11 @@ class KVService:
                          or 0)
                         for s2, other in enumerate(self.structs)
                         if s2 != s)
-                    self._complete(fut, OK, value,
-                                   retry_waves=pending.attempts)
+                    self._finish(fut, OK, value,
+                                 retry_waves=pending.attempts)
                 else:
-                    self._complete(fut, compiled.status, compiled.value,
-                                   retry_waves=pending.attempts)
+                    self._finish(fut, compiled.status, compiled.value,
+                                 retry_waves=pending.attempts)
                 done += 1
             elif isinstance(compiled, NeedsSplit):
                 splits.setdefault(compiled.leaf_base, []).append(pending)
@@ -408,8 +434,8 @@ class KVService:
                 later.extend(resizes)
             else:
                 for pending in resizes:
-                    self._complete(pending.future, FULL,
-                                   retry_waves=pending.attempts)
+                    self._finish(pending.future, FULL,
+                                 retry_waves=pending.attempts)
                     done += 1
         if splits:
             # grow first; this wave's compiled ops would mostly lose
@@ -427,8 +453,8 @@ class KVService:
                     later.extend(waiters)
                 else:
                     for pending in waiters:
-                        self._complete(pending.future, FULL,
-                                       retry_waves=pending.attempts)
+                        self._finish(pending.future, FULL,
+                                     retry_waves=pending.attempts)
                         done += 1
             self._requeue(s, ready + later)
             return [], done
@@ -447,11 +473,97 @@ class KVService:
             self._queues[s].extend(entries)
             self._queues[s].sort(key=lambda p: p.future.seq)
 
+    # -- epoch ack gate (DESIGN.md Sec. 14) ------------------------------------
+    def _finish(self, fut: KVFuture, status: str, value=None, *,
+                dispatch_start_ns: Optional[int] = None,
+                persist_share_us: float = 0.0,
+                retry_waves: int = 0) -> None:
+        """Completion gate for the epoch window.  The decision (status/
+        value) is final here, but while ANY durable shard has an open
+        epoch the ack is withheld GLOBALLY — released in decide order
+        once every shard has durably passed the deciding step.  A
+        global gate (not per-shard) because cross-shard reads (scans)
+        observe every shard's visible state: acking a scan before a
+        slower shard's epoch closes could expose a round a crash then
+        revokes.  Outside epoch mode the gate is always open and this
+        is exactly :meth:`_complete`."""
+        if any(getattr(b, "epoch_pending", 0) for b in self.backends):
+            self._held.append((self.stats.steps, fut, status, value, dict(
+                dispatch_start_ns=dispatch_start_ns,
+                persist_share_us=persist_share_us,
+                retry_waves=retry_waves)))
+            self.stats.acks_held += 1
+            if tracing_enabled():
+                instant("op.ack_held", op_id=fut.op_id, status=status,
+                        step=self.stats.steps)
+        else:
+            self._complete(fut, status, value,
+                           dispatch_start_ns=dispatch_start_ns,
+                           persist_share_us=persist_share_us,
+                           retry_waves=retry_waves)
+
+    def _settle_epochs(self) -> None:
+        """End-of-wave epoch bookkeeping: note which shards hold an open
+        epoch (and since when), then release held acks up to the global
+        durability frontier — the last step EVERY durable shard has
+        durably passed.  A shard that paid a fence this wave restarts
+        its open-since mark: whatever epoch is open now only holds
+        rounds from this wave."""
+        open_since = self._epoch_open_since
+        for s, b in enumerate(self.backends):
+            pending = getattr(b, "epoch_pending", 0)
+            stats = getattr(getattr(b, "committer", None), "stats", None)
+            closed = getattr(stats, "epochs_closed", 0)
+            fenced = closed > self._epochs_closed_seen.get(s, closed)
+            self._epochs_closed_seen[s] = closed
+            if not pending:
+                open_since.pop(s, None)
+            elif fenced:
+                open_since[s] = self.stats.steps
+            else:
+                open_since.setdefault(s, self.stats.steps)
+        if self._held:
+            frontier = (min(open_since.values()) - 1 if open_since
+                        else None)
+            self._release_held(frontier)
+
+    def _release_held(self, frontier: Optional[int]) -> None:
+        """Ack held completions whose deciding step the frontier has
+        passed (``None`` = everything), in decide order."""
+        if not self._held:
+            return
+        keep: List[tuple] = []
+        for item in self._held:
+            step, fut, status, value, kw = item
+            if frontier is None or step <= frontier:
+                self._complete(fut, status, value, decided_step=step, **kw)
+            else:
+                keep.append(item)
+        self._held = keep
+
+    def sync_epochs(self) -> int:
+        """Explicit durability barrier: close every shard's open epoch
+        (one fence each) and release every withheld ack.  Returns rounds
+        made durable across shards."""
+        synced = 0
+        for b in self.backends:
+            sync = getattr(b, "sync", None)
+            if sync is not None:
+                synced += sync()
+        if synced:
+            self.stats.epoch_syncs += 1
+        self._epoch_open_since.clear()
+        self._release_held(None)
+        return synced
+
     def _complete(self, fut: KVFuture, status: str, value=None, *,
                   dispatch_start_ns: Optional[int] = None,
                   persist_share_us: float = 0.0,
-                  retry_waves: int = 0) -> None:
+                  retry_waves: int = 0,
+                  decided_step: Optional[int] = None) -> None:
         fut.done = True
+        fut.done_step = (self.stats.steps if decided_step is None
+                         else decided_step)
         latency = max(1, self.stats.steps - fut.submit_step)
         fut.result = StructResult(fut.op, status, value=value,
                                   rounds=latency)
@@ -589,6 +701,12 @@ class KVService:
         the route table, then cleanup + release.  A crash after the
         first persist rolls forward; before it, back."""
         with span("service.migration_swing", mig=m.mig_id):
+            # the ROUTED record redirects reads to the destination, so
+            # every copied key must be durable there FIRST — close the
+            # destination's open epoch before the linearization point
+            sync = getattr(self.backends[m.dst], "sync", None)
+            if sync is not None:
+                sync()
             if self.mig_log is not None:
                 self.mig_log.mark_routed(m.mig_id)
             self.router.set_range(m.lo, m.hi, m.dst)
@@ -758,6 +876,8 @@ class KVService:
                             round_cap=self.round_cap,
                             max_op_rounds=self.max_op_rounds,
                             wal_prune_every=self.wal_prune_every,
+                            epoch_rounds=self.epoch_rounds,
+                            checkpoint_every=self.checkpoint_every,
                             migration_pool=(self.mig_pool.crash()
                                             if self.mig_pool is not None
                                             else None),

@@ -66,6 +66,10 @@ class ServiceStats:
     wal_pruned: int = 0          # spent per-shard WAL records GC'd on cadence
     migrations: int = 0          # key-range migrations decided
     keys_moved: int = 0          # keys copied to their new shard
+    # epoch durability (DESIGN.md Sec. 14): acks withheld behind an open
+    # epoch, and explicit sync_epochs() barriers that flushed something
+    acks_held: int = 0
+    epoch_syncs: int = 0
     # per-migration pause: how long the range was held, in service waves
     # (substrate-independent) and wall microseconds (this backend)
     mig_pause_waves: List[int] = dataclasses.field(default_factory=list)
@@ -233,6 +237,11 @@ class ServiceStats:
                 "persist_us_mean": round(self.persist_us.mean_us, 3),
                 "latency_us_mean": round(self.latency_us.mean_us, 3),
                 "retry_waves_max": int(self.retry_waves.max_us),
+            })
+        if self.acks_held or self.epoch_syncs:
+            row.update({
+                "acks_held": self.acks_held,
+                "epoch_syncs": self.epoch_syncs,
             })
         if self.migrations:
             row.update({

@@ -259,7 +259,7 @@ def test_default_scenarios_cover_families():
     scs = default_scenarios(seed=1, waves=30)
     assert {s.family for s in scs} == {
         "hot_key_storm", "crash_mid_scan", "straggler", "drifting_skew",
-        "crash_mid_migration", "sim_native"}
+        "crash_mid_migration", "epoch_boundary", "sim_native"}
     assert all(s.seed == 1 for s in scs)
 
 

@@ -1,0 +1,300 @@
+"""Epoch-based minimally-ordered durability (DESIGN.md Sec. 14).
+
+The tentpole invariants:
+
+- rounds inside an open epoch buffer WITHOUT persisting: the epoch-close
+  fence is the ONE persist an epoch of rounds shares, and a crash in an
+  open epoch loses at most ``epoch_rounds - 1`` committed-but-unsynced
+  rounds — always a whole-epoch prefix, never a torn round;
+- the dependency rule keeps ordering minimal: an incoming round touching
+  a word an earlier buffered round wrote pays a fence FIRST
+  (``dep_fences``), independent rounds pay nothing;
+- epoch checkpoints fold the WAL into one image so replay length — and
+  recovery time — is bounded by the checkpoint gap, not history length;
+- the service withholds client acks behind open epochs, so the
+  bounded-loss window is invisible to acked clients.
+"""
+import pytest
+
+from repro import Committer, MarkerCommitter, PMemPool, SimulatedCrash
+from repro.pmwcas import DurableBackend, MwCASOp
+from repro.service import KVService
+from repro.structures import INSERT, KVOp, OK
+
+
+# ---------------------------------------------------------------------------
+# committer: the epoch protocol itself
+# ---------------------------------------------------------------------------
+
+def test_epoch_buffers_rounds_under_one_fence(tmp_path):
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=4)
+    p0 = pool.persist_count
+    assert c.commit_round([("a", [("x", 0, 1)])], {"x": b"X1"}) == [True]
+    assert c.commit_round([("b", [("y", 0, 1)])], {"y": b"Y1"}) == [True]
+    assert c.commit_round([("c", [("z", 0, 1)])], {"z": b"Z1"}) == [True]
+    # three committed rounds, zero persists: the epoch is still open
+    assert pool.persist_count == p0
+    assert c.epoch_pending == 3
+    # commits are VISIBLE before they are durable (the bounded-loss
+    # window): reads resolve through the buffered slot records
+    assert (c.slot_version("x"), c.slot_version("y"),
+            c.slot_version("z")) == (1, 1, 1)
+    assert c.sync() == 3
+    assert pool.persist_count - p0 == 1        # the one epoch-close fence
+    assert c.epoch_pending == 0
+    s = c.stats
+    assert s.epochs_closed == 1 and s.fences == 1
+    assert s.round_commits == 3 and s.ops_committed == 3
+    # vs per-op: each 1-op round would have paid 3*1+2 = 5 persists
+    assert s.flushes_saved == 3 * (5 - 1) + 2
+    assert c.sync() == 0                        # idempotent when empty
+
+
+def test_nth_round_closes_the_epoch(tmp_path):
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=2)
+    p0 = pool.persist_count
+    c.commit_round([("a", [("x", 0, 1)])], {"x": b"A"})
+    assert pool.persist_count == p0 and c.epoch_pending == 1
+    c.commit_round([("b", [("y", 0, 1)])], {"y": b"B"})
+    # the epoch_rounds-th round triggers the scheduled close inline
+    assert pool.persist_count - p0 == 1 and c.epoch_pending == 0
+    assert c.stats.epochs_closed == 1
+
+
+def test_open_epoch_crash_loses_bounded_prefix_never_torn(tmp_path):
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=4)
+    c.commit_round([("a", [("x", 0, 1)])], {"x": b"X1"})
+    c.sync()                                    # x=1 is durable
+    c.commit_round([("b", [("x", 1, 2)])], {"x": b"X2"})
+    c.commit_round([("c", [("y", 0, 1)])], {"y": b"Y1"})
+    c2 = Committer(pool.crash(), epoch_rounds=4)
+    c2.recover()
+    # exactly the open epoch is gone (<= epoch_rounds-1 rounds), the
+    # synced prefix survives whole — nothing torn, nothing reordered
+    assert c2.slot_version("x") == 1 and c2.slot_version("y") == 0
+    assert c2.pool.read("data/x.v1.bin") == b"X1"
+
+
+def test_dependency_fence_orders_only_dependent_rounds(tmp_path):
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=8)
+    p0 = pool.persist_count
+    c.commit_round([("a", [("x", 0, 1)])], {"x": b"X1"})
+    c.commit_round([("b", [("y", 0, 1)])], {"y": b"Y1"})
+    assert pool.persist_count == p0             # independent: no fence
+    # round advancing x AGAIN depends on the buffered write of x: the
+    # minimal-ordering rule fences the earlier rounds first
+    c.commit_round([("c", [("x", 1, 2)])], {"x": b"X2"})
+    assert pool.persist_count - p0 == 1
+    assert c.stats.dep_fences == 1 and c.stats.epochs_closed == 1
+    assert c.epoch_pending == 1                 # round c buffers anew
+    # crash: the fenced prefix (x=1, y=1) is durable, round c is lost
+    c2 = Committer(pool.crash(), epoch_rounds=8)
+    c2.recover()
+    assert c2.slot_version("x") == 1 and c2.slot_version("y") == 1
+
+
+def test_per_op_commit_pays_the_epoch_barrier(tmp_path):
+    """Mixed mode: a per-op commit arriving with rounds buffered must
+    sync first — its durable-at-return contract cannot order before
+    rounds that committed earlier."""
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=4)
+    c.commit_round([("a", [("x", 0, 1)])], {"x": b"X1"})
+    assert c.epoch_pending == 1
+    assert c.commit("op1", [("y", 0, 1)], {"y": b"Y1"})
+    assert c.epoch_pending == 0                 # barrier paid
+    c2 = Committer(pool.crash(), epoch_rounds=4)
+    c2.recover()
+    assert c2.slot_version("x") == 1 and c2.slot_version("y") == 1
+
+
+def test_checkpoint_bounds_wal_and_recovers_from_image(tmp_path):
+    pool = PMemPool(tmp_path)
+    c = Committer(pool, epoch_rounds=2, checkpoint_every=2)
+    for i in range(8):                     # independent words: 4 clean
+        c.commit_round([(f"r{i}", [(f"w{i}", 0, 1)])],  # epochs -> 2 ckpts
+                       {f"w{i}": f"V{i}".encode()})
+    assert c.stats.checkpoints == 2 and c.stats.dep_fences == 0
+    # covered records are durably gone; the image is the durable truth
+    assert pool.listdir("wal") == []
+    assert len(pool.listdir("ckpt")) == 1
+    c2 = Committer(pool.crash(), epoch_rounds=2, checkpoint_every=2)
+    rec = c2.recover()
+    assert all(rec[f"w{i}"] == 1 for i in range(8))
+    assert pool.read("data/w3.v1.bin") == b"V3"
+    # post-recovery commits must not reuse sequence numbers the
+    # checkpoint already covers (they would be dropped next recovery)
+    c2.commit_round([("r9", [("w0", 1, 2)])], {"w0": b"V9"})
+    c2.sync()
+    c3 = Committer(c2.pool.crash(), epoch_rounds=2, checkpoint_every=2)
+    assert c3.recover()["w0"] == 2
+
+
+def test_epoch_replay_equals_per_round_replay(tmp_path):
+    """Batched per-epoch replay recovers the exact state the classic
+    per-round path recovers — the 10x replay win changes cost, not
+    outcome."""
+    script = [("a", "x", 0, 1, b"X1"), ("b", "y", 0, 1, b"Y1"),
+              ("c", "x", 1, 2, b"X2"), ("d", "z", 0, 1, b"Z1"),
+              ("e", "y", 1, 2, b"Y2")]
+    recovered = {}
+    for label, rounds in (("epoch", 4), ("classic", 1)):
+        pool = PMemPool(tmp_path / label)
+        c = Committer(pool, epoch_rounds=rounds)
+        for rid, name, exp, des, payload in script:
+            assert c.commit_round([(rid, [(name, exp, des)])],
+                                  {name: payload}) == [True]
+        c.sync()
+        c2 = Committer(pool.crash(), epoch_rounds=rounds)
+        recovered[label] = c2.recover()
+        assert c2.pool.read("data/x.v2.bin") == b"X2"
+        assert c2.pool.read("data/y.v2.bin") == b"Y2"
+    assert recovered["epoch"] == recovered["classic"]
+
+
+def test_epoch_crash_sweep_at_every_persist(tmp_path):
+    """Crash at EVERY persist through closes, a checkpoint and a final
+    sync: every recovered state is a whole-epoch prefix of the script
+    (checkpoint persists change the encoding, never the state), and a
+    second crash/recover is a fixpoint."""
+    states = {0: (0, 0), 1: (1, 1), 2: (2, 2), 3: (3, 2)}
+
+    def drive(c):
+        # epoch 1: x->1, y->1; epoch 2: x->2, y->2 (+ checkpoint);
+        # epoch 3 (explicit sync): x->3
+        c.commit_round([("a", [("x", 0, 1)])], {"x": b"X1"})
+        c.commit_round([("b", [("y", 0, 1)])], {"y": b"Y1"})
+        yield 1
+        c.commit_round([("c", [("x", 1, 2)])], {"x": b"X2"})
+        c.commit_round([("d", [("y", 1, 2)])], {"y": b"Y2"})
+        yield 2
+        c.commit_round([("e", [("x", 2, 3)])], {"x": b"X3"})
+        c.sync()
+        yield 3
+
+    crash_at, seen = 0, set()
+    while True:
+        pool = PMemPool(tmp_path / f"c{crash_at}",
+                        crash_after_persists=crash_at)
+        c = Committer(pool, epoch_rounds=2, checkpoint_every=2)
+        reached, crashed = 0, False
+        try:
+            for reached in drive(c):
+                pass
+        except SimulatedCrash:
+            crashed = True
+        c2 = Committer(pool.crash(), epoch_rounds=2, checkpoint_every=2)
+        c2.recover()
+        got = (c2.slot_version("x"), c2.slot_version("y"))
+        allowed = [states[k] for k in range(reached, 4)]
+        assert got in allowed, (crash_at, got, allowed)
+        seen.add(got)
+        # current versions' payloads must exist whole
+        for name, ver in zip("xy", got):
+            if ver:
+                assert c2.pool.read(f"data/{name}.v{ver}.bin") == \
+                    f"{name.upper()}{ver}".encode()
+        c3 = Committer(c2.pool.crash(), epoch_rounds=2,
+                       checkpoint_every=2)
+        c3.recover()
+        assert (c3.slot_version("x"), c3.slot_version("y")) == got
+        if not crashed:
+            assert got == states[3]
+            # the sweep exercised both loss outcomes
+            assert states[0] in seen and states[3] in seen
+            return
+        crash_at += 1
+        assert crash_at < 60, "sweep did not terminate"
+
+
+def test_marker_committer_refuses_epochs(tmp_path):
+    with pytest.raises(ValueError, match="epoch"):
+        MarkerCommitter(PMemPool(tmp_path), epoch_rounds=2)
+    with pytest.raises(ValueError, match="epoch"):
+        MarkerCommitter(PMemPool(tmp_path), checkpoint_every=1)
+    m = MarkerCommitter(PMemPool(tmp_path))
+    assert m.epoch_pending == 0 and m.sync() == 0   # uniform surface
+
+
+# ---------------------------------------------------------------------------
+# backend surface
+# ---------------------------------------------------------------------------
+
+def test_backend_epoch_surface_and_crash_carryover(tmp_path):
+    b = DurableBackend(pool=PMemPool(tmp_path), epoch_rounds=3,
+                       checkpoint_every=2)
+    (r,) = b.execute([MwCASOp([("0", 0, 1)])])
+    assert r.success and b.epoch_pending == 1
+    assert b.sync() == 1 and b.epoch_pending == 0
+    rec = b.crash()
+    # the epoch configuration survives crash/recover
+    assert rec.epoch_rounds == 3 and rec.checkpoint_every == 2
+    assert rec.read("0") == 1
+
+
+def test_backend_epochs_require_group_commit(tmp_path):
+    with pytest.raises(ValueError, match="group"):
+        DurableBackend(pool=PMemPool(tmp_path), epoch_rounds=2,
+                       group_commit=False)
+    with pytest.raises(ValueError, match="epoch"):
+        DurableBackend(pool=PMemPool(tmp_path), committer="marker",
+                       epoch_rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# service: acks held behind open epochs
+# ---------------------------------------------------------------------------
+
+def test_service_withholds_acks_until_epoch_close(tmp_path):
+    svc = KVService(2, structure="hashmap", backend="durable",
+                    n_buckets=32, durable_root=tmp_path,
+                    epoch_rounds=4, checkpoint_every=2)
+    futs = [svc.submit(KVOp(INSERT, k, k * 10)) for k in range(1, 17)]
+    svc.drain()
+    assert all(f.done and f.status == OK for f in futs)
+    assert svc.stats.acks_held > 0, "the ack gate never engaged"
+    assert svc.stats.epoch_syncs >= 1, "drain never paid the barrier"
+    d = svc.durability_stats()
+    assert d.epochs_closed > 0 and d.flushes_saved > 0
+
+
+def test_service_acked_ops_survive_crash_unacked_never_lie(tmp_path):
+    svc = KVService(2, structure="hashmap", backend="durable",
+                    n_buckets=32, durable_root=tmp_path,
+                    epoch_rounds=4, checkpoint_every=2)
+    acked = [svc.submit(KVOp(INSERT, k, k * 10)) for k in range(1, 13)]
+    svc.drain()
+    assert all(f.done for f in acked)
+    # a tail the service has NOT drained: decided-but-held acks may ride
+    # an open epoch when the crash lands
+    tail = [svc.submit(KVOp(INSERT, 100 + k, k)) for k in range(1, 7)]
+    for _ in range(3):
+        svc.step()
+    rec = svc.crash()
+    items = {}
+    for struct in rec.structs:
+        items.update(struct.items())
+    # every ACKED op survived the crash
+    for f in acked:
+        assert items.get(f.op.key) == f.op.value, f.op.key
+    for f in tail:
+        if f.done and f.status == OK:
+            assert items.get(f.op.key) == f.op.value, f.op.key
+        else:
+            # held acks die with the crash: the client got NO verdict,
+            # so a lost round never contradicts an answer
+            assert not f.done
+
+
+def test_service_epoch_rounds_one_is_behavior_neutral(tmp_path):
+    svc = KVService(2, structure="hashmap", backend="durable",
+                    n_buckets=32, durable_root=tmp_path)
+    futs = [svc.submit(KVOp(INSERT, k, k)) for k in range(1, 9)]
+    svc.drain()
+    assert all(f.done and f.status == OK for f in futs)
+    assert svc.stats.acks_held == 0 and svc.stats.epoch_syncs == 0
+    assert "acks_held" not in svc.stats.as_row()
